@@ -1,0 +1,83 @@
+"""Fig. 9 reproduction: throughput over a (#operations x diversity) grid of
+Transformer-style MM workloads, FILCO vs CHARM-1/2/3 vs RSN.
+
+Per paper §4.2, workloads vary sequence length, head count, head dim and MLP
+ratio; we bucket them by total ops and by the shape-diversity metric and
+report modeled throughput per design point (best-sub-accelerator latency per
+layer, the same routing the paper's baselines get).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.common.platform import VCK190
+from repro.configs.paper_workloads import MMWorkload, bert
+from repro.core.analytical import (best_accel_latency, charm_monolithic,
+                                   charm_three, charm_two, filco_vck190,
+                                   rsn_overlay)
+
+SYSTEMS = {
+    "CHARM-1": charm_monolithic(),
+    "CHARM-2": charm_two(),
+    "CHARM-3": charm_three(),
+    "RSN": rsn_overlay(),
+    "FILCO": [filco_vck190()],
+}
+
+
+def synth_workloads():
+    """Grid over (seq, d_model, heads, mlp_ratio) per paper §4.2."""
+    out = []
+    for seq in (32, 64, 128, 256, 512):
+        for d, heads in ((256, 4), (512, 8), (768, 12)):
+            for ratio in (2, 4):
+                wl = bert(seq, d=d, heads=heads, d_ff=ratio * d, layers=2,
+                          name=f"tf_s{seq}_d{d}_r{ratio}")
+                out.append(wl)
+    return out
+
+
+def throughput(accels, wl: MMWorkload) -> float:
+    t = sum(best_accel_latency(accels, VCK190, l.m, l.k, l.n).total_s
+            for l in wl.layers)
+    return wl.total_flops / t
+
+
+def run(check: bool = True):
+    wls = synth_workloads()
+    rows = []
+    for wl in wls:
+        entry = {"workload": wl.name, "gflop": wl.total_flops / 1e9,
+                 "diversity": wl.diversity()}
+        for name, acc in SYSTEMS.items():
+            entry[name] = throughput(acc, wl) / 1e9
+        rows.append(entry)
+    # paper claims: 1.3x on large/low-diversity; >=5x on small/diverse
+    big = max(rows, key=lambda r: r["gflop"])
+    small = min(rows, key=lambda r: r["gflop"])
+    gain_big = big["FILCO"] / max(big["CHARM-1"], big["RSN"])
+    gain_small = small["FILCO"] / max(small["CHARM-1"], small["RSN"])
+    summary = {"gain_large_low_div": gain_big, "gain_small_diverse": gain_small}
+    if check:
+        assert gain_big >= 1.0
+        assert gain_small >= 2.0, summary
+        for r in rows:
+            assert r["FILCO"] >= 0.99 * max(r["CHARM-1"], r["CHARM-2"],
+                                            r["CHARM-3"], r["RSN"]), r
+    return {"rows": rows, "summary": summary}
+
+
+def main():
+    res = run()
+    for r in res["rows"]:
+        print(f"fig9,{r['workload']},{r['gflop']:.2f}GF,"
+              f"div={r['diversity']:.2f},"
+              + ",".join(f"{s}={r[s]:.1f}" for s in SYSTEMS))
+    s = res["summary"]
+    print(f"fig9_summary,gain_large={s['gain_large_low_div']:.2f}x,"
+          f"gain_small={s['gain_small_diverse']:.2f}x,")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Roofline table generator: reads the dry-run JSON grid and renders the
+EXPERIMENTS.md §Roofline table (per arch x cell x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS/HLO ratio, roofline fraction)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_DIR = "results/dryrun"
+
+
+def load(results_dir: str = DEFAULT_DIR, variant: str = "baseline"
+         ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant") != variant:
+            continue
+        rows.append(r)
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def table(rows: List[Dict], mesh: Optional[str] = "single") -> str:
+    out = ["| arch | cell | chips | compute | memory | collective | "
+           "dominant | useful | resident GiB | peak GiB (CPU-UB) | roofline |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        if mesh and r["mesh"] != mesh:
+            continue
+        ro = r["roofline"]
+        args = r.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['chips']} "
+            f"| {_fmt_s(ro['compute_s'])} | {_fmt_s(ro['memory_s'])} "
+            f"| {_fmt_s(ro['collective_s'])} | {ro['dominant']} "
+            f"| {ro['useful_ratio']:.2f} "
+            f"| {args/(1<<30):.2f} "
+            f"| {r['peak_bytes_per_device']/(1<<30):.2f} "
+            f"| {ro['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> Dict:
+    singles = [r for r in rows if r["mesh"] == "single"]
+    multis = [r for r in rows if r["mesh"] == "multi"]
+    doms = {}
+    for r in singles:
+        doms[r["roofline"]["dominant"]] = \
+            doms.get(r["roofline"]["dominant"], 0) + 1
+    return {
+        "cells_single": len(singles), "cells_multi": len(multis),
+        "dominant_histogram": doms,
+        "worst_roofline": min(
+            (r["roofline"]["roofline_fraction"], r["arch"], r["cell"])
+            for r in singles) if singles else None,
+        "most_collective_bound": max(
+            ((r["roofline"]["collective_s"] /
+              max(r["roofline"]["compute_s"] + r["roofline"]["memory_s"],
+                  1e-12)), r["arch"], r["cell"])
+            for r in singles) if singles else None,
+    }
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("roofline,,0,no dry-run results yet (run scripts/run_dryrun_grid.sh)")
+        return {}
+    print(table(rows, mesh="single"))
+    print()
+    s = summary(rows)
+    print(f"roofline_summary,cells={s['cells_single']}+{s['cells_multi']},"
+          f"dominants={s['dominant_histogram']},"
+          f"worst={s['worst_roofline']}")
+    return {"rows": rows, "summary": s}
+
+
+if __name__ == "__main__":
+    main()

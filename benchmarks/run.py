@@ -1,0 +1,40 @@
+# One function per paper table/figure. Prints ``name,metric,derived`` CSV.
+"""Benchmark harness (deliverable (d)): one module per paper artifact.
+
+  fig8  — single-kernel efficiency, flexible vs static (paper Fig. 8)
+  fig9  — diverse-MM throughput grid vs CHARM/RSN (paper Fig. 9)
+  fig10 — BERT-32..512 end-to-end + feature ablation (paper Fig. 10)
+  fig11 — DSE search time, exact vs GA (paper Fig. 11)
+  roofline — per (arch x cell x mesh) roofline terms from the dry-run grid
+
+Run: PYTHONPATH=src python -m benchmarks.run [fig8 fig9 ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig8_kernel_efficiency, fig9_diverse_mm,
+                            fig10_bert_e2e, fig11_dse, roofline_table)
+
+    which = set(sys.argv[1:]) or {"fig8", "fig9", "fig10", "fig11",
+                                  "roofline"}
+    t00 = time.monotonic()
+    for name, mod in [("fig8", fig8_kernel_efficiency),
+                      ("fig9", fig9_diverse_mm),
+                      ("fig10", fig10_bert_e2e),
+                      ("fig11", fig11_dse),
+                      ("roofline", roofline_table)]:
+        if name not in which:
+            continue
+        t0 = time.monotonic()
+        print(f"# === {name} ===", flush=True)
+        mod.main()
+        print(f"# {name} took {time.monotonic() - t0:.1f}s", flush=True)
+    print(f"# total {time.monotonic() - t00:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

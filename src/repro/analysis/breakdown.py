@@ -1,0 +1,168 @@
+"""Perf-iteration profiling: attribute trip-count-weighted HLO cost to
+computations and ops — the 'profile' of the dry-run methodology (no wall
+clock on CPU; the lowered IR is the instrument).
+
+  PYTHONPATH=src python -m repro.analysis.breakdown --arch X --cell Y \
+      [--multi-pod] [--ssm-impl fused] [--top 12]
+
+Prints the top computations by (bytes x multiplier) and (flops x
+multiplier), plus per-op class totals — this is what each EXPERIMENTS.md
+§Perf hypothesis is formed from.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.analysis.hlo import (COLLECTIVES, HloAnalyzer, _CALL_ATTR,
+                                _OP_LINE, _OPERAND, _TRIP, _WHILE_ATTR,
+                                _shape_numel_bytes)
+
+
+def multipliers(a: HloAnalyzer) -> Dict[str, int]:
+    """Execution multiplier per computation (product of while trip counts
+    along the call chain from entry)."""
+    mult: Dict[str, int] = {a.entry: 1}
+    stack = [a.entry]
+    while stack:
+        comp = stack.pop()
+        for line in a.computations.get(comp, []):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            if m.group(3) == "while":
+                mw = _WHILE_ATTR.search(line)
+                mt = _TRIP.search(line)
+                trip = int(mt.group(1)) if mt else 1
+                if mw:
+                    for child in (mw.group(1), mw.group(2)):
+                        if child not in mult:
+                            mult[child] = 0
+                            stack.append(child)
+                        mult[child] += mult[comp] * trip
+            elif m.group(3) in ("call", "conditional"):
+                for child in _CALL_ATTR.findall(line):
+                    if child in a.computations and child not in mult:
+                        mult[child] = mult[comp]
+                        stack.append(child)
+    return mult
+
+
+def own_cost(a: HloAnalyzer, name: str) -> Tuple[float, float, Dict[str, float]]:
+    """(bytes, flops, per-op bytes) of one computation, children excluded,
+    same op accounting rules as HloAnalyzer.cost()."""
+    symbols = a._symbols(name)
+    tot_b, tot_f = 0.0, 0.0
+    by_op: Dict[str, float] = {}
+    for line in a.computations.get(name, []):
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        nm, shp, op = m.groups()
+        rb = _shape_numel_bytes(shp)
+        add_b = 0.0
+        if op == "fusion":
+            mc = _CALL_ATTR.search(line)
+            body = mc.group(1) if mc else None
+            if body:
+                inner = a.cost(body, inside_fusion=True)
+                tot_f += inner.flops
+            arg_str = line.split("fusion(", 1)[1] if "fusion(" in line \
+                else line.split("(", 1)[1]
+            opnds = _OPERAND.findall(arg_str.split("), ")[0] + ")")
+            w = a._dus_window(body) if body else None
+            if w is not None:
+                from repro.analysis.hlo import _SHAPE_ATOM
+                elems = [_shape_numel_bytes(f"{dt}[{dims}]")
+                         for dt, dims in _SHAPE_ATOM.findall(shp)]
+                max_elem = max(elems) if elems else rb
+                add_b = 2.0 * w + sum(
+                    _shape_numel_bytes(symbols.get(o, "")) for o in opnds
+                    if _shape_numel_bytes(symbols.get(o, "")) < max_elem)
+            else:
+                sl = a._fusion_sliced_params(body) if body else {}
+                add_b = rb
+                for i, o in enumerate(opnds):
+                    full = _shape_numel_bytes(symbols.get(o, ""))
+                    add_b += min(full, sl.get(i, full))
+        elif op in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "copy", "while"):
+            pass
+        elif op in ("slice", "dynamic-slice", "gather"):
+            add_b = 2.0 * rb
+        elif op == "dynamic-update-slice":
+            ops_ = _OPERAND.findall(line.split("(", 1)[1])
+            upd = _shape_numel_bytes(symbols.get(ops_[1], "")) \
+                if len(ops_) > 1 else rb
+            add_b = 2.0 * upd
+        else:
+            opnds = _OPERAND.findall(
+                line.split("(", 1)[1]) if "(" in line else []
+            add_b = rb + sum(_shape_numel_bytes(symbols.get(o, ""))
+                             for o in opnds)
+            if op == "dot":
+                tot_f += a._dot_flops(line, symbols, shp)
+        tot_b += add_b
+        by_op[op] = by_op.get(op, 0.0) + add_b
+    return tot_b, tot_f, by_op
+
+
+def report(text: str, top: int = 12) -> str:
+    a = HloAnalyzer(text)
+    mult = multipliers(a)
+    rows = []
+    op_totals: Dict[str, float] = {}
+    for name, m in mult.items():
+        b, f, by_op = own_cost(a, name)
+        rows.append((b * m, f * m, m, name))
+        for op, v in by_op.items():
+            op_totals[op] = op_totals.get(op, 0.0) + v * m
+    rows.sort(reverse=True)
+    out = [f"{'bytes(TB)':>10s} {'flops(T)':>9s} {'xmult':>6s}  computation"]
+    for b, f, m, name in rows[:top]:
+        out.append(f"{b/1e12:10.3f} {f/1e12:9.3f} {m:6d}  {name[:70]}")
+    out.append("")
+    out.append("per-op bytes (x multiplier):")
+    for op, v in sorted(op_totals.items(), key=lambda kv: -kv[1])[:top]:
+        out.append(f"  {op:22s} {v/1e12:10.3f} TB")
+    c = a.cost()
+    out.append("")
+    out.append(f"totals/device: flops={c.flops:.3e} bytes={c.bytes/1e12:.2f}TB "
+               f"collective={c.collective_bytes/1e9:.1f}GB "
+               f"{dict((k, round(v/1e9,1)) for k,v in c.collective_by_kind.items())}")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+
+    from repro.configs import ARCH_IDS, CELLS_BY_NAME, get_config
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--cell", choices=sorted(CELLS_BY_NAME), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-impl", default="blockwise")
+    ap.add_argument("--moe-dispatch", default="einsum")
+    ap.add_argument("--ssm-impl", default="chunked")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, kwargs, out_sh = build_cell(cfg, CELLS_BY_NAME[args.cell], mesh,
+                                    attn_impl=args.attn_impl,
+                                    moe_dispatch=args.moe_dispatch,
+                                    ssm_impl=args.ssm_impl)
+    with mesh:
+        comp = jax.jit(fn, out_shardings=out_sh).lower(**kwargs).compile()
+    print(report(comp.as_text(), top=args.top))
+
+
+if __name__ == "__main__":
+    main()

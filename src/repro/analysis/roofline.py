@@ -1,0 +1,210 @@
+"""Roofline-term extraction from compiled XLA artifacts (EXPERIMENTS.md
+§Roofline).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw x links)
+
+``compiled.cost_analysis()`` gives per-device FLOPs / bytes accessed.
+Collective bytes are not in cost_analysis: ``collective_bytes_from_hlo``
+parses the (optimized) HLO text, summing the on-wire payload of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+with a ring-model correction by replica-group size g:
+
+  all-gather       result_bytes x (g-1)/g
+  all-reduce       2 x bytes x (g-1)/g        (reduce-scatter + all-gather)
+  reduce-scatter   operand_bytes x (g-1)/g
+  all-to-all       bytes x (g-1)/g
+  collective-permute  bytes
+
+Hardware constants come from repro.common.platform.TPU_V5E.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.common.platform import TPU_V5E, PlatformProfile
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# shapes like  bf16[16,128,8192]{2,1,0}  or tuples ( ... )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum on-wire collective payload (per device) from optimized HLO."""
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if g <= 1 and kind != "collective-permute":
+            continue
+        frac = (g - 1) / g if g > 1 else 1.0
+        if kind == "all-gather":
+            wire = size * frac                 # result is the gathered buffer
+        elif kind == "all-reduce":
+            wire = 2.0 * size * frac
+        elif kind == "reduce-scatter":
+            wire = size * g * frac             # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:                                   # collective-permute
+            wire = size
+        bytes_by[kind] = bytes_by.get(kind, 0.0) + wire
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+def scan_trip_multiplier(hlo_text: str) -> List[Tuple[int, str]]:
+    """Best-effort: find while-loop trip counts so collectives inside scans
+    can be scaled (XLA unrolls nothing; the while body appears once).
+    Returns [(trip_count, body_name)] for known-trip-count loops."""
+    out = []
+    for m in re.finditer(
+            r'while\(.*?\), condition=.*?, body=([%\w.\-]+)'
+            r'.*?trip_count=(\d+)', hlo_text):
+        out.append((int(m.group(2)), m.group(1)))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    # per-device quantities
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    # derived terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # model-level accounting
+    model_flops: float                 # 6*N*D (or 6*N_active*D)
+    hlo_flops_total: float
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops_total if self.hlo_flops_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the program runs at
+        its bound: (useful FLOPs / chips / peak) / bound_s."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal_s = self.model_flops / (self.chips * TPU_V5E.peak_flops)
+        return ideal_s / self.bound_s
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.hlo_flops_total,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_gib": self.peak_memory_bytes / (1 << 30),
+        }
+
+
+def derive_terms(*, arch: str, cell: str, mesh_name: str, chips: int,
+                 cost: Dict[str, float], collective: CollectiveStats,
+                 model_flops: float, peak_memory_bytes: float = 0.0,
+                 platform: PlatformProfile = TPU_V5E) -> RooflineTerms:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = collective.total_bytes
+    return RooflineTerms(
+        arch=arch, cell=cell, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        compute_s=flops_dev / platform.peak_flops,
+        memory_s=bytes_dev / platform.hbm_bw,
+        collective_s=coll_dev / (platform.ici_bw * platform.ici_links),
+        model_flops=model_flops,
+        hlo_flops_total=flops_dev * chips,
+        peak_memory_bytes=peak_memory_bytes,
+    )
+
+
+def model_flops_for(cfg, cell) -> float:
+    """MODEL_FLOPS: 6*N*D for training; 2*N*D for inference (fwd only),
+    with N = active params (MoE) and D = processed tokens."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

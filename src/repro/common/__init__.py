@@ -1,0 +1,9 @@
+from repro.common.platform import PROFILES, TPU_V5E, VCK190, PlatformProfile, get_profile
+
+__all__ = [
+    "PROFILES",
+    "TPU_V5E",
+    "VCK190",
+    "PlatformProfile",
+    "get_profile",
+]

@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` return the full production
+config and the CPU smoke-test config for each assigned architecture.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (
+    ALL_CELLS,
+    CELLS_BY_NAME,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeCell,
+    cells_for,
+)
+
+# arch id -> module name
+_MODULES: Dict[str, str] = {
+    "hymba-1.5b": "hymba_1_5b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "arctic-480b": "arctic_480b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-34b": "granite_34b",
+    "minitron-4b": "minitron_4b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def _load(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _load(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _load(arch).REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ALL_CELLS", "CELLS_BY_NAME", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "ARCH_IDS", "ModelConfig", "MoEConfig", "MLAConfig",
+    "SSMConfig", "ShapeCell", "cells_for", "get_config", "get_reduced",
+    "all_configs",
+]

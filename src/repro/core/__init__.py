@@ -1,0 +1,33 @@
+"""FILCO core: the paper's contribution as composable JAX/Python modules.
+
+  instructions — the Table-1 ISA with binary encode/decode
+  arena        — FlexArena: 1-D buffers + runtime 2-D views (FMV + FMF)
+  analytical   — latency model over accelerator design points (FILCO,
+                 CHARM-1/2/3, RSN) on VCK190 and TPU v5e profiles
+  modes        — Stage-1 Runtime Parameter Optimizer (brute force)
+  schedule     — scheduling problem + validator (Eq. 1-6 semantics)
+  milp         — explicit MILP formulation + exact branch-and-bound solver
+  ga           — the paper's GA heuristic (Encode/Candidate chromosome)
+  dse          — two-stage DSE driver -> ExecutionPlan
+  codegen      — ExecutionPlan -> per-unit instruction streams
+  simulator    — functional data-plane simulator (numerics ground truth)
+  composer     — mesh composition into unified / independent accelerators
+"""
+from repro.core import (
+    analytical,
+    arena,
+    codegen,
+    composer,
+    dse,
+    ga,
+    instructions,
+    milp,
+    modes,
+    schedule,
+    simulator,
+)
+
+__all__ = [
+    "analytical", "arena", "codegen", "composer", "dse", "ga",
+    "instructions", "milp", "modes", "schedule", "simulator",
+]

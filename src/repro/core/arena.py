@@ -1,0 +1,171 @@
+"""FlexArena — FILCO's Flexible Memory Unit as a software-managed buffer pool
+(paper §2.3 "Flexible On-chip Memory View" + §2.4 "Flexible On-chip Memory
+Functionality").
+
+An FMU is a 1-D-addressed buffer; an instruction reinterprets any region of
+it as a 2-D operand *view* of arbitrary (rows, cols) and arbitrary *role*
+(weight / activation / result).  Storage efficiency is therefore
+size-limited, never shape-limited: a 256x256 and a 128x512 operand occupy
+identical space (Fig. 4b), and a layer with one huge dimension can borrow
+capacity from the other operands (Fig. 5).
+
+Two layers of the framework use this:
+  * host-side: the serving engine's KV/workspace allocator and the DSE's
+    buffer-requirement model (`fits()` / `padding_overhead()`);
+  * device-side: functional jnp ops (`store_view` / `load_view`) that
+    pack / unpack 2-D operands into flat per-device arenas — the pattern the
+    ``filco_mm`` kernel consumes (padded buffer + runtime dims).
+
+Views can be aligned to the TPU (8, 128) tile so DMA'd windows stay
+layout-friendly (the analogue of the paper's cyclic/block bank partitioning,
+DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ROLE_WEIGHT = "weight"
+ROLE_ACT = "activation"
+ROLE_RESULT = "result"
+ROLES = (ROLE_WEIGHT, ROLE_ACT, ROLE_RESULT)
+
+
+@dataclasses.dataclass(frozen=True)
+class View:
+    """A runtime 2-D window into a flat arena."""
+
+    offset: int          # element offset into the arena
+    rows: int
+    cols: int
+    role: str
+    view_id: int
+
+    @property
+    def size(self) -> int:
+        return self.rows * self.cols
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class FlexArena:
+    """First-fit 1-D allocator with runtime-shaped views.
+
+    capacity: elements.  align: element alignment for view starts (set to
+    8*128 to keep views tile-aligned on TPU).
+    """
+
+    def __init__(self, capacity: int, *, align: int = 1):
+        self.capacity = int(capacity)
+        self.align = int(align)
+        self._views: Dict[int, View] = {}
+        self._next_id = 0
+
+    # -- bookkeeping -----------------------------------------------------
+    def _gaps(self) -> List[Tuple[int, int]]:
+        """Free (start, length) gaps, sorted by start."""
+        used = sorted((v.offset, v.offset + v.size) for v in self._views.values())
+        gaps, cur = [], 0
+        for s, e in used:
+            if s > cur:
+                gaps.append((cur, s - cur))
+            cur = max(cur, e)
+        if cur < self.capacity:
+            gaps.append((cur, self.capacity - cur))
+        return gaps
+
+    @property
+    def used(self) -> int:
+        return sum(v.size for v in self._views.values())
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.used
+
+    def utilization(self) -> float:
+        return self.used / self.capacity if self.capacity else 0.0
+
+    def views(self) -> List[View]:
+        return sorted(self._views.values(), key=lambda v: v.offset)
+
+    # -- allocation ------------------------------------------------------
+    def _align_up(self, x: int) -> int:
+        a = self.align
+        return -(-x // a) * a
+
+    def alloc(self, rows: int, cols: int, role: str = ROLE_ACT) -> View:
+        """Allocate a (rows, cols) view; shape is *metadata*, storage is
+        rows*cols elements — no padding (the FMV property)."""
+        assert role in ROLES, role
+        need = rows * cols
+        for start, length in self._gaps():
+            astart = self._align_up(start)
+            if astart + need <= start + length:
+                v = View(astart, rows, cols, role, self._next_id)
+                self._views[self._next_id] = v
+                self._next_id += 1
+                return v
+        raise AllocationError(
+            f"arena full: need {need}, free {self.free} (fragmented)")
+
+    def free_view(self, view: View) -> None:
+        self._views.pop(view.view_id, None)
+
+    def reshape_view(self, view: View, rows: int, cols: int,
+                     role: Optional[str] = None) -> View:
+        """Reinterpret an existing allocation under a new 2-D shape/role —
+        the runtime 'different buffer view based on instr' (Fig. 4a).  The
+        new shape must not exceed the original allocation."""
+        if rows * cols > view.size:
+            raise AllocationError(
+                f"view reshape {rows}x{cols} exceeds allocation {view.size}")
+        nv = View(view.offset, rows, cols, role or view.role, view.view_id)
+        self._views[view.view_id] = nv
+        return nv
+
+    def fits(self, shapes: List[Tuple[int, int]]) -> bool:
+        """Would these operands fit together (FMF check, Fig. 5b)?  Order-
+        insensitive because storage is 1-D: total elements vs capacity."""
+        return sum(r * c for r, c in shapes) <= self.free
+
+    # -- static-baseline accounting ---------------------------------------
+    @staticmethod
+    def static_padding_overhead(shape: Tuple[int, int],
+                                buffer_shape: Tuple[int, int]) -> float:
+        """Fraction of a *static* (CHARM/RSN-style) buffer wasted when
+        storing `shape` padded into `buffer_shape` (tiled if larger)."""
+        r, c = shape
+        br, bc = buffer_shape
+        tiles = (-(-r // br)) * (-(-c // bc))
+        stored = tiles * br * bc
+        return 1.0 - (r * c) / stored
+
+
+# ---------------------------------------------------------------------------
+# device-side functional ops
+# ---------------------------------------------------------------------------
+
+def store_view(arena_buf: jnp.ndarray, view: View, matrix: jnp.ndarray):
+    """Write a (rows, cols) matrix into the flat arena at the view window."""
+    flat = matrix.reshape(-1).astype(arena_buf.dtype)
+    return jax.lax.dynamic_update_slice(arena_buf, flat, (view.offset,))
+
+
+def load_view(arena_buf: jnp.ndarray, view: View) -> jnp.ndarray:
+    """Read the view window back as a (rows, cols) matrix."""
+    flat = jax.lax.dynamic_slice(arena_buf, (view.offset,), (view.size,))
+    return flat.reshape(view.rows, view.cols)
+
+
+def load_padded(arena_buf: jnp.ndarray, view: View,
+                padded_shape: Tuple[int, int]) -> jnp.ndarray:
+    """Read a view into a zero-padded (max-shape) buffer — the handoff format
+    of the ``filco_mm`` kernel (padded operands + runtime valid dims)."""
+    m = load_view(arena_buf, view)
+    pr, pc = padded_shape
+    return jnp.pad(m, ((0, pr - view.rows), (0, pc - view.cols)))

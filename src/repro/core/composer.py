@@ -1,0 +1,109 @@
+"""Mesh composer — FILCO's "composed into a unified or multiple independent
+accelerators" (paper §1, §2.1) at pod scale.
+
+On the Versal board, CUs behind a fully-connected stream topology are grouped
+per layer by the scheduler.  On a TPU pod, the allocatable unit is a slice of
+the device mesh: the composer partitions the mesh's model axis (and/or data
+axis) into disjoint sub-meshes, one per concurrently-scheduled layer group or
+per tenant model, and reunifies them when a large uniform workload wants the
+monolithic accelerator (the CHARM-1 operating point is *one* composition of
+the same fabric).
+
+Pure device-array math + jax.sharding.Mesh construction; exercised by the
+multi-tenant serving example and tested under a host-device-count subprocess.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.dse import ExecutionPlan, PlannedLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class SubAccelerator:
+    """A composed accelerator: a contiguous slice of mesh CUs."""
+
+    name: str
+    cu_ids: Tuple[int, ...]          # columns of the model axis
+    mesh: Optional[Mesh]             # None when constructed without devices
+
+
+def split_axis(devices: np.ndarray, axis: int,
+               sizes: Sequence[int]) -> List[np.ndarray]:
+    """Split a device array along `axis` into blocks of the given sizes."""
+    assert sum(sizes) == devices.shape[axis], (sizes, devices.shape)
+    out = []
+    start = 0
+    for s in sizes:
+        idx = [slice(None)] * devices.ndim
+        idx[axis] = slice(start, start + s)
+        out.append(devices[tuple(idx)])
+        start += s
+    return out
+
+
+class MeshComposer:
+    """Carves sub-accelerators out of a (data, model) or (pod, data, model)
+    mesh.  CU granularity: one CU = one model-axis column (a data-parallel
+    group of chips), matching the scheduler's C_max."""
+
+    def __init__(self, mesh: Mesh, *, cu_axis: str = "model"):
+        self.mesh = mesh
+        self.cu_axis = cu_axis
+        self.axis_index = mesh.axis_names.index(cu_axis)
+        self.num_cus = mesh.devices.shape[self.axis_index]
+
+    def unified(self) -> SubAccelerator:
+        """The monolithic composition: all CUs as one accelerator."""
+        return SubAccelerator("unified", tuple(range(self.num_cus)), self.mesh)
+
+    def compose(self, sizes: Sequence[int],
+                names: Optional[Sequence[str]] = None) -> List[SubAccelerator]:
+        """Partition the CU axis into independent accelerators of the given
+        sizes (must sum to the axis size)."""
+        blocks = split_axis(self.mesh.devices, self.axis_index, sizes)
+        out = []
+        start = 0
+        for i, (blk, size) in enumerate(zip(blocks, sizes)):
+            name = names[i] if names else f"sub{i}"
+            sub = Mesh(blk, self.mesh.axis_names)
+            out.append(SubAccelerator(name, tuple(range(start, start + size)),
+                                      sub))
+            start += size
+        return out
+
+    def for_plan(self, plan: ExecutionPlan) -> Dict[int, SubAccelerator]:
+        """Map every planned layer's CU set to a sub-mesh.  Layers sharing a
+        CU set share the sub-accelerator (ping-pong reuse across time)."""
+        cache: Dict[Tuple[int, ...], SubAccelerator] = {}
+        result: Dict[int, SubAccelerator] = {}
+        for pl in plan.layers:
+            key = tuple(sorted(pl.cu_ids))
+            if key not in cache:
+                if max(key) >= self.num_cus:
+                    raise ValueError(
+                        f"plan uses CU {max(key)} but mesh has {self.num_cus}")
+                idx = [slice(None)] * self.mesh.devices.ndim
+                idx[self.axis_index] = list(key)
+                blk = self.mesh.devices[tuple(idx)]
+                cache[key] = SubAccelerator(
+                    f"cus{key}", key, Mesh(blk, self.mesh.axis_names))
+            result[pl.layer] = cache[key]
+        return result
+
+
+def concurrent_groups(plan: ExecutionPlan) -> List[List[PlannedLayer]]:
+    """Maximal sets of layers whose schedule intervals overlap — these run
+    simultaneously on disjoint compositions (validation: Eq. 4 guarantees
+    disjoint CU sets)."""
+    events = sorted({pl.start for pl in plan.layers})
+    groups = []
+    for t in events:
+        live = [pl for pl in plan.layers if pl.start <= t < pl.end]
+        if live and live not in groups:
+            groups.append(live)
+    return groups

@@ -1,0 +1,129 @@
+"""Two-stage DSE driver (paper §3.1, Fig. 6).
+
+Stage 1 (Runtime Parameter Optimizer): brute-force per-layer runtime
+parameters under FMU/CU constraints -> mode tables (repro.core.modes).
+Stage 2 (Schedule Optimizer): resource-constrained DAG scheduling over the
+mode tables — exact MILP-equivalent branch-and-bound for small task sets,
+the GA heuristic for large ones (``solver='auto'`` switches on problem
+size, reproducing the paper's guidance in §4.4).
+
+The result carries the ExecutionPlan consumed by the code generator
+(instruction streams) and, on the TPU side, by the mesh composer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+from repro.common.platform import PlatformProfile, VCK190
+from repro.configs.paper_workloads import MMWorkload
+from repro.core import modes as modes_lib
+from repro.core.analytical import AccelConfig
+from repro.core.ga import GAConfig, GAResult, solve_ga
+from repro.core.milp import Result as MILPResult
+from repro.core.milp import solve_exact
+from repro.core.schedule import Schedule, ScheduleProblem, validate
+
+AUTO_EXACT_MAX_NODES = 12        # |layers| x |modes| budget for exact solver
+AUTO_EXACT_MAX_MODES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedLayer:
+    layer: int
+    name: str
+    mkn: Tuple[int, int, int]
+    mode_fmus: int
+    mode_cus: int
+    tile: Tuple[int, int, int]
+    start: float
+    end: float
+    fmu_ids: Tuple[int, ...]
+    cu_ids: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    workload: str
+    layers: Tuple[PlannedLayer, ...]
+    makespan: float
+
+    def throughput_flops(self, total_flops: float) -> float:
+        return total_flops / self.makespan if self.makespan else 0.0
+
+    def time_slots(self) -> List[Tuple[float, List[PlannedLayer]]]:
+        """Group layers by start time — concurrent groups run on disjoint
+        CU sets (the composed-accelerator view)."""
+        slots = {}
+        for pl in self.layers:
+            slots.setdefault(pl.start, []).append(pl)
+        return sorted(slots.items())
+
+
+@dataclasses.dataclass
+class DSEResult:
+    plan: ExecutionPlan
+    schedule: Schedule
+    problem: ScheduleProblem
+    solver: str
+    stage1_s: float
+    stage2_s: float
+    makespan: float
+    optimal: bool
+
+
+def _plan_from_schedule(workload: MMWorkload, problem: ScheduleProblem,
+                        schedule: Schedule) -> ExecutionPlan:
+    planned = []
+    for p in sorted(schedule.placements, key=lambda q: (q.start, q.layer)):
+        layer = workload.layers[p.layer]
+        mode = problem.modes[p.layer][p.mode_idx]
+        tile = tuple(mode.meta) if mode.meta else (layer.m, layer.k, layer.n)
+        planned.append(PlannedLayer(
+            layer=p.layer, name=layer.name, mkn=(layer.m, layer.k, layer.n),
+            mode_fmus=mode.fmus, mode_cus=mode.cus, tile=tile,
+            start=p.start, end=p.end, fmu_ids=p.fmu_ids, cu_ids=p.cu_ids))
+    return ExecutionPlan(workload.name, tuple(planned), schedule.makespan)
+
+
+def run_dse(workload: MMWorkload, accel: AccelConfig,
+            platform: PlatformProfile = VCK190, *,
+            f_max: Optional[int] = None, c_max: Optional[int] = None,
+            solver: str = "auto", max_modes: int = 16,
+            exact_time_limit_s: float = 60.0,
+            ga_config: Optional[GAConfig] = None) -> DSEResult:
+    f_max = f_max if f_max is not None else accel.num_fmus
+    c_max = c_max if c_max is not None else accel.num_cus
+
+    t0 = time.monotonic()
+    problem = modes_lib.build_problem(workload, accel, platform,
+                                      f_max=f_max, c_max=c_max,
+                                      max_modes=max_modes)
+    stage1_s = time.monotonic() - t0
+
+    if solver == "auto":
+        big = (problem.num_layers > AUTO_EXACT_MAX_NODES or
+               max(len(m) for m in problem.modes) > AUTO_EXACT_MAX_MODES)
+        solver = "ga" if big else "milp"
+
+    t1 = time.monotonic()
+    if solver == "milp":
+        ga_seed = solve_ga(problem, ga_config or GAConfig(generations=40))
+        res: MILPResult = solve_exact(problem,
+                                      time_limit_s=exact_time_limit_s,
+                                      incumbent=ga_seed.schedule)
+        schedule, optimal = res.schedule, res.optimal
+    elif solver == "ga":
+        ga = solve_ga(problem, ga_config or GAConfig())
+        schedule, optimal = ga.schedule, False
+    else:
+        raise ValueError(solver)
+    stage2_s = time.monotonic() - t1
+
+    assert schedule is not None
+    validate(problem, schedule)
+    plan = _plan_from_schedule(workload, problem, schedule)
+    return DSEResult(plan=plan, schedule=schedule, problem=problem,
+                     solver=solver, stage1_s=stage1_s, stage2_s=stage2_s,
+                     makespan=schedule.makespan, optimal=optimal)

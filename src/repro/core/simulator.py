@@ -1,0 +1,133 @@
+"""Functional data-plane simulator: executes FILCO instruction streams
+against numpy DDR / FMU-arena state (paper Fig. 2's data plane in software).
+
+This is the semantic ground truth for the ISA: running the generated program
+for a workload must reproduce the workload's reference numerics (layer-chain
+matmuls).  The CU's flexible matmul is executed through the same
+``filco_mm`` reference/kernel path used on TPU, so kernel, ISA and arena
+semantics are tested together.
+
+The simulator executes instruction streams in program order per unit with a
+simple dataflow handshake (FMU send -> CU consume -> FMU receive), which is
+sufficient for numerics; timing is the analytical model's job, not ours.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import instructions as isa
+from repro.core.codegen import Program
+
+
+@dataclasses.dataclass
+class FMUState:
+    """1-D addressed double buffer (we model the ping buffer; pong is used
+    for overlap, which does not change numerics)."""
+
+    data: np.ndarray                       # flat elements
+    view_cols: int = 0                     # current runtime view stride
+
+
+class DataPlaneSim:
+    def __init__(self, ddr_elems: int, num_fmus: int, fmu_capacity: int,
+                 num_cus: int, *, use_kernel: bool = False):
+        self.ddr = np.zeros(ddr_elems, np.float32)
+        self.fmus = {u: FMUState(np.zeros(fmu_capacity, np.float32))
+                     for u in range(num_fmus)}
+        self.num_cus = num_cus
+        self.use_kernel = use_kernel
+        # in-flight operand views per CU: cu -> {"a": (mat), "b": (mat)}
+        self._cu_in: Dict[int, Dict[str, np.ndarray]] = {}
+        # results waiting to be received: (cu, fmu) -> flat data
+        self._cu_out: Dict[int, np.ndarray] = {}
+
+    # -- IOM ---------------------------------------------------------------
+    def _iom_load(self, ins: isa.IOMLoad) -> None:
+        rows = ins.end_row - ins.start_row
+        cols = ins.end_col - ins.start_col
+        full = self.ddr[ins.ddr_addr: ins.ddr_addr + ins.m * ins.n]
+        mat = full.reshape(ins.m, ins.n)[ins.start_row:ins.end_row,
+                                         ins.start_col:ins.end_col]
+        fmu = self.fmus[ins.des_fmu]
+        fmu.data[: rows * cols] = mat.reshape(-1)
+        fmu.view_cols = cols
+
+    def _iom_store(self, ins: isa.IOMStore) -> None:
+        rows = ins.end_row - ins.start_row
+        cols = ins.end_col - ins.start_col
+        fmu = self.fmus[ins.src_fmu]
+        mat = fmu.data[: rows * cols].reshape(rows, cols)
+        full = self.ddr[ins.ddr_addr: ins.ddr_addr + ins.m * ins.n]
+        view = full.reshape(ins.m, ins.n)
+        view[ins.start_row:ins.end_row, ins.start_col:ins.end_col] = mat
+
+    # -- FMU ----------------------------------------------------------------
+    def _fmu_send(self, fmu_id: int, ins: isa.FMUInstr) -> None:
+        fmu = self.fmus[fmu_id]
+        cols = fmu.view_cols or (ins.end_col - ins.start_col)
+        total_rows = (np.count_nonzero(fmu.data) // max(cols, 1)) or ins.end_row
+        # 1-D addressed window: rows [start_row, end_row) x cols
+        # [start_col, end_col) of the runtime (.., cols) view (FMV).
+        r = ins.end_row - ins.start_row
+        c = ins.end_col - ins.start_col
+        start = ins.start_row * cols + ins.start_col
+        rows = np.stack([
+            fmu.data[start + i * cols: start + i * cols + c]
+            for i in range(r)]) if r else np.zeros((0, c), np.float32)
+        slot = self._cu_in.setdefault(ins.des_cu, {})
+        slot["b" if "a" in slot else "a"] = rows
+
+    def _fmu_recv_cu(self, fmu_id: int, ins: isa.FMUInstr) -> None:
+        fmu = self.fmus[fmu_id]
+        data = self._cu_out.pop(ins.src_cu)
+        cols = ins.end_col - ins.start_col
+        start = ins.start_row * cols + ins.start_col
+        fmu.data[start: start + data.size] = data.reshape(-1)
+        fmu.view_cols = cols
+
+    # -- CU -------------------------------------------------------------------
+    def _cu_mm(self, cu_id: int, ins: isa.CUInstr) -> None:
+        ops = self._cu_in.pop(cu_id)
+        a, b = ops["a"], ops["b"]
+        assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+        if self.use_kernel:
+            import jax.numpy as jnp
+
+            from repro.kernels.filco_mm import kernel as K
+
+            pad = lambda x, r, c: np.pad(x, ((0, r - x.shape[0]),
+                                             (0, c - x.shape[1])))
+            Mx = -(-a.shape[0] // 64) * 64
+            Kx = -(-a.shape[1] // 64) * 64
+            Nx = -(-b.shape[1] // 64) * 64
+            out = K.flex_mm(jnp.asarray(pad(a, Mx, Kx)),
+                            jnp.asarray(pad(b, Kx, Nx)),
+                            jnp.asarray([a.shape[0], a.shape[1], b.shape[1]],
+                                        jnp.int32),
+                            bm=64, bk=64, bn=64, interpret=True)
+            res = np.asarray(out)[: a.shape[0], : b.shape[1]]
+        else:
+            res = a @ b
+        self._cu_out[cu_id] = res
+
+    # -- program execution ------------------------------------------------
+    def run(self, prog: Program) -> None:
+        """Replay the layer-ordered micro-programs.  Dataflow order within a
+        layer: IOM loads -> FMU recv -> per-CU (send A, send B, compute,
+        recv C) -> IOM store.  Layers execute in schedule order; concurrency
+        does not change numerics (disjoint units by Eq. 4), so sequential
+        replay is the semantic reference."""
+        assert prog.layer_programs, "program has no layer micro-programs"
+        for lp in prog.layer_programs:
+            for ins in lp.loads:
+                self._iom_load(ins)
+            for w in lp.cu_work:
+                self._fmu_send(w.compute.src_fmu, w.send_a)
+                self._fmu_send(w.compute.src_fmu_b, w.send_b)
+                self._cu_mm(w.cu_id, w.compute)
+                self._fmu_recv_cu(lp.fmu_c, dataclasses.replace(
+                    w.recv_c, src_cu=w.cu_id))
+            self._iom_store(lp.store)

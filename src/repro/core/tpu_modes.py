@@ -1,0 +1,112 @@
+"""Bridge: assigned-architecture configs -> FILCO MM workloads -> two-stage
+DSE on the TPU profile.
+
+This closes the loop between the paper's framework and the pod-scale
+deployment: a transformer layer of any assigned arch is exactly the kind of
+diverse MM DAG FILCO schedules.  ``arch_workload()`` lowers one layer (or a
+whole block stack) to an :class:`MMWorkload`; ``dse_for_arch()`` runs the
+two-stage DSE against the TPU v5e profile, where a "CU" is a mesh sub-slice
+and the FMU capacity is a chip's VMEM — yielding per-layer tile choices and
+a composed schedule the same way the paper does on the VCK190.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.common.platform import TPU_V5E, PlatformProfile
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.paper_workloads import MMLayer, MMWorkload
+from repro.core.analytical import AccelConfig
+from repro.core.dse import DSEResult, run_dse
+from repro.core.ga import GAConfig
+
+
+def tpu_accel(num_cus: int = 8, vmem_frac: float = 0.75) -> AccelConfig:
+    """A TPU chip as a FILCO design point: CUs = schedulable mesh sub-slices
+    (grid partitions of the MXU work), FMUs = VMEM views."""
+    elems = int(TPU_V5E.onchip_bytes * vmem_frac) // 4
+    return AccelConfig(
+        name="FILCO-TPUv5e", num_cus=num_cus,
+        aies_per_cu=TPU_V5E.num_compute_units, num_fmus=16,
+        onchip_elems=elems, fp=True, fmv=True, fmf=True)
+
+
+def arch_workload(cfg: ModelConfig, cell: ShapeCell, *, layers: int = 1,
+                  tokens_per_device: Optional[int] = None) -> MMWorkload:
+    """Lower `layers` transformer layers of an arch to an MM DAG.
+
+    Shapes are per-device: tokens_per_device defaults to the cell's global
+    tokens / 256 chips (the single-pod mesh).
+    """
+    d, hq, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    if tokens_per_device is None:
+        if cell.kind == "decode":
+            tokens_per_device = max(cell.global_batch // 256, 1)
+        else:
+            tokens_per_device = max(cell.global_batch * cell.seq_len // 256, 8)
+    t = tokens_per_device
+    nodes: List[MMLayer] = []
+    prev: Tuple[int, ...] = ()
+    for li in range(layers):
+        base = len(nodes)
+        if cfg.mla is not None:
+            m = cfg.mla
+            nodes.append(MMLayer(f"l{li}.q", t, d,
+                                 hq * (m.qk_nope_head_dim + m.qk_rope_head_dim),
+                                 prev))
+            nodes.append(MMLayer(f"l{li}.dkv", t, d,
+                                 m.kv_lora_rank + m.qk_rope_head_dim, prev))
+            nodes.append(MMLayer(f"l{li}.ukv", t, m.kv_lora_rank,
+                                 hq * (m.qk_nope_head_dim + m.v_head_dim),
+                                 (base + 1,)))
+            o_dep = (base + 2,)
+        elif cfg.attention_free:
+            o_dep = prev
+        else:
+            nodes.append(MMLayer(f"l{li}.qkv", t, d, (hq + 2 * hkv) * hd, prev))
+            kv = min(cell.seq_len, 4096)    # per-device attended kv window
+            nodes.append(MMLayer(f"l{li}.qk", hq * t, hd, kv, (base,)))
+            nodes.append(MMLayer(f"l{li}.av", hq * t, kv, hd, (base + 1,)))
+            nodes.append(MMLayer(f"l{li}.o", t, hq * hd, d, (base + 2,)))
+            o_dep = (base + 3,)
+        if cfg.ssm is not None:
+            d_in = cfg.ssm.d_inner or cfg.ssm.expand * d
+            nodes.append(MMLayer(f"l{li}.ssm_in", t, d, 2 * d_in, prev))
+            nodes.append(MMLayer(f"l{li}.ssm_out", t, d_in, d,
+                                 (len(nodes) - 1,)))
+            o_dep = (len(nodes) - 1,)
+        # FFN / MoE (routed experts appear as per-expert token slabs)
+        if cfg.moe is not None:
+            mo = cfg.moe
+            per_e = max(t * mo.top_k // mo.num_experts, 1)
+            # a representative subset of expert MMs keeps the DAG tractable
+            for e in range(min(mo.num_experts, 8)):
+                nodes.append(MMLayer(f"l{li}.e{e}.up", per_e, d,
+                                     mo.expert_d_ff, o_dep))
+                nodes.append(MMLayer(f"l{li}.e{e}.down", per_e,
+                                     mo.expert_d_ff, d, (len(nodes) - 1,)))
+            if mo.dense_residual:
+                nodes.append(MMLayer(f"l{li}.dense_up", t, d,
+                                     mo.dense_residual_d_ff or cfg.d_ff, o_dep))
+                nodes.append(MMLayer(f"l{li}.dense_down", t,
+                                     mo.dense_residual_d_ff or cfg.d_ff, d,
+                                     (len(nodes) - 1,)))
+            prev = (len(nodes) - 1,)
+        elif cfg.d_ff:
+            nodes.append(MMLayer(f"l{li}.ffn_up", t, d, cfg.d_ff, o_dep))
+            nodes.append(MMLayer(f"l{li}.ffn_down", t, cfg.d_ff, d,
+                                 (len(nodes) - 1,)))
+            prev = (len(nodes) - 1,)
+        else:
+            prev = o_dep
+    return MMWorkload(f"{cfg.name}/{cell.name}/L{layers}", tuple(nodes))
+
+
+def dse_for_arch(cfg: ModelConfig, cell: ShapeCell, *,
+                 platform: PlatformProfile = TPU_V5E,
+                 seed: int = 0) -> DSEResult:
+    wl = arch_workload(cfg, cell)
+    return run_dse(wl, tpu_accel(), platform, solver="ga", max_modes=5,
+                   ga_config=GAConfig(population=16, generations=20,
+                                      seed=seed, patience=8))

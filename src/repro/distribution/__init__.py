@@ -1,0 +1,25 @@
+from repro.distribution.partitioning import (
+    Annotated,
+    ShardingRules,
+    constrain,
+    logical_specs,
+    physical_specs,
+    serve_rules,
+    shardings,
+    single_device_rules,
+    strip,
+    train_rules,
+)
+
+__all__ = [
+    "Annotated",
+    "ShardingRules",
+    "constrain",
+    "logical_specs",
+    "physical_specs",
+    "serve_rules",
+    "shardings",
+    "single_device_rules",
+    "strip",
+    "train_rules",
+]

@@ -1,0 +1,7 @@
+from repro.kernels.filco_mm.kernel import (
+    atoms_issued_flexible,
+    atoms_issued_static,
+)
+from repro.kernels.filco_mm.ops import flex_mm, static_mm
+
+__all__ = ["flex_mm", "static_mm", "atoms_issued_flexible", "atoms_issued_static"]

@@ -1,0 +1,158 @@
+"""filco_mm — runtime-flexible tiled matmul (FILCO §2.2 "Flexible
+Computation Parallelism", re-derived for the TPU MXU).
+
+The paper's insight: pack an *atomic* matmul (2x8x8 on AIE) inside nested
+loops whose bounds arrive at runtime through a few bytes of instruction, so
+one compiled kernel serves every operand shape with no padded (invalid)
+compute and no recompilation (= bitstream reload).
+
+TPU adaptation: the atom is one MXU macro-op (8x128 @ 128x128); the
+"instruction" is a scalar-prefetch operand (SMEM) carrying the *valid*
+(m, k, n); the "nested loops with dynamic boundaries" are the Pallas grid
+over the maximum buffer shape, with every grid step *predicated off* when its
+tile lies outside the valid bounds (``pl.when``).  Edge tiles mask the
+partial rows/cols with iota masks, exactly like the paper's flexible tile
+sizes in Fig. 3(b).
+
+A "static" reference kernel (the CHARM-style baseline) computes the full
+padded buffer unconditionally; the fig8 benchmark counts issued atoms of
+both to reproduce the single-kernel efficiency curve.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Atom shape of the MXU macro-op this kernel predicates on (see
+# repro.common.platform.TPU_V5E.atom_shape).
+ATOM_M, ATOM_K, ATOM_N = 8, 128, 128
+
+
+def _flex_mm_kernel(dims_ref, a_ref, b_ref, o_ref, acc_ref, *, bm, bk, bn,
+                    nk_grid):
+    """Grid: (M_max/bm, N_max/bn, K_max/bk); dims_ref (SMEM) = [m, k, n]."""
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    m, k, n = dims_ref[0], dims_ref[1], dims_ref[2]
+
+    # Valid-tile predicate: the FILCO runtime loop bound.  Tiles fully
+    # outside (m, k, n) issue no MXU work at all.
+    row_live = i * bm < m
+    col_live = j * bn < n
+    red_live = kk * bk < k
+    live = row_live & col_live & red_live
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _compute():
+        a = a_ref[...]
+        b = b_ref[...]
+        # mask the partial reduction tile (edge of k)
+        kid = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
+        a = jnp.where(kid < k, a, 0)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk_grid - 1)
+    def _finalize():
+        rid = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+        cid = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        mask = (rid < m) & (cid < n)
+        o_ref[...] = jnp.where(mask, acc_ref[...], 0).astype(o_ref.dtype)
+
+
+def _static_mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk_grid):
+    """CHARM-style static baseline: computes the full padded buffer."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk_grid - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def flex_mm(a_buf, b_buf, dims, *, bm: int = 128, bk: int = 128, bn: int = 128,
+            interpret: bool = False):
+    """Flexible matmul over padded operand buffers.
+
+    a_buf: (M_max, K_max); b_buf: (K_max, N_max); dims: (3,) int32 = [m,k,n].
+    Returns (M_max, N_max): out[:m, :n] = a[:m, :k] @ b[:k, :n], zeros
+    elsewhere.  One compiled program serves *all* (m, k, n) <= buffer shape —
+    reconfiguration cost is writing 12 bytes (cf. bitstream reload / XLA
+    recompile).
+    """
+    Mx, Kx = a_buf.shape
+    Kx2, Nx = b_buf.shape
+    assert Kx == Kx2
+    assert Mx % bm == 0 and Kx % bk == 0 and Nx % bn == 0
+    grid = (Mx // bm, Nx // bn, Kx // bk)
+    kernel = functools.partial(_flex_mm_kernel, bm=bm, bk=bk, bn=bn,
+                               nk_grid=grid[2])
+    # PrefetchScalarGridSpec: the (m,k,n) "instruction" lands in SMEM before
+    # any tile is fetched — the TPU analogue of FILCO's instruction decode
+    # preceding FMU/CU execution.
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk, dims: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk, dims: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, dims: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mx, Nx), a_buf.dtype),
+        interpret=interpret,
+    )(dims, a_buf, b_buf)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def static_mm(a_buf, b_buf, *, bm: int = 128, bk: int = 128, bn: int = 128,
+              interpret: bool = False):
+    """Static padded matmul over the full buffers (baseline)."""
+    Mx, Kx = a_buf.shape
+    _, Nx = b_buf.shape
+    grid = (Mx // bm, Nx // bn, Kx // bk)
+    kernel = functools.partial(_static_mm_kernel, nk_grid=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mx, Nx), a_buf.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_buf, b_buf)
+
+
+def atoms_issued_flexible(m: int, k: int, n: int, *, bm=128, bk=128, bn=128):
+    """MXU atoms actually issued by the flexible kernel for valid dims
+    (m,k,n): live tiles only, each bm x bk x bn tile = (bm/8)(bk/128)(bn/128)
+    atoms.  Edge tiles still issue whole atoms (MXU granularity) — the same
+    quantization the paper's 2x8x8 atom imposes (Fig. 8 x-axis granularity)."""
+    ceil = lambda x, a: -(-x // a)
+    live_tiles = ceil(m, bm) * ceil(k, bk) * ceil(n, bn)
+    atoms_per_tile = (bm // ATOM_M) * (bk // ATOM_K) * (bn // ATOM_N)
+    return live_tiles * atoms_per_tile
+
+
+def atoms_issued_static(Mx: int, Kx: int, Nx: int, *, bm=128, bk=128, bn=128):
+    """Atoms issued by the static baseline: the whole padded buffer."""
+    return atoms_issued_flexible(Mx, Kx, Nx, bm=bm, bk=bk, bn=bn)

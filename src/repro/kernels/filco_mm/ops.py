@@ -1,0 +1,36 @@
+"""jit'd public wrappers for filco_mm with CPU fallback.
+
+On TPU the Pallas kernel runs natively; elsewhere (this CPU container) it
+runs in interpret mode for correctness work, or falls back to the jnp oracle
+for speed (``impl='ref'``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.filco_mm import kernel as K
+from repro.kernels.filco_mm import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def flex_mm(a_buf, b_buf, m, k, n, *, bm=128, bk=128, bn=128, impl="auto"):
+    """Flexible matmul; (m,k,n) may be traced int32 scalars."""
+    dims = jnp.asarray(jnp.stack([jnp.asarray(m, jnp.int32),
+                                  jnp.asarray(k, jnp.int32),
+                                  jnp.asarray(n, jnp.int32)]))
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.flex_mm_ref(a_buf, b_buf, dims)
+    interpret = impl == "interpret" or not _on_tpu()
+    return K.flex_mm(a_buf, b_buf, dims, bm=bm, bk=bk, bn=bn,
+                     interpret=interpret)
+
+
+def static_mm(a_buf, b_buf, *, bm=128, bk=128, bn=128, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.static_mm_ref(a_buf, b_buf)
+    interpret = impl == "interpret" or not _on_tpu()
+    return K.static_mm(a_buf, b_buf, bm=bm, bk=bk, bn=bn, interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for filco_mm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flex_mm_ref(a_buf, b_buf, dims):
+    """out[:m,:n] = a[:m,:k] @ b[:k,:n]; zeros elsewhere.
+
+    Implemented with masks (not slicing) so it jits with traced dims.
+    """
+    Mx, Kx = a_buf.shape
+    _, Nx = b_buf.shape
+    m, k, n = dims[0], dims[1], dims[2]
+    am = (jnp.arange(Mx)[:, None] < m) & (jnp.arange(Kx)[None, :] < k)
+    bm_ = (jnp.arange(Kx)[:, None] < k) & (jnp.arange(Nx)[None, :] < n)
+    a = jnp.where(am, a_buf, 0)
+    b = jnp.where(bm_, b_buf, 0)
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    om = (jnp.arange(Mx)[:, None] < m) & (jnp.arange(Nx)[None, :] < n)
+    return jnp.where(om, out, 0).astype(a_buf.dtype)
+
+
+def static_mm_ref(a_buf, b_buf):
+    return jnp.dot(a_buf.astype(jnp.float32),
+                   b_buf.astype(jnp.float32)).astype(a_buf.dtype)

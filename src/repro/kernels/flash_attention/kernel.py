@@ -1,0 +1,101 @@
+"""Blockwise (flash) attention Pallas kernel for TPU.
+
+Causal attention with optional sliding window.  The grid iterates
+(batch*heads, q_blocks, kv_blocks) with running (m, l, acc) state in VMEM
+scratch; blocks strictly above the causal diagonal (or outside the sliding
+window) are *skipped* via ``pl.when`` — the kernel-level version of the
+triangular pair-scan used by the portable jnp path.
+
+Layout: q, k, v are (BH, S, D) with the head dim folded into batch (the
+ops.py wrapper handles GQA expansion and reshaping).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq, bk, nkv, causal, window, scale):
+    _, qi, kj = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # live block predicate: causal diagonal / sliding window
+    q_lo = qi * bq
+    k_lo = kj * bk
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k_lo <= q_lo + bq - 1)
+    if window:
+        live = live & (k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.asarray(True)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[...],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 256, bk: int = 256, interpret: bool = False):
+    """q, k, v: (BH, S, D) -> (BH, S, D)."""
+    BH, S, D = q.shape
+    assert k.shape == v.shape == (BH, S, D)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    grid = (BH, S // bq, S // bk)
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nkv=grid[2],
+                               causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running sum
+            pltpu.VMEM((bq, D), jnp.float32),      # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Public wrapper: GQA-aware multihead flash attention with CPU fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def mha(q, k, v, *, causal=True, window=0, bq=256, bk=256, impl="auto"):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    groups = Hq // Hkv
+    kx = jnp.repeat(k, groups, axis=2)
+    vx = jnp.repeat(v, groups, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        of = R.attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        interpret = impl == "interpret" or not _on_tpu()
+        bq_, bk_ = min(bq, S), min(bk, S)
+        of = K.flash_attention(qf, kf, vf, causal=causal, window=window,
+                               bq=bq_, bk=bk_, interpret=interpret)
+    return of.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,5 @@
+from repro.kernels.mamba_scan.kernel import mamba_scan
+from repro.kernels.mamba_scan.ops import selective_scan_fused
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+__all__ = ["mamba_scan", "selective_scan_fused", "mamba_scan_ref"]

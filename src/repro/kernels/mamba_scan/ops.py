@@ -1,0 +1,19 @@
+"""Public wrapper for the fused selective scan with CPU fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba_scan import kernel as K
+from repro.kernels.mamba_scan import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def selective_scan_fused(x, dt, b, c, a_log, d, *, bd=512, bs=128, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.mamba_scan_ref(x, dt, b, c, a_log, d)
+    interpret = impl == "interpret" or not _on_tpu()
+    return K.mamba_scan(x, dt, b, c, a_log, d, bd=bd, bs=bs,
+                        interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for mamba_scan (materializes the state; small shapes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, b, c, a_log, d):
+    """x, dt: (B,S,D); b,c: (B,S,N); a_log: (D,N); d: (D,) -> (B,S,D)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    deltaA = jnp.exp(dt32[..., None] * a)                       # (B,S,D,N)
+    deltaBx = (dt32 * x32)[..., None] * b.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inputs):
+        da, dbx = inputs
+        h = da * h + dbx
+        return h, h
+
+    B, S, D, N = deltaA.shape
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    _, hs = jax.lax.scan(step,
+                         h0,
+                         (deltaA.transpose(1, 0, 2, 3),
+                          deltaBx.transpose(1, 0, 2, 3)))
+    hs = hs.transpose(1, 0, 2, 3)                               # (B,S,D,N)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c.astype(jnp.float32))
+    y = y + d.astype(jnp.float32) * x32
+    return y.astype(x.dtype)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+#   init, and ONLY the dry-run runs with 512 placeholder devices.
+#
+# Multi-pod dry-run driver (deliverable (e)): for every assigned
+# (architecture x input-shape) cell, build the real train/prefill/decode step
+# function, lower + compile it against the production mesh (16x16 single-pod
+# and 2x16x16 multi-pod), print memory_analysis() / cost_analysis(), extract
+# trip-count-aware FLOPs/bytes/collective-bytes from the optimized HLO, and
+# derive the three roofline terms.  Results cache as JSON per cell under
+# --out so the full grid is resumable.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+#       --cell train_4k [--multi-pod] [--out results/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all  # every runnable cell
+#
+# Perf-iteration knobs (EXPERIMENTS.md §Perf): --attn-impl triangular,
+# --moe-dispatch gather, --no-sp, --no-remat, --variant <tag>.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as roof
+from repro.configs import CELLS_BY_NAME, ARCH_IDS, cells_for, get_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distribution import partitioning as part
+from repro.launch.mesh import fit_spec, make_production_mesh, sanitize_spec
+from repro.models.model import build_model, input_specs
+from repro.optim import base as optim_lib
+from repro.train.trainer import TrainConfig, make_train_step
+
+ENCDEC_DECODE_SRC = 4096
+
+
+def _fsdp_weights_at_serve(cfg: ModelConfig) -> bool:
+    """2-D shard weights at serving (model x data).
+
+    Always on: several archs have head counts that do not divide the
+    16-wide model axis (qwen2.5: 40, hymba: 25, arctic: 56), so their q/o
+    projections cannot shard on `model` and must shard on `data` instead —
+    XLA lowers the contractions to partial-sum + all-reduce over data, which
+    the collective roofline term prices honestly."""
+    return True
+
+
+def _sds_tree(annotated_tree, mesh, rules):
+    """Annotated pytree -> ShapeDtypeStruct pytree with NamedShardings.
+    Unannotated leaves (scalar bookkeeping like src_len) replicate."""
+    def make(a):
+        if isinstance(a, part.Annotated):
+            spec = fit_spec(rules.spec(a.logical), a.value.shape, mesh)
+            return jax.ShapeDtypeStruct(a.value.shape, a.value.dtype,
+                                        sharding=NamedSharding(mesh, spec))
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, P()))
+    return jax.tree.map(make, annotated_tree,
+                        is_leaf=lambda x: isinstance(x, part.Annotated))
+
+
+def _batch_sds(specs, mesh):
+    """Input batch ShapeDtypeStructs sharded on the batch dim."""
+    out = {}
+    for k, s in specs.items():
+        spec = fit_spec(P(("pod", "data")), s.shape, mesh)
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                      sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+               attn_impl: str = "blockwise", moe_dispatch: str = "einsum",
+               sequence_parallel: bool = True, ssm_impl: str = "chunked",
+               attn_block: int = 512):
+    """Returns (step_fn, kwargs of ShapeDtypeStruct arguments)."""
+    model = build_model(cfg)
+    rng = jax.random.key(0)
+
+    if cell.kind == "train":
+        rules = part.train_rules(sequence_parallel=sequence_parallel)
+        residual_spec = None
+        if sequence_parallel:
+            residual_spec = sanitize_spec(
+                rules.spec(("batch", "act_seq", None)), mesh)
+        opt = optim_lib.make_optimizer(cfg.optimizer)
+        tc = TrainConfig(attn_impl=attn_impl, moe_dispatch=moe_dispatch,
+                         ssm_impl=ssm_impl, attn_block=attn_block)
+        step_fn = make_train_step(model, opt, tc, residual_spec=residual_spec)
+        params_ann = jax.eval_shape(model.init, rng)
+        params_sds = _sds_tree(params_ann, mesh, rules)
+        params_stripped = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.value.shape, a.value.dtype),
+            params_ann, is_leaf=lambda x: isinstance(x, part.Annotated))
+        opt_sds = _opt_sds(opt, params_stripped, params_sds, mesh)
+        batch = _batch_sds(input_specs(cfg, cell), mesh)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        # outputs: (params, opt_state, metrics) — pin state to its input
+        # shardings (donation aliases them anyway)
+        out_sh = (jax.tree.map(lambda s: s.sharding, params_sds),
+                  jax.tree.map(lambda s: s.sharding, opt_sds), None)
+        return step_fn, dict(params=params_sds, opt_state=opt_sds,
+                             step=step_sds, batch=batch), out_sh
+
+    rules = part.serve_rules(fsdp_weights=_fsdp_weights_at_serve(cfg))
+    model_kwargs = dict(attn_impl=attn_impl, moe_dispatch=moe_dispatch)
+    params_ann = jax.eval_shape(model.init, rng)
+    # inference runs from a bf16 checkpoint
+    params_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape,
+            jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype,
+            sharding=s.sharding),
+        _sds_tree(params_ann, mesh, rules))
+
+    if cell.kind == "prefill":
+        cache_ann = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len,
+                                     src_len=cell.seq_len if cfg.is_encdec else 0))
+        cache_sds = _sds_tree(cache_ann, mesh, rules)
+        batch = _batch_sds(input_specs(cfg, cell), mesh)
+
+        def prefill_fn(params, cache, batch):
+            return model.prefill(params, batch, cache,
+                                 attn_impl=model_kwargs["attn_impl"],
+                                 moe_dispatch=model_kwargs["moe_dispatch"],
+                                 attn_block=attn_block)
+
+        # pin the output cache to the input cache's shardings (XLA would
+        # otherwise pick its own, often replicated, output layout)
+        out_sh = (None, jax.tree.map(lambda s: s.sharding, cache_sds))
+        return prefill_fn, dict(params=params_sds, cache=cache_sds,
+                                batch=batch), out_sh
+
+    # decode: one new token against a seq_len cache
+    src = ENCDEC_DECODE_SRC if cfg.is_encdec else 0
+    cache_ann = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len,
+                                 src_len=src))
+    cache_sds = _sds_tree(cache_ann, mesh, rules)
+    batch = _batch_sds(input_specs(cfg, cell), mesh)
+
+    def decode_fn(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"],
+                                 moe_dispatch=model_kwargs["moe_dispatch"])
+
+    out_sh = (None, jax.tree.map(lambda s: s.sharding, cache_sds))
+    return decode_fn, dict(params=params_sds, cache=cache_sds,
+                           batch=batch), out_sh
+
+
+def _opt_sds(opt, params_stripped, params_sds, mesh):
+    """Optimizer state SDS: leaves mirroring a param shape inherit its
+    sharding; factored/scalar leaves replicate."""
+    opt_shapes = jax.eval_shape(opt.init, params_stripped)
+    by_shape = {}
+    for p in jax.tree.leaves(params_sds):
+        by_shape.setdefault(p.shape, p.sharding)
+    rep = NamedSharding(mesh, P())
+
+    def make(leaf):
+        sh = by_shape.get(leaf.shape, rep)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree.map(make, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
+             attn_impl: str = "blockwise", moe_dispatch: str = "einsum",
+             sequence_parallel: bool = True, variant: str = "baseline",
+             keep_hlo: bool = False, moe_group: int = -1,
+             remat: bool = True, ssm_impl: str = "chunked",
+             attn_block: int = 512) -> dict:
+    cfg = get_config(arch)
+    if moe_group >= 0 and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=moe_group))
+    if not remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    cell = CELLS_BY_NAME[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.monotonic()
+    step_fn, kwargs, out_sh = build_cell(
+        cfg, cell, mesh, attn_impl=attn_impl, moe_dispatch=moe_dispatch,
+        sequence_parallel=sequence_parallel, ssm_impl=ssm_impl,
+        attn_block=attn_block)
+    # donate the state the production step donates: params+opt for train,
+    # the KV cache for decode — memory_analysis must reflect the aliasing.
+    if cell.kind == "train":
+        donate = ("params", "opt_state")
+    elif cell.kind == "decode":
+        donate = ("cache",)
+    else:
+        donate = ()
+    with mesh:
+        lowered = jax.jit(step_fn, donate_argnames=donate,
+                          out_shardings=out_sh).lower(**kwargs)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    hlo_cost = hlo_lib.analyze_hlo(text)
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = int(getattr(mem, f, 0) or 0)
+    peak = mem_fields["argument_size_in_bytes"] + \
+        mem_fields["temp_size_in_bytes"] + mem_fields["output_size_in_bytes"] \
+        - mem_fields["alias_size_in_bytes"]
+    terms = roof.derive_terms(
+        arch=arch, cell=cell_name, mesh_name=mesh_name, chips=chips,
+        cost={"flops": hlo_cost.flops, "bytes accessed": hlo_cost.bytes},
+        collective=roof.CollectiveStats(hlo_cost.collective_by_kind,
+                                        hlo_cost.collective_count),
+        model_flops=roof.model_flops_for(cfg, cell),
+        peak_memory_bytes=peak)
+    result = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name, "chips": chips,
+        "variant": variant,
+        "attn_impl": attn_impl, "moe_dispatch": moe_dispatch,
+        "ssm_impl": ssm_impl,
+        "sequence_parallel": sequence_parallel,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_fields,
+        "peak_bytes_per_device": peak,
+        "fits_hbm": peak <= 16 * (1 << 30),
+        "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "optimal_seconds", "utilization")},
+        "hlo_flops_per_device": hlo_cost.flops,
+        "hlo_bytes_per_device": hlo_cost.bytes,
+        "collective_bytes_per_device": hlo_cost.collective_bytes,
+        "collective_by_kind": hlo_cost.collective_by_kind,
+        "collective_count": hlo_cost.collective_count,
+        "roofline": terms.row(),
+    }
+    if keep_hlo:
+        result["hlo_text_head"] = text[:20000]
+    return result
+
+
+def cell_list():
+    out = []
+    for arch in ARCH_IDS:
+        for cell in cells_for(get_config(arch)):
+            out.append((arch, cell.name))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--cell", choices=sorted(CELLS_BY_NAME))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable cell on both meshes (in-proc)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--attn-impl", default="blockwise",
+                    choices=["blockwise", "triangular"])
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=["einsum", "gather"])
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel residuals")
+    ap.add_argument("--moe-group", type=int, default=-1,
+                    help="override MoE dispatch group size")
+    ap.add_argument("--ssm-impl", default="chunked",
+                    choices=["chunked", "fused", "fused_serial"])
+    ap.add_argument("--attn-block", type=int, default=512)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        todo = [(a, c, mp) for a, c in cell_list() for mp in (False, True)]
+    else:
+        assert args.arch and args.cell, "--arch and --cell (or --all)"
+        todo = [(args.arch, args.cell, args.multi_pod)]
+
+    failures = []
+    for arch, cell, mp in todo:
+        tag = f"{arch}__{cell}__{'multi' if mp else 'single'}__{args.variant}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            res = run_cell(arch, cell, multi_pod=mp,
+                           attn_impl=args.attn_impl,
+                           moe_dispatch=args.moe_dispatch,
+                           sequence_parallel=not args.no_sp,
+                           variant=args.variant,
+                           moe_group=args.moe_group,
+                           remat=not args.no_remat,
+                           ssm_impl=args.ssm_impl,
+                           attn_block=args.attn_block)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(f"[ok  ] {tag}: compile={res['compile_s']}s "
+                  f"peak={res['peak_bytes_per_device']/(1<<30):.2f}GiB "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s "
+                  f"dominant={r['dominant']} "
+                  f"roofline={r['roofline_fraction']:.3f}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record, continue the grid
+            failures.append((tag, repr(e)))
+            with open(os.path.join(args.out, tag + ".FAILED"), "w") as f:
+                f.write(traceback.format_exc())
+            print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

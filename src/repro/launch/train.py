@@ -1,0 +1,78 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minitron-4b --reduced \
+      --steps 50 --seq-len 64 --global-batch 8
+
+On real hardware ``--arch <id>`` (full config) trains on the production mesh
+with train_rules(); on this CPU container use ``--reduced`` for the smoke
+configs or ``--mesh-shape`` under a host-device-count override.  The launcher
+wires pipeline -> Trainer (checkpoint/restart, preemption guard, straggler
+watchdog) and implements the restart policy loop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data import make_pipeline
+from repro.distribution import partitioning as part
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train import TrainConfig, Trainer
+from repro.train import fault
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the 16x16 production mesh (real pods)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    pipe = make_pipeline(cfg, args.seq_len, args.global_batch,
+                         host_id=jax.process_index(),
+                         num_hosts=jax.process_count())
+    mesh = rules = None
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = part.train_rules()
+    tc = TrainConfig(steps=args.steps, lr=args.lr,
+                     microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt_dir)
+
+    policy = fault.RestartPolicy(max_restarts=args.max_restarts,
+                                 base_backoff_s=0.0)
+    while True:
+        trainer = Trainer(model, tc, mesh=mesh, rules=rules, pipeline=pipe)
+        out = trainer.fit()
+        print(json.dumps({"status": out["status"], "step": out["step"],
+                          "final": out["metrics"][-1] if out["metrics"] else {}},
+                         indent=1))
+        if out["status"] == "completed":
+            return 0
+        backoff = policy.next_backoff()
+        if backoff is None:
+            print("restart budget exhausted", file=sys.stderr)
+            return 1
+        print(f"[fault] {out['status']} at step {out['step']}; "
+              f"restarting (resume from checkpoint)")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,214 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, shared experts,
+dense-residual branch (Arctic), first-k-dense layers (DeepSeek).
+
+Baseline dispatch is the GShard/T5X einsum formulation (one-hot dispatch /
+combine tensors): fully SPMD-friendly — resharding the (groups, experts,
+capacity, d) tensor from group-sharded to expert-sharded lowers to an
+all-to-all on the expert axis.  A gather-based "sparse dispatch" variant
+(``dispatch_impl='gather'``) removes the one-hot matmul FLOPs; it is the
+beyond-paper optimization evaluated in EXPERIMENTS.md §Perf.
+
+Groups: tokens are grouped per batch row (G=B), each group dispatches
+independently with capacity C = ceil(S * top_k / E * capacity_factor).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (also the non-MoE path)
+# ---------------------------------------------------------------------------
+
+def ffn_init(rng, cfg: ModelConfig, d_ff: int, *, expert_dim: int = 0):
+    """Plain (or stacked, if expert_dim>0) GLU/MLP weights.
+
+    Expert weights use distinct logical axes ("expert", "expert_embed",
+    "expert_mlp") so rules can shard experts over one mesh axis and the inner
+    dim over another without colliding with the dense "embed"/"mlp" rules.
+    """
+    import jax.random as jr
+
+    from repro.distribution.partitioning import Annotated
+
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    lead: Tuple = (expert_dim,) if expert_dim else ()
+    lg: Tuple = ("expert",) if expert_dim else ()
+    ax_d = "expert_embed" if expert_dim else "embed"
+    ax_f = "expert_mlp" if expert_dim else "mlp"
+
+    def w(rng_, shape, logical):
+        std = 1.0 / math.sqrt(shape[-2])
+        arr = jr.normal(rng_, lead + shape) * std
+        return Annotated(arr, lg + logical)
+
+    p = {
+        "w_up": w(ks[0], (d, d_ff), (ax_d, ax_f)),
+        "w_down": w(ks[1], (d_ff, d), (ax_f, ax_d)),
+    }
+    if cfg.glu:
+        p["w_gate"] = w(ks[2], (d, d_ff), (ax_d, ax_f))
+    return p
+
+
+def ffn_apply(p, cfg: ModelConfig, x):
+    act = L.activation(cfg.act)
+    up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    if cfg.glu:
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def _expert_ffn(p, cfg: ModelConfig, x):
+    """x: (E, C*, d) batched over the leading expert dim of stacked weights."""
+    act = L.activation(cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", x, p["w_up"].astype(x.dtype))
+    if cfg.glu:
+        gate = jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+def moe_init(rng, cfg: ModelConfig):
+    mo = cfg.moe
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": L.dense_init(ks[0], cfg.d_model, mo.num_experts,
+                               ("embed", None), std=0.02),
+        "experts": ffn_init(ks[1], cfg, mo.expert_d_ff,
+                            expert_dim=mo.num_experts),
+    }
+    if mo.num_shared_experts:
+        p["shared"] = ffn_init(
+            ks[2], cfg, mo.num_shared_experts * (mo.shared_d_ff or mo.expert_d_ff))
+    if mo.dense_residual:
+        p["dense"] = ffn_init(ks[3], cfg,
+                              mo.dense_residual_d_ff or cfg.d_ff)
+    return p
+
+
+def capacity(mo: MoEConfig, group_tokens: int) -> int:
+    c = int(group_tokens * mo.top_k / mo.num_experts * mo.capacity_factor)
+    return max(c, 1)
+
+
+def _routing(p, mo: MoEConfig, xg):
+    """xg: (G,T,d) -> gates (G,T,k), idx (G,T,k), probs (G,T,E) fp32."""
+    # keep x in its wire dtype; accumulate in f32 (upcasting x first hoists
+    # the convert above the SP all-gather and doubles wire bytes)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, mo.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return gate_vals, idx, probs
+
+
+def _capacity_positions(idx, gate_vals, E: int, C: int):
+    """Slot-by-slot capacity assignment (GShard).  Returns
+    (pos, keep): pos (G,T,k) int32 position-in-expert, keep (G,T,k) bool."""
+    G, T, K = idx.shape
+    counts = jnp.zeros((G, E), jnp.int32)
+    poss, keeps = [], []
+    for j in range(K):
+        oh = jax.nn.one_hot(idx[:, :, j], E, dtype=jnp.int32)     # (G,T,E)
+        pos_e = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # (G,T,E)
+        pos = jnp.sum(pos_e * oh, axis=-1)                        # (G,T)
+        keep = pos < C
+        counts = counts + jnp.sum(oh * keep[..., None].astype(jnp.int32), axis=1)
+        poss.append(pos)
+        keeps.append(keep)
+    return jnp.stack(poss, -1), jnp.stack(keeps, -1)
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, dispatch_impl: str = "einsum"):
+    """x: (B,S,d) -> (y, aux_loss)."""
+    mo = cfg.moe
+    B0, S0, d = x.shape
+    # regroup tokens: dispatch memory is (G,T,E,C) with C ∝ T, i.e. linear in
+    # the group size — GShard-style groups bound it (DESIGN.md §6).
+    g = mo.group_size
+    if g and S0 > g and S0 % g == 0:
+        x = x.reshape(B0 * (S0 // g), g, d)
+    B, S, _ = x.shape
+    E = mo.num_experts
+    C = capacity(mo, S)
+    xg = x
+    gate_vals, idx, probs = _routing(p, mo, xg)
+    pos, keep = _capacity_positions(idx, gate_vals, E, C)
+
+    if dispatch_impl == "einsum":
+        # combine tensor (G,T,E,C): gate weight at (expert, position) slots,
+        # built in the activation dtype (fp32 here doubles peak memory).
+        adt = x.dtype
+        combine = jnp.zeros((B, S, E, C), adt)
+        for j in range(mo.top_k):
+            oh_e = jax.nn.one_hot(idx[:, :, j], E, dtype=adt)
+            oh_c = jax.nn.one_hot(pos[:, :, j], C, dtype=adt)
+            w = (gate_vals[:, :, j] * keep[:, :, j]).astype(adt)
+            combine = combine + w[..., None, None] * \
+                (oh_e[..., :, None] * oh_c[..., None, :])
+        dispatch = (combine > 0).astype(x.dtype)
+        expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, x)   # a2a g->e
+        eo = _expert_ffn(p["experts"], cfg,
+                         expert_in.transpose(1, 0, 2, 3).reshape(E, B * C, d))
+        expert_out = eo.reshape(E, B, C, d).transpose(1, 0, 2, 3)  # (G,E,C,d)
+        y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    elif dispatch_impl == "gather":
+        # Sparse dispatch: build (G,E,C) source-token index via scatter, then
+        # pure gathers — no one-hot matmul FLOPs (EXPERIMENTS.md §Perf).
+        src = jnp.zeros((B, E, C), jnp.int32)
+        has = jnp.zeros((B, E, C), x.dtype)
+        g_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+        for j in range(mo.top_k):
+            e_j, p_j, k_j = idx[:, :, j], pos[:, :, j], keep[:, :, j]
+            p_safe = jnp.where(k_j, p_j, C)        # dropped -> OOB (ignored)
+            src = src.at[g_idx, e_j, p_safe].set(
+                jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)),
+                mode="drop")
+            has = has.at[g_idx, e_j, p_safe].set(1.0, mode="drop")
+        expert_in = jnp.take_along_axis(
+            x[:, None, :, :],                       # (G,1,T,d)
+            src[..., None].clip(0, S - 1), axis=2) * has[..., None]
+        eo = _expert_ffn(p["experts"], cfg,
+                         expert_in.transpose(1, 0, 2, 3).reshape(E, B * C, d))
+        expert_out = eo.reshape(E, B, C, d).transpose(1, 0, 2, 3)  # (G,E,C,d)
+        y = jnp.zeros_like(x)
+        for j in range(mo.top_k):
+            e_j, p_j = idx[:, :, j], pos[:, :, j]
+            w = (gate_vals[:, :, j] * keep[:, :, j]).astype(x.dtype)
+            t_out = jnp.take_along_axis(
+                expert_out.reshape(B, E * C, d),
+                (e_j * C + p_j.clip(0, C - 1))[..., None], axis=1)
+            y = y + w[..., None] * t_out
+    else:
+        raise ValueError(dispatch_impl)
+
+    # auxiliary load-balance loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    oh0 = jax.nn.one_hot(idx[:, :, 0], E, dtype=jnp.float32)
+    fe = jnp.mean(oh0, axis=(0, 1))
+    aux = E * jnp.sum(fe * me)
+
+    if mo.num_shared_experts:
+        y = y + ffn_apply(p["shared"], cfg, x)
+    if mo.dense_residual:
+        y = y + ffn_apply(p["dense"], cfg, x)
+    return y.reshape(B0, S0, d), aux

@@ -1,0 +1,447 @@
+"""Mamba-1 selective SSM block (arXiv:2312.00752), JAX-native.
+
+The selective scan is computed *chunked*: a lax.scan over sequence chunks
+carrying the (B, d_inner, N) state, with an associative scan inside each
+chunk.  This never materializes the (B, S, d_inner, N) state expansion over
+the full sequence — the TPU analogue of Mamba's "hardware-aware" kernel
+(DESIGN.md §6) — and is exactly the algorithm the Pallas kernel in
+``repro.kernels.mamba_scan`` implements in VMEM.
+
+Decode is O(1): one conv-window shift + one state update per token.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distribution.partitioning import Annotated
+from repro.models import layers as L
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.d_inner or s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.state_dim, s.conv_width
+
+
+def mamba_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, dt_rank, n, w = dims(cfg)
+    ks = jax.random.split(rng, 8)
+    # dt_proj init per Mamba reference: bias s.t. softplus(bias) in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[0], (d_in,)) *
+                 (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))       # inverse softplus
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))
+    return {
+        "in_proj": L.dense_init(ks[1], d, 2 * d_in, ("embed", "ssm_inner")),
+        "conv_w": Annotated(
+            jax.random.normal(ks[2], (w, d_in)) / math.sqrt(w),
+            ("conv_w", "ssm_inner")),
+        "conv_b": L.bias_init(d_in, ("ssm_inner",)),
+        "x_proj": L.dense_init(ks[3], d_in, dt_rank + 2 * n, ("ssm_inner", None)),
+        "dt_proj": L.dense_init(ks[4], dt_rank, d_in, (None, "ssm_inner"),
+                                std=dt_rank ** -0.5),
+        "dt_bias": Annotated(dt_bias, ("ssm_inner",)),
+        "A_log": Annotated(jnp.log(a), ("ssm_inner", "state")),
+        "D": Annotated(jnp.ones((d_in,)), ("ssm_inner",)),
+        "out_proj": L.dense_init(ks[5], d_in, d, ("ssm_inner", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan(deltaA, deltaBx, h0, chunk: int = 128):
+    """h_t = deltaA_t * h_{t-1} + deltaBx_t, returns (h_all, h_last).
+
+    deltaA, deltaBx: (B, S, D, N); h0: (B, D, N).
+    lax.scan over ceil(S/chunk) chunks; associative scan within a chunk.
+    """
+    B, S, D, N = deltaA.shape
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        deltaA = jnp.pad(deltaA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+        deltaBx = jnp.pad(deltaBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dA = deltaA.reshape(B, nchunk, chunk, D, N).transpose(1, 0, 2, 3, 4)
+    dBx = deltaBx.reshape(B, nchunk, chunk, D, N).transpose(1, 0, 2, 3, 4)
+
+    def combine(a, b):
+        # composition of affine maps h -> a1*h + b1 then h -> a2*h + b2
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    def body(h, xs):
+        da, dbx = xs                                   # (B, chunk, D, N)
+        pa, ph = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = ph + pa * h[:, None]                   # inject carry
+        return h_all[:, -1], h_all
+
+    # checkpoint the chunk step: the backward recomputes the in-chunk
+    # associative scan instead of saving every scan level — only chunk-
+    # boundary states persist (the Mamba hardware-aware-scan property).
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, h_chunks = jax.lax.scan(body, h0, (dA, dBx))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * chunk, D, N)
+    return h_all[:, :S], h_last
+
+
+# ---------------------------------------------------------------------------
+# fused selective scan with recompute backward (hillclimb variant;
+# EXPERIMENTS.md §Perf).  Boundary: (x, dt, b, c) -> y.  The forward computes
+# per-chunk discretization + scan + C-projection without ever writing the
+# (B, S, D, N) state expansion to HBM; the backward saves only chunk-boundary
+# states and recomputes within-chunk states — the Mamba hardware-aware-kernel
+# contract, here in jnp so the dry-run prices it.
+# ---------------------------------------------------------------------------
+
+def _affine_combine(a, b):
+    a1, b1 = a
+    a2, b2 = b
+    return a1 * a2, b1 * a2 + b2
+
+
+def _chunk_states(da, dbx, h0):
+    """Within-chunk states via associative scan. Returns (h_all, h_last)."""
+    pa, ph = jax.lax.associative_scan(_affine_combine, (da, dbx), axis=1)
+    h_all = ph + pa * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def _fused_fwd_pass(x, dt, b, c, A, d_vec, chunk):
+    """Returns (y, boundary states (nchunk, B, D, N)).  Scan math runs in
+    fp32 (the kernel's VMEM accumulator dtype); I/O stays in x.dtype."""
+    B, S, D = x.shape
+    N = b.shape[-1]
+    nchunk = S // chunk
+    f32 = jnp.float32
+    xc = x.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3)
+    bc = b.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3)
+    cc = c.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3)
+    A32 = A.astype(f32)
+
+    def body(h, xs):
+        xk, dtk, bk, ck = xs
+        xk32, dtk32 = xk.astype(f32), dtk.astype(f32)
+        da = jnp.exp(dtk32[..., None] * A32)
+        dbx = (dtk32 * xk32)[..., None] * bk.astype(f32)[:, :, None, :]
+        h_all, h_last = _chunk_states(da, dbx, h)
+        yk = jnp.einsum("bsdn,bsn->bsd", h_all, ck.astype(f32)) \
+            + d_vec.astype(f32) * xk32
+        return h_last, (yk.astype(x.dtype), h)
+
+    h0 = (dt[:, 0].astype(f32)[:, :, None] * A32) * 0.0   # sharded zeros
+    _, (yc, bounds) = jax.lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, S, D)
+    return y, bounds                                 # (nchunk, B, D, N)
+
+
+def _serial_fwd_pass(x, dt, b, c, A, d_vec, chunk):
+    """Fully serial scan with the C-projection folded into each step: the
+    only HBM traffic is streaming (x, dt, b, c) once and writing y — the
+    Pallas ``mamba_scan`` kernel's traffic contract, expressed in jnp so the
+    dry-run prices the kernel-equivalent implementation.  Chunk boundaries
+    are still saved for the recompute backward."""
+    B, S, D = x.shape
+    N = b.shape[-1]
+    nchunk = S // chunk
+    f32 = jnp.float32
+    A32 = A.astype(f32)
+    # time-leading layouts for the inner scans
+    xc = x.reshape(B, nchunk, chunk, D).transpose(1, 2, 0, 3)
+    dtc = dt.reshape(B, nchunk, chunk, D).transpose(1, 2, 0, 3)
+    bc = b.reshape(B, nchunk, chunk, N).transpose(1, 2, 0, 3)
+    cc = c.reshape(B, nchunk, chunk, N).transpose(1, 2, 0, 3)
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs                       # (B,D),(B,D),(B,N)x2
+        x32, dt32 = x_t.astype(f32), dt_t.astype(f32)
+        da = jnp.exp(dt32[:, :, None] * A32)           # (B,D,N)
+        h = da * h + (dt32 * x32)[:, :, None] * b_t.astype(f32)[:, None, :]
+        y_t = jnp.sum(h * c_t.astype(f32)[:, None, :], axis=-1) \
+            + d_vec.astype(f32) * x32
+        return h, y_t.astype(x.dtype)
+
+    def chunk_body(h, xs):
+        xk, dtk, bk, ck = xs                           # (chunk,B,·)
+        h_last, yk = jax.lax.scan(step, h, (xk, dtk, bk, ck))
+        return h_last, (yk, h)
+
+    # derive the zero carry from sharded operands: a plain jnp.zeros carry is
+    # replicated and drags the whole while-loop body to unsharded d_inner
+    # (16x redundant state math) — EXPERIMENTS.md §Perf falcon iter 3.
+    h0 = (dt[:, 0].astype(f32)[:, :, None] * A32) * 0.0
+    _, (yc, bounds) = jax.lax.scan(chunk_body, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(2, 0, 1, 3).reshape(B, S, D)
+    return y, bounds                                   # (nchunk, B, D, N)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def fused_selective_scan(x, dt, b, c, A, d_vec, chunk=128, serial=False):
+    fwd = _serial_fwd_pass if serial else _fused_fwd_pass
+    y, _ = fwd(x, dt, b, c, A, d_vec, chunk)
+    return y
+
+
+def _fss_fwd(x, dt, b, c, A, d_vec, chunk, serial):
+    fwd = _serial_fwd_pass if serial else _fused_fwd_pass
+    y, bounds = fwd(x, dt, b, c, A, d_vec, chunk)
+    return y, (x, dt, b, c, A, d_vec, bounds)
+
+
+def _fss_bwd_serial(chunk, res, gy):
+    """Serial recompute backward: per chunk, re-run the forward serially
+    (storing one chunk of states transiently), then a serial reverse sweep
+    for the gradients — kernel-equivalent HBM traffic."""
+    x, dt, b, c, A, d_vec, bounds = res
+    B, S, D = x.shape
+    N = b.shape[-1]
+    nchunk = S // chunk
+    f32 = jnp.float32
+    A32 = A.astype(f32)
+    d32 = d_vec.astype(f32)
+    xc = x.reshape(B, nchunk, chunk, D).transpose(1, 2, 0, 3).astype(f32)
+    dtc = dt.reshape(B, nchunk, chunk, D).transpose(1, 2, 0, 3).astype(f32)
+    bc = b.reshape(B, nchunk, chunk, N).transpose(1, 2, 0, 3).astype(f32)
+    cc = c.reshape(B, nchunk, chunk, N).transpose(1, 2, 0, 3).astype(f32)
+    gyc = gy.reshape(B, nchunk, chunk, D).transpose(1, 2, 0, 3).astype(f32)
+    bnd = bounds.astype(f32)                          # (nchunk, B, D, N)
+
+    def fstep(h, xs):
+        x_t, dt_t, b_t = xs
+        da = jnp.exp(dt_t[:, :, None] * A32)
+        h_new = da * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        return h_new, h                                # ys = h_{t-1}
+
+    def bstep(carry, xs):
+        g_in, dA_acc, dd_acc = carry
+        x_t, dt_t, b_t, c_t, gy_t, h_prev = xs
+        da = jnp.exp(dt_t[:, :, None] * A32)
+        h_t = da * h_prev + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        g_t = gy_t[:, :, None] * c_t[:, None, :] + g_in
+        dda = g_t * h_prev
+        ddt = jnp.sum(dda * (A32 * da), axis=-1) \
+            + jnp.sum(g_t * b_t[:, None, :], axis=-1) * x_t
+        dx = jnp.sum(g_t * b_t[:, None, :], axis=-1) * dt_t + d32 * gy_t
+        db = jnp.sum(g_t * (dt_t * x_t)[:, :, None], axis=1)
+        dc = jnp.sum(gy_t[:, :, None] * h_t, axis=1)
+        dA_acc = dA_acc + jnp.sum(dda * dt_t[:, :, None] * da, axis=0)
+        dd_acc = dd_acc + jnp.sum(gy_t * x_t, axis=0)
+        return (da * g_t, dA_acc, dd_acc), (dx, ddt, db, dc)
+
+    def chunk_body(carry, xs):
+        g_in, dA_acc, dd_acc = carry
+        xk, dtk, bk, ck, gk, h0 = xs
+        _, h_prevs = jax.lax.scan(fstep, h0, (xk, dtk, bk))  # (chunk,B,D,N)
+        (g_out, dA_acc, dd_acc), grads = jax.lax.scan(
+            bstep, (g_in, dA_acc, dd_acc),
+            (xk, dtk, bk, ck, gk, h_prevs), reverse=True)
+        return (g_out, dA_acc, dd_acc), grads
+
+    g0 = (dtc[0, 0][:, :, None] * A32) * 0.0              # sharded zeros
+    carry0 = (g0, A32 * 0.0, d32 * 0.0)
+    (_, dA_acc, dd_acc), grads = jax.lax.scan(
+        chunk_body, carry0, (xc, dtc, bc, cc, gyc, bnd), reverse=True)
+    dx_c, ddt_c, db_c, dc_c = grads                   # (nchunk, chunk, B, ·)
+
+    def unchunk(t, width):
+        return t.transpose(2, 0, 1, 3).reshape(B, S, width)
+
+    return (unchunk(dx_c, D).astype(x.dtype),
+            unchunk(ddt_c, D).astype(dt.dtype),
+            unchunk(db_c, N).astype(b.dtype),
+            unchunk(dc_c, N).astype(c.dtype),
+            dA_acc.astype(A.dtype), dd_acc.astype(d_vec.dtype))
+
+
+def _fss_bwd(chunk, serial, res, gy):
+    if serial:
+        return _fss_bwd_serial(chunk, res, gy)
+    x, dt, b, c, A, d_vec, bounds = res
+    B, S, D = x.shape
+    N = b.shape[-1]
+    nchunk = S // chunk
+    f32 = jnp.float32
+    xc = x.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3).astype(f32)
+    dtc = dt.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3).astype(f32)
+    bcm = b.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3).astype(f32)
+    ccm = c.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3).astype(f32)
+    gyc = gy.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3).astype(f32)
+    bnd = bounds.astype(f32)                         # (nchunk, B, D, N)
+    A32 = A.astype(f32)
+
+    def body(carry, xs):
+        gh_carry = carry                      # dL/dh at the chunk's end+1
+        xk, dtk, bk, ck, gk, h0 = xs
+        da = jnp.exp(dtk[..., None] * A32)
+        dbx = (dtk * xk)[..., None] * bk[:, :, None, :]
+        h_all, _ = _chunk_states(da, dbx, h0)            # recompute states
+        h_prev = jnp.concatenate([h0[:, None], h_all[:, :-1]], axis=1)
+        ghat = gk[..., None] * ck[:, :, None, :]          # dy/dh direct term
+        # reverse affine scan: g_t = ghat_t + a_{t+1} * g_{t+1}.  The carry
+        # from the next chunk arrives pre-multiplied (g_h0 below), so the
+        # reversed sequence's first coefficient is identity, NOT zero.
+        a_next = jnp.concatenate(
+            [da[:, 1:], jnp.ones_like(da[:, :1])], axis=1)
+        a_rev = a_next[:, ::-1]
+        g_rev = ghat[:, ::-1]
+        pa, pg = jax.lax.associative_scan(_affine_combine, (a_rev, g_rev),
+                                          axis=1)
+        g = (pg + pa * gh_carry[:, None])[:, ::-1]        # (B,chunk,D,N)
+        g_h0 = da[:, 0] * g[:, 0]                         # into previous chunk
+        dda = g * h_prev
+        ddbx = g
+        ddt = jnp.sum(dda * (A32 * da), axis=-1) \
+            + jnp.sum(ddbx * bk[:, :, None, :], axis=-1) * xk
+        dA_k = jnp.sum(dda * dtk[..., None] * da, axis=(0, 1))
+        dx_k = jnp.sum(ddbx * bk[:, :, None, :], axis=-1) * dtk \
+            + d_vec.astype(f32) * gk
+        db_k = jnp.sum(ddbx * (dtk * xk)[..., None], axis=2)
+        dc_k = jnp.einsum("bsd,bsdn->bsn", gk, h_all)
+        dd_k = jnp.sum(gk * xk, axis=(0, 1))
+        return g_h0, (dx_k, ddt, db_k, dc_k, dA_k, dd_k)
+
+    g_end = (dtc[0, :, 0][:, :, None] * A32) * 0.0        # sharded zeros
+    # process chunks in reverse
+    xs = (xc[::-1], dtc[::-1], bcm[::-1], ccm[::-1], gyc[::-1], bnd[::-1])
+    _, outs = jax.lax.scan(body, g_end, xs)
+    dx_c, ddt_c, db_c, dc_c, dA_c, dd_c = outs
+
+    def unchunk(t, width):
+        return t[::-1].transpose(1, 0, 2, 3).reshape(B, S, width)
+
+    dx = unchunk(dx_c, D).astype(x.dtype)
+    ddt = unchunk(ddt_c, D).astype(dt.dtype)
+    db = unchunk(db_c, N).astype(b.dtype)
+    dc = unchunk(dc_c, N).astype(c.dtype)
+    dA = jnp.sum(dA_c, axis=0).astype(A.dtype)
+    dd = jnp.sum(dd_c, axis=0).astype(d_vec.dtype)
+    return dx, ddt, db, dc, dA, dd
+
+
+fused_selective_scan.defvjp(_fss_fwd, _fss_bwd)
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv along S. x: (B,S,D); w: (W,D)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):  # W is 4 — unrolled taps, no conv primitive needed
+        out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inner(p, cfg, x_conv, h0, chunk, *, impl: str = "chunked"):
+    """Shared SSM math given conv output. Returns (y, h_last).
+
+    impl='chunked'  — baseline: materialize deltaA/deltaBx and the state
+                      expansion per chunk (checkpointed associative scan).
+    impl='fused'    — custom_vjp fused scan: per-chunk discretize + scan +
+                      C-project with recompute backward (no h_last; training
+                      forward only).  EXPERIMENTS.md §Perf.
+    """
+    d_in, dt_rank, n, _ = dims(cfg)
+    dbc = jnp.einsum("bsd,dk->bsk", x_conv, p["x_proj"].astype(x_conv.dtype))
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(x_conv.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))   # (B,S,Din)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (Din,N)
+    S = x_conv.shape[1]
+    if impl in ("fused", "fused_serial") and S % min(chunk, S) == 0:
+        y = fused_selective_scan(x_conv, dt, b_ssm, c_ssm, A,
+                                 p["D"].astype(jnp.float32),
+                                 min(chunk, S), impl == "fused_serial")
+        return y.astype(jnp.float32), None
+    deltaA = jnp.exp(dt[..., None] * A)                             # (B,S,Din,N)
+    deltaBx = (dt * x_conv.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[:, :, None, :]
+    h_all, h_last = selective_scan(deltaA, deltaBx, h0, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                   c_ssm.astype(jnp.float32))                       # (B,S,Din)
+    y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    return y, h_last
+
+
+def mamba_fwd(p, cfg: ModelConfig, x, *, chunk: int = 128,
+              impl: str = "chunked"):
+    """Full-sequence Mamba block. x: (B,S,d) -> (B,S,d)."""
+    d_in, _, n, _ = dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x_part, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_conv_causal(x_part, p["conv_w"], p["conv_b"]))
+    h0 = jnp.zeros((B, d_in, n), jnp.float32)
+    y, _ = _ssm_inner(p, cfg, x_conv, h0, chunk, impl=impl)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# stateful (serving) paths
+# ---------------------------------------------------------------------------
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_in, _, n, w = dims(cfg)
+    return {
+        "conv": Annotated(jnp.zeros((batch, w - 1, d_in), dtype),
+                          ("batch", None, "ssm_inner")),
+        "h": Annotated(jnp.zeros((batch, d_in, n), jnp.float32),
+                       ("batch", "ssm_inner", "state")),
+    }
+
+
+def mamba_prefill(p, cfg: ModelConfig, x, cache, *, chunk: int = 128):
+    d_in, _, n, w = dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x_part, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_conv_causal(x_part, p["conv_w"], p["conv_b"]))
+    h0 = jnp.zeros((B, d_in, n), jnp.float32)
+    y, h_last = _ssm_inner(p, cfg, x_conv, h0, chunk)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    new_cache = {
+        "conv": x_part[:, S - (w - 1):, :].astype(cache["conv"].dtype),
+        "h": h_last,
+    }
+    return out, new_cache
+
+
+def mamba_step(p, cfg: ModelConfig, x1, cache):
+    """One-token update. x1: (B,1,d)."""
+    d_in, dt_rank, n, w = dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x1, p["in_proj"].astype(x1.dtype))
+    x_part, z = jnp.split(xz, 2, axis=-1)                 # (B,1,Din)
+    window = jnp.concatenate([cache["conv"].astype(x1.dtype), x_part], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    x_conv = jax.nn.silu(xc)[:, None].astype(x1.dtype)    # (B,1,Din)
+    dbc = jnp.einsum("bsd,dk->bsk", x_conv, p["x_proj"].astype(x1.dtype))
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(x1.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,Din)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    deltaA = jnp.exp(dt[..., None] * A)                   # (B,Din,N)
+    deltaBx = (dt * x_conv[:, 0].astype(jnp.float32))[..., None] * \
+        b_ssm[:, 0].astype(jnp.float32)[:, None, :]
+    h = deltaA * cache["h"] + deltaBx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x1.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x1.dtype))
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h}
+    return out, new_cache

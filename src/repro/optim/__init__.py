@@ -1,0 +1,23 @@
+from repro.optim.base import (
+    AdafactorConfig,
+    AdamWConfig,
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.compression import (
+    ErrorFeedback,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdafactorConfig", "AdamWConfig", "Optimizer", "adafactor", "adamw",
+    "clip_by_global_norm", "cosine_schedule", "global_norm", "make_optimizer",
+    "ErrorFeedback", "compressed_psum", "dequantize_int8", "quantize_int8",
+]

@@ -1,0 +1,178 @@
+"""Functional optimizers with sharding-aware state pytrees.
+
+Optimizer state mirrors the parameter tree, so state leaves inherit the
+parameter's logical sharding (ZeRO-3: fully sharded optimizer state for
+free).  ``make_optimizer(cfg)`` picks AdamW (default) or factored Adafactor
+(>=100B archs: arctic-480b, qwen1.5-110b — DESIGN.md §6.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]   # (grads, state, params, lr)
+
+
+# ---------------------------------------------------------------------------
+# gradient utilities
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"       # bf16 states = distributed-memory trick
+
+
+def adamw(cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+            mh = m32 / b1c
+            vh = v32 / b2c
+            step = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:      # decoupled weight decay on matrices only
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step
+            return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        newp = jax.tree.map(lambda t: t[0], flat,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], flat,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t: t[2], flat,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, beta1=0) — O(n+m) state for (n,m) params
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8          # t^-decay running-average schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def adafactor(cfg: AdafactorConfig = AdafactorConfig()) -> Optimizer:
+    def init(params):
+        def make(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(make, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-cfg.decay)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + cfg.eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + cfg.eps)
+                cfac = jax.lax.rsqrt(vc + cfg.eps)
+                step = g32 * rfac[..., None] * cfac[..., None, :]
+                newv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                step = g32 * jax.lax.rsqrt(vv + cfg.eps)
+                newv = {"v": vv}
+            # update clipping (rms of step <= threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / cfg.clip_threshold)
+            if cfg.weight_decay and p.ndim >= 2:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step
+            return newp.astype(p.dtype), newv
+
+        flat = jax.tree.map(upd, grads, state["v"], params)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        newp = jax.tree.map(lambda t: t[0], flat, is_leaf=is_pair)
+        newv = jax.tree.map(lambda t: t[1], flat, is_leaf=is_pair)
+        return newp, {"v": newv, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name == "adamw":
+        return adamw(AdamWConfig(**kwargs))
+    if name == "adafactor":
+        return adafactor(AdafactorConfig(**kwargs))
+    raise ValueError(name)

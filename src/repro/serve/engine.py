@@ -1,0 +1,208 @@
+"""Batched serving engine with continuous batching and a FlexArena-backed
+slot allocator.
+
+The FILCO connection: serving-time KV/workspace memory is exactly the
+diverse-workload storage problem the FMU solves — requests of wildly
+different prompt lengths share one flat arena through runtime views instead
+of per-request padded buffers.  The engine tracks per-request views in a
+host-side FlexArena whose capacity mirrors the device cache pool, so
+admission control (can this prompt fit?) is the paper's Fig. 5(b) check.
+
+Decode state on device is a fixed pool of batch slots (functional pytree,
+jit-friendly); prefill fills a slot, decode steps advance all live slots in
+lock-step (continuous batching: slots join/leave between steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.arena import FlexArena, ROLE_ACT
+from repro.distribution import partitioning as part
+from repro.models.model import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # prompt
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    view: Any = None                    # arena view (admission accounting)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4                 # concurrent decode slots
+    max_len: int = 128                 # per-slot cache capacity
+    eos_id: int = 0
+    greedy: bool = True
+    prefill_bucket: int = 32           # prompts padded up to this length
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: PyTree, cfg: ServeConfig,
+                 mesh=None, rules: Optional[part.ShardingRules] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.mesh = mesh
+        mc = model.cfg
+        # per-layer per-token KV elements (admission accounting)
+        if mc.mla is not None:
+            per_tok = mc.mla.kv_lora_rank + mc.mla.qk_rope_head_dim
+        elif mc.attention_free:
+            per_tok = 0
+        else:
+            per_tok = 2 * mc.num_kv_heads * mc.resolved_head_dim
+        self._per_token_elems = max(per_tok, 1) * mc.num_layers
+        self.arena = FlexArena(
+            cfg.max_slots * cfg.max_len * self._per_token_elems)
+        self._queue: List[Request] = []
+        self._active: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._free_slots = list(range(cfg.max_slots))
+        # one pooled cache for all slots
+        self.cache = part.strip(model.init_cache(cfg.max_slots, cfg.max_len))
+        self._prefill_jit = jax.jit(self._prefill_one, static_argnums=(3,))
+        self._decode_jit = jax.jit(self._decode_all)
+        self._pos = np.zeros(cfg.max_slots, np.int32)   # per-slot next index
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(tokens, np.int32),
+                                   max_new_tokens))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _prefill_one(self, params, cache, tokens, true_len: int):
+        """Prefill a single-slot cache with a (1, bucket) padded prompt."""
+        batch = {"tokens": tokens}
+        logits, cache = self.model.prefill(params, batch, cache,
+                                           true_len=true_len)
+        return logits, cache
+
+    def _decode_all(self, params, cache, tokens, live_mask):
+        logits, cache = self.model.decode_step(params, cache, tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(live_mask, nxt, 0)
+        return nxt, cache
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        while self._queue and self._free_slots:
+            req = self._queue[0]
+            need = (len(req.tokens) + req.max_new_tokens)
+            if need > self.cfg.max_len:
+                req.done = True
+                self._queue.pop(0)
+                continue
+            try:
+                view = self.arena.alloc(need, self._per_token_elems, ROLE_ACT)
+            except Exception:
+                break  # arena full: stay queued (admission control)
+            self._queue.pop(0)
+            req.view = view
+            req.slot = self._free_slots.pop(0)
+            self._active[req.slot] = req
+            self._prefill_into_slot(req)
+
+    def _prefill_into_slot(self, req: Request) -> None:
+        """Prefill one request into its slot.
+
+        Attention archs: pad to the bucket and pass true_len (garbage KV
+        beyond true_len is masked by per-row cache_len and overwritten by
+        subsequent decodes).  SSM/hybrid archs carry recurrent state that
+        padding would corrupt, so they prefill at the exact prompt length
+        (bounded recompiles: one per distinct length)."""
+        L = len(req.tokens)
+        padded_ok = self.model.cfg.ssm is None
+        if padded_ok:
+            bucket = max(self.cfg.prefill_bucket, 8)
+            nb = -(-L // bucket) * bucket
+        else:
+            nb = L
+        toks = np.zeros((1, nb), np.int32)
+        toks[0, :L] = req.tokens
+        single = part.strip(self.model.init_cache(1, self.cfg.max_len))
+        logits, single = self._prefill_jit(self.params, single,
+                                           jnp.asarray(toks), L)
+        self.cache = _write_slot(self.cache, single, req.slot)
+        self._pos[req.slot] = L
+        first = int(jax.device_get(jnp.argmax(logits[0])))
+        req.out_tokens.append(first)
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration: admit -> decode all live slots.
+        Returns [(rid, token)] emitted this step."""
+        self._admit()
+        if not self._active:
+            return []
+        B = self.cfg.max_slots
+        toks = np.zeros((B, 1), np.int32)
+        live = np.zeros((B,), bool)
+        for slot, req in self._active.items():
+            toks[slot, 0] = req.out_tokens[-1]
+            live[slot] = True
+        nxt, self.cache = self._decode_jit(self.params, self.cache,
+                                           jnp.asarray(toks),
+                                           jnp.asarray(live))
+        nxt = np.asarray(jax.device_get(nxt))
+        emitted = []
+        for slot in list(self._active):
+            req = self._active[slot]
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            emitted.append((req.rid, tok))
+            if tok == self.cfg.eos_id or \
+               len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.arena.free_view(req.view)
+                self._free_slots.append(slot)
+                del self._active[slot]
+        return emitted
+
+    def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            if not self._queue and not self._active:
+                break
+            self.step()
+        for req in list(self._active.values()) + self._queue:
+            out[req.rid] = req.out_tokens
+        return out
+
+    def results(self) -> Dict[int, List[int]]:
+        return {}
+
+
+def _write_slot(pool_cache: PyTree, single_cache: PyTree, slot: int) -> PyTree:
+    """Copy a 1-batch cache into slot `slot` of the pooled cache."""
+    def write(pool, one):
+        if not hasattr(pool, "ndim") or pool.ndim == 0:
+            return pool
+        # leaves have either (slots, ...) batch-leading or (L, slots, ...)
+        if pool.ndim == one.ndim and pool.shape[0] != one.shape[0]:
+            return jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype),
+                (slot,) + (0,) * (pool.ndim - 1))
+        if pool.ndim >= 2 and one.ndim == pool.ndim and \
+           pool.shape[1] != one.shape[1]:
+            return jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype),
+                (0, slot) + (0,) * (pool.ndim - 2))
+        return pool
+
+    return jax.tree.map(write, pool_cache, single_cache)

@@ -1,0 +1,10 @@
+from repro.train import checkpoint, fault
+from repro.train.trainer import (
+    TrainConfig,
+    Trainer,
+    make_train_step,
+    setup_sharded_state,
+)
+
+__all__ = ["checkpoint", "fault", "TrainConfig", "Trainer", "make_train_step",
+           "setup_sharded_state"]

@@ -1,0 +1,104 @@
+"""Sharded checkpointing with elastic resharding.
+
+Format: a directory per step containing
+  manifest.json — step, mesh shape/axes, flat tree structure + dtypes/shapes
+  <leaf-path>.npy — one array per pytree leaf (gathered; production would
+                    write per-shard slices, same manifest contract)
+
+Restore places every leaf onto the *current* mesh with the *current* rules —
+the mesh may differ from the save-time mesh (elastic scaling: N pods -> M
+pods), since the manifest stores logical shapes, not device layouts.
+Atomicity: written to ``<dir>.tmp`` then renamed; ``latest_step`` scans for
+complete checkpoints only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append((_SEP.join(keys), leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write checkpoint atomically. Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace(_SEP, "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][name] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree, *,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore into the structure of `like`; optionally place each leaf with
+    the given shardings pytree (elastic: any mesh, any rules)."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [n for n, _ in _flatten_with_paths(like)]
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {missing[:5]}...")
+    leaves = []
+    for name in names:
+        meta = manifest["leaves"][name]
+        arr = np.load(os.path.join(final, meta["file"]))
+        leaves.append(arr)
+    treedef = jax.tree.structure(like)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest["extra"]

@@ -1,0 +1,224 @@
+"""Trainer: jit-compiled train step with microbatch accumulation, sharded
+params/optimizer state, checkpointing, preemption and straggler handling.
+
+``make_train_step`` builds the pure step function (used directly by the
+dry-run); :class:`Trainer` wraps it with the host-side production loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.distribution import partitioning as part
+from repro.models.model import Model
+from repro.optim import base as optim
+from repro.train import checkpoint as ckpt_lib
+from repro.train import fault
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    grad_clip: float = 1.0
+    microbatches: int = 1            # gradient accumulation
+    log_every: int = 10
+    checkpoint_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    attn_impl: str = "blockwise"
+    moe_dispatch: str = "einsum"
+    ssm_impl: str = "chunked"
+    attn_block: int = 512
+
+
+def make_train_step(model: Model, opt: optim.Optimizer, cfg: TrainConfig,
+                    *, residual_spec=None) -> Callable:
+    """(params, opt_state, step, batch) -> (params, opt_state, metrics).
+
+    With cfg.microbatches > 1, the batch's leading dim is split and gradients
+    are accumulated in a lax.scan (constant memory in microbatch count)."""
+    lr_fn = optim.cosine_schedule(cfg.lr, cfg.warmup, cfg.steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(
+            params, batch, attn_impl=cfg.attn_impl,
+            moe_dispatch=cfg.moe_dispatch, residual_spec=residual_spec,
+            ssm_impl=cfg.ssm_impl, attn_block=cfg.attn_block)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step_fn(params, opt_state, step, batch):
+        if cfg.microbatches > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((cfg.microbatches,
+                                     x.shape[0] // cfg.microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / cfg.microbatches,
+                    gacc, grads)
+                return (gacc, lacc + loss / cfg.microbatches), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (gzero, jnp.zeros(())), micro)
+            metrics = {"xent": loss, "aux": jnp.zeros(())}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads, gnorm = optim.clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_fn(step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        out = dict(metrics)
+        out.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return params, opt_state, out
+
+    return step_fn
+
+
+def setup_sharded_state(model: Model, opt: optim.Optimizer, mesh: Mesh,
+                        rules: part.ShardingRules, rng
+                        ) -> Tuple[PyTree, PyTree, PyTree, PyTree]:
+    """Init params + opt state directly into their target shardings.
+
+    Returns (params, opt_state, param_shardings, opt_shardings)."""
+    annotated = jax.eval_shape(model.init, rng)
+    param_sh = part.shardings(annotated, mesh, rules)
+
+    def init_stripped(r):
+        return part.strip(model.init(r))
+
+    with mesh:
+        params = jax.jit(init_stripped, out_shardings=param_sh)(rng)
+        opt_shapes = jax.eval_shape(opt.init, params)
+        opt_sh = _derive_opt_shardings(opt_shapes, params, param_sh, mesh)
+        opt_state = jax.jit(opt.init, out_shardings=opt_sh)(params)
+    return params, opt_state, param_sh, opt_sh
+
+
+def _derive_opt_shardings(opt_shapes, params, param_sh, mesh):
+    """Optimizer leaves mirroring a param shape inherit its sharding;
+    factored/scalar leaves are replicated (tiny)."""
+    shape_to_sh = {}
+    for p, s in zip(jax.tree.leaves(params), jax.tree.leaves(param_sh)):
+        shape_to_sh.setdefault(p.shape, s)
+    rep = NamedSharding(mesh, P())
+
+    def pick(leaf):
+        return shape_to_sh.get(leaf.shape, rep)
+
+    return jax.tree.map(pick, opt_shapes)
+
+
+class Trainer:
+    """Production loop: data -> jitted step -> metrics/checkpoints/fault
+    handling.  CPU-runnable end-to-end with reduced configs."""
+
+    def __init__(self, model: Model, cfg: TrainConfig, mesh: Optional[Mesh],
+                 rules: Optional[part.ShardingRules] = None,
+                 pipeline: Optional[SyntheticLM] = None):
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules or part.single_device_rules()
+        self.pipeline = pipeline
+        self.opt = optim.make_optimizer(model.cfg.optimizer)
+        self.guard = fault.PreemptionGuard(install_signal=False)
+        self.watchdog = fault.StragglerWatchdog()
+        self.metrics_log: list = []
+        residual_spec = None
+        if mesh is not None and self.rules.rules.get("act_seq"):
+            residual_spec = self.rules.spec(("batch", "act_seq", None))
+        self._step_fn = make_train_step(model, self.opt, cfg,
+                                        residual_spec=residual_spec)
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        rng = jax.random.key(seed)
+        if self.mesh is not None:
+            params, opt_state, psh, osh = setup_sharded_state(
+                self.model, self.opt, self.mesh, self.rules, rng)
+            self._jit_step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+        else:
+            params = part.strip(self.model.init(rng))
+            opt_state = self.opt.init(params)
+            self._jit_step = jax.jit(self._step_fn, donate_argnums=(0, 1))
+        return params, opt_state
+
+    def restore_or_init(self, seed: int = 0):
+        step0 = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        params, opt_state = self.init_state(seed)
+        if step0 is None:
+            return params, opt_state, 0
+        state, extra = ckpt_lib.restore(
+            self.cfg.ckpt_dir, step0,
+            {"params": params, "opt": opt_state})
+        return state["params"], state["opt"], int(extra.get("next_step", step0))
+
+    # ------------------------------------------------------------------
+    def fit(self, params=None, opt_state=None, start_step: int = 0,
+            steps: Optional[int] = None) -> Dict[str, Any]:
+        if params is None:
+            params, opt_state, start_step = self.restore_or_init(self.cfg.seed)
+        total = steps if steps is not None else self.cfg.steps
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        step = start_step
+        status = "completed"
+        with ctx:
+            while step < total:
+                t0 = time.monotonic()
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.pipeline.batch(step).items()}
+                if self.model.cfg.is_encdec and "frames" not in batch:
+                    batch = {k: jnp.asarray(v) for k, v in
+                             self.pipeline.batch_with_frames(
+                                 step, self.model.cfg.d_model).items()}
+                params, opt_state, metrics = self._jit_step(
+                    params, opt_state, jnp.asarray(step), batch)
+                dur = time.monotonic() - t0
+                action = self.watchdog.observe(step, dur)
+                if step % self.cfg.log_every == 0 or step == total - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m.update({"step": step, "sec": dur})
+                    self.metrics_log.append(m)
+                step += 1
+                want_ckpt = (step % self.cfg.checkpoint_every == 0
+                             or step == total)
+                if self.guard.check() or \
+                   action == fault.ACTION_CHECKPOINT_AND_RESHARD:
+                    ckpt_lib.save(self.cfg.ckpt_dir, step,
+                                  {"params": params, "opt": opt_state},
+                                  extra={"next_step": step, "reason": action})
+                    status = ("preempted" if self.guard.check()
+                              else "straggler_reshard")
+                    break
+                if want_ckpt:
+                    ckpt_lib.save(self.cfg.ckpt_dir, step,
+                                  {"params": params, "opt": opt_state},
+                                  extra={"next_step": step})
+        return {"params": params, "opt_state": opt_state, "step": step,
+                "status": status, "metrics": self.metrics_log}
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real (single) CPU device — only the dry-run fakes 512.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

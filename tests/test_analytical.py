@@ -1,0 +1,99 @@
+"""Analytical model: design-point behavior must reproduce the paper's
+qualitative claims (Fig. 1, §4.2)."""
+import pytest
+
+from repro.common.platform import TPU_V5E, VCK190
+from repro.configs.paper_workloads import (DEIT_B, MLP_L, MLP_S, POINTNET,
+                                           BERT_32, BERT_512)
+from repro.core.analytical import (best_accel_latency, charm_monolithic,
+                                   charm_three, charm_two, filco_ablation,
+                                   filco_vck190, layer_latency, rsn_overlay)
+
+WORKLOADS = [MLP_L, MLP_S, DEIT_B, POINTNET, BERT_32, BERT_512]
+
+
+def throughput(accels, wl):
+    t = sum(best_accel_latency(accels, VCK190, l.m, l.k, l.n).total_s
+            for l in wl.layers)
+    return wl.total_flops / t
+
+
+@pytest.fixture(scope="module")
+def table():
+    systems = {
+        "CHARM-1": charm_monolithic(), "CHARM-2": charm_two(),
+        "CHARM-3": charm_three(), "RSN": rsn_overlay(),
+        "FILCO": [filco_vck190()],
+    }
+    return {name: {wl.name: throughput(acc, wl) for wl in WORKLOADS}
+            for name, acc in systems.items()}
+
+
+def test_filco_dominates_everywhere(table):
+    for wl in WORKLOADS:
+        best_other = max(table[s][wl.name] for s in table if s != "FILCO")
+        assert table["FILCO"][wl.name] >= 0.99 * best_other, wl.name
+
+
+def test_charm1_peaks_on_large_uniform_but_collapses(table):
+    c1 = table["CHARM-1"]
+    # peak on MLP-L, severe degradation on small/diverse (paper Fig. 1 (1))
+    assert c1["MLP-L"] > 10 * c1["MLP-S"]
+    assert c1["MLP-L"] > 10 * c1["PointNet-L"]
+
+
+def test_charm_partitioning_trades_peak_for_robustness(table):
+    # CHARM-2/3 beat CHARM-1 on small workloads but lose the MLP-L peak
+    assert table["CHARM-2"]["MLP-S"] > table["CHARM-1"]["MLP-S"]
+    assert table["CHARM-2"]["MLP-L"] < table["CHARM-1"]["MLP-L"]
+
+
+def test_rsn_between_charm_and_filco_on_diverse(table):
+    for wl in ("DeiT-L", "MLP-S"):
+        assert table["RSN"][wl] > table["CHARM-1"][wl]
+        assert table["FILCO"][wl] > table["RSN"][wl]
+
+
+def test_paper_speedup_envelope(table):
+    """1.3x–5x+ gains on diverse workloads vs CHARM/RSN (paper abstract)."""
+    gains = []
+    for wl in ("MLP-S", "PointNet-L", "BERT-32"):
+        for s in ("CHARM-1", "RSN"):
+            gains.append(table["FILCO"][wl] / table[s][wl])
+    assert max(gains) >= 3.0
+    assert min(gains) >= 1.2
+
+
+def test_ablation_ordering():
+    """Each FILCO feature adds throughput on a small diverse MM (Fig. 10)."""
+    m, k, n = 96, 768, 96
+    lat = {}
+    for tag, acc in [
+        ("fp", filco_ablation(fp=True)),
+        ("fp+fmf", filco_ablation(fp=True, fmf=True)),
+        ("fp+fmf+fmv", filco_ablation(fp=True, fmf=True, fmv=True)),
+    ]:
+        lat[tag] = layer_latency(acc, VCK190, m, k, n).total_s
+    assert lat["fp+fmf+fmv"] <= lat["fp+fmf"] <= lat["fp"]
+    assert lat["fp+fmf+fmv"] < lat["fp"]
+
+
+def test_flexible_parallelism_efficiency_crossover():
+    """FP: small MMs waste no atoms; static pays the full tile (Fig. 8)."""
+    flex = filco_vck190()
+    static = charm_monolithic()[0]
+    small = layer_latency(flex, VCK190, 16, 24, 16)
+    small_static = layer_latency(static, VCK190, 16, 24, 16)
+    assert small.flops_issued < small_static.flops_issued / 100
+    big = layer_latency(flex, VCK190, 2048, 2048, 2048)
+    big_static = layer_latency(static, VCK190, 2048, 2048, 2048)
+    assert big.flops_issued == pytest.approx(big_static.flops_issued, rel=0.01)
+
+
+def test_tpu_profile_scales():
+    """The same model prices a TPU design point (profile swap, Fig. 6)."""
+    acc = filco_vck190()
+    v = layer_latency(acc, VCK190, 1024, 1024, 1024)
+    t = layer_latency(acc, TPU_V5E, 1024, 1024, 1024)
+    assert t.total_s < v.total_s        # v5e is simply faster
+    assert t.flops_valid == v.flops_valid

@@ -1,0 +1,87 @@
+"""FlexArena (FMU) tests: views never overlap, shape-agnostic storage (FMV),
+role fungibility (FMF), device-side store/load roundtrips."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arena as ar
+
+
+def test_same_bytes_any_shape():
+    """256x256 and 128x512 occupy identical storage (paper Fig. 4b)."""
+    a = ar.FlexArena(capacity=256 * 256)
+    v1 = a.alloc(256, 256)
+    assert a.free == 0
+    a.free_view(v1)
+    v2 = a.alloc(128, 512)
+    assert a.free == 0
+    a.free_view(v2)
+
+
+def test_static_padding_overhead():
+    # static 256x256 buffer storing 128x512 wastes 50% (paper §2.3)
+    waste = ar.FlexArena.static_padding_overhead((128, 512), (256, 256))
+    assert waste == pytest.approx(0.5)
+    assert ar.FlexArena.static_padding_overhead((256, 256), (256, 256)) == 0.0
+
+
+def test_fmf_role_rebinding_and_fits():
+    a = ar.FlexArena(capacity=1000)
+    v = a.alloc(10, 50, ar.ROLE_WEIGHT)
+    v = a.reshape_view(v, 25, 20, ar.ROLE_ACT)
+    assert v.rows == 25 and v.role == ar.ROLE_ACT
+    with pytest.raises(ar.AllocationError):
+        a.reshape_view(v, 100, 100)
+    assert a.fits([(10, 40), (5, 20)])
+    assert not a.fits([(40, 40)])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 20), st.integers(1, 20)),
+                min_size=1, max_size=12))
+def test_views_never_overlap(shapes):
+    a = ar.FlexArena(capacity=4096)
+    views = []
+    for r, c in shapes:
+        try:
+            views.append(a.alloc(r, c))
+        except ar.AllocationError:
+            break
+    spans = sorted((v.offset, v.offset + v.size) for v in views)
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 <= s2, "views overlap"
+    assert all(e <= a.capacity for _, e in spans)
+
+
+def test_alignment():
+    a = ar.FlexArena(capacity=10000, align=1024)
+    v1 = a.alloc(10, 10)
+    v2 = a.alloc(10, 10)
+    assert v1.offset % 1024 == 0 and v2.offset % 1024 == 0
+
+
+def test_device_store_load_roundtrip():
+    a = ar.FlexArena(capacity=4096)
+    buf = jnp.zeros(4096, jnp.float32)
+    v1 = a.alloc(16, 32)
+    v2 = a.alloc(8, 64)
+    m1 = jnp.arange(16 * 32, dtype=jnp.float32).reshape(16, 32)
+    m2 = -jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64)
+    buf = ar.store_view(buf, v1, m1)
+    buf = ar.store_view(buf, v2, m2)
+    np.testing.assert_array_equal(ar.load_view(buf, v1), m1)
+    np.testing.assert_array_equal(ar.load_view(buf, v2), m2)
+    padded = ar.load_padded(buf, v2, (64, 64))
+    np.testing.assert_array_equal(padded[:8, :64], m2)
+    assert float(jnp.abs(padded[8:]).sum()) == 0.0
+
+
+def test_fragmentation_first_fit():
+    a = ar.FlexArena(capacity=100)
+    v1 = a.alloc(1, 40)
+    v2 = a.alloc(1, 40)
+    a.free_view(v1)
+    v3 = a.alloc(1, 30)           # fits in the freed gap
+    assert v3.offset == 0
+    assert a.utilization() == pytest.approx(0.7)

@@ -1,0 +1,50 @@
+"""Instruction-set tests: binary encode/decode roundtrips (hypothesis) and
+field semantics (Table 1)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import instructions as isa
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.booleans(), st.integers(0, 3), st.integers(0, 65535))
+def test_instrgen_roundtrip(last, unit, length):
+    i = isa.InstrGen(last, unit, length)
+    assert isa.InstrGen.decode(i.encode()) == i
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.booleans(), st.integers(0, 2**40), st.integers(0, 1000),
+       st.integers(0, 2**20), st.integers(0, 2**20),
+       st.integers(0, 2**20), st.integers(0, 2**20),
+       st.integers(0, 2**20), st.integers(0, 2**20))
+def test_iomload_roundtrip(last, addr, fmu, m, n, r0, r1, c0, c1):
+    i = isa.IOMLoad(last, addr, fmu, m, n, r0, r1, c0, c1)
+    assert isa.IOMLoad.decode(i.encode()) == i
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.booleans(), st.integers(0, 3), st.integers(0, 3),
+       st.integers(0, 255), st.integers(0, 255), st.integers(0, 2**20),
+       st.integers(0, 2**16), st.integers(0, 2**16),
+       st.integers(0, 2**16), st.integers(0, 2**16), st.integers(0, 2**16))
+def test_fmu_roundtrip(last, ping, pong, src, des, count, r0, r1, c0, c1, vc):
+    i = isa.FMUInstr(last, ping, pong, src, des, count, r0, r1, c0, c1, vc)
+    assert isa.FMUInstr.decode(i.encode()) == i
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 1023), st.integers(0, 1023), st.integers(0, 1023))
+def test_pack_unpack_mkn(m, k, n):
+    assert isa.unpack_mkn(isa.pack_mkn(m, k, n)) == (m, k, n)
+
+
+def test_stream_encode_decode():
+    instrs = [isa.CUInstr(False, isa.OP_MM, isa.OP_NOP, 1, 2,
+                          isa.pack_mkn(4, 2, 3), 5),
+              isa.CUInstr(True, isa.OP_MM, isa.OP_NOP, 0, 1,
+                          isa.pack_mkn(1, 1, 1), 2)]
+    data = isa.encode_stream(instrs)
+    back = isa.decode_stream("cu", data)
+    assert back == instrs
+    # runtime reconfiguration payload is a few bytes (paper §2.5)
+    assert len(data) // len(instrs) <= 16

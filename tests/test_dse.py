@@ -1,0 +1,149 @@
+"""DSE tests: exact solver optimality (vs brute force, property-based), GA
+validity + optimality gap, schedule validator, Stage-1 mode tables."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.platform import VCK190
+from repro.configs.paper_workloads import MLP_S, bert
+from repro.core.analytical import filco_vck190
+from repro.core.dse import run_dse
+from repro.core.ga import GAConfig, decode_order, solve_ga
+from repro.core.milp import (build_milp, check_against_milp,
+                             solve_brute_force, solve_exact)
+from repro.core.modes import build_problem, enumerate_modes
+from repro.core.schedule import (InvalidSchedule, Mode, Placement, Schedule,
+                                 ScheduleProblem, list_schedule, validate)
+
+
+def random_problem(rng, n_lo=3, n_hi=6, modes_hi=3):
+    n = int(rng.integers(n_lo, n_hi))
+    deps = tuple(tuple(int(j) for j in range(i) if rng.random() < 0.4)
+                 for i in range(n))
+    modes = tuple(
+        tuple(Mode(fmus=int(rng.integers(3, 6)), cus=int(rng.integers(1, 4)),
+                   latency=float(rng.uniform(1, 10)))
+              for _ in range(int(rng.integers(1, modes_hi + 1))))
+        for _ in range(n))
+    return ScheduleProblem(deps, modes, f_max=8, c_max=4)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_exact_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng)
+    bf = solve_brute_force(prob)
+    ex = solve_exact(prob, time_limit_s=30)
+    assert ex.optimal
+    assert abs(bf.makespan - ex.makespan) < 1e-9
+    validate(prob, ex.schedule)
+    assert check_against_milp(prob, ex.schedule)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_ga_produces_valid_near_optimal_schedules(seed):
+    rng = np.random.default_rng(100 + seed)
+    prob = random_problem(rng, n_lo=5, n_hi=9, modes_hi=4)
+    ga = solve_ga(prob, GAConfig(population=32, generations=60, seed=seed))
+    validate(prob, ga.schedule)
+    ex = solve_exact(prob, time_limit_s=20, incumbent=ga.schedule)
+    # GA within 25% of optimum on small instances (paper: ~3% at scale)
+    assert ga.makespan <= ex.makespan * 1.25 + 1e-9
+    assert ga.makespan >= ex.makespan - 1e-9
+
+
+def test_ga_decode_respects_dependencies():
+    rng = np.random.default_rng(0)
+    prob = random_problem(rng, n_lo=6, n_hi=10)
+    enc = rng.random(prob.num_layers)
+    order = decode_order(prob, enc)
+    seen = set()
+    for i in order:
+        assert all(d in seen for d in prob.deps[i])
+        seen.add(i)
+
+
+def test_validator_catches_violations():
+    prob = ScheduleProblem(
+        deps=((), (0,)),
+        modes=((Mode(3, 1, 5.0),), (Mode(3, 1, 5.0),)),
+        f_max=8, c_max=4)
+    ok = list_schedule(prob, [0, 1], [0, 0])
+    validate(prob, ok)
+    # dependency violation
+    bad = Schedule((
+        Placement(0, 0, 0.0, 5.0, (0, 1, 2), (0,)),
+        Placement(1, 0, 2.0, 7.0, (3, 4, 5), (1,)),
+    ))
+    with pytest.raises(InvalidSchedule):
+        validate(prob, bad)
+    # unit overlap violation (same FMU, overlapping, independent layers)
+    prob2 = ScheduleProblem(
+        deps=((), ()),
+        modes=((Mode(3, 1, 5.0),), (Mode(3, 1, 5.0),)),
+        f_max=8, c_max=4)
+    bad2 = Schedule((
+        Placement(0, 0, 0.0, 5.0, (0, 1, 2), (0,)),
+        Placement(1, 0, 1.0, 6.0, (2, 3, 4), (1,)),
+    ))
+    with pytest.raises(InvalidSchedule):
+        validate(prob2, bad2)
+    # wrong unit count (Eq. 5)
+    bad3 = Schedule((
+        Placement(0, 0, 0.0, 5.0, (0, 1), (0,)),
+        Placement(1, 0, 5.0, 10.0, (3, 4, 5), (1,)),
+    ))
+    with pytest.raises(InvalidSchedule):
+        validate(prob, bad3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_list_schedule_always_valid(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_lo=4, n_hi=10, modes_hi=4)
+    order = prob.topo_order()
+    mc = [int(rng.integers(0, len(m))) for m in prob.modes]
+    sched = list_schedule(prob, order, mc)
+    validate(prob, sched)
+    assert sched.makespan >= prob.critical_path_lb() - 1e-9
+
+
+def test_stage1_modes_are_pareto_and_feasible():
+    wl = MLP_S
+    accel = filco_vck190()
+    modes = enumerate_modes(wl.layers[0], accel, VCK190, f_max=16, c_max=8)
+    assert modes
+    for m in modes:
+        assert 3 <= m.fmus <= 16 and 1 <= m.cus <= 8 and m.latency > 0
+    for i, a in enumerate(modes):
+        for b in modes[i + 1:]:
+            dominated = (a.fmus <= b.fmus and a.cus <= b.cus and
+                         a.latency <= b.latency)
+            assert not dominated, "stage-1 kept a dominated mode"
+
+
+def test_dse_end_to_end_bert_layer():
+    wl = bert(64, layers=1)
+    res = run_dse(wl, filco_vck190(), solver="ga", max_modes=6,
+                  ga_config=GAConfig(population=16, generations=20, seed=0))
+    validate(res.problem, res.schedule)
+    assert res.makespan > 0
+    # plan covers every layer exactly once, in dependency order
+    layers = sorted(p.layer for p in res.plan.layers)
+    assert layers == list(range(len(wl.layers)))
+    by_layer = {p.layer: p for p in res.plan.layers}
+    for i, l in enumerate(wl.layers):
+        for d in l.deps:
+            assert by_layer[d].end <= by_layer[i].start + 1e-9
+
+
+def test_milp_formulation_size():
+    rng = np.random.default_rng(1)
+    prob = random_problem(rng, n_lo=4, n_hi=5)
+    f = build_milp(prob)
+    n = prob.num_layers
+    assert f.num_continuous == 2 * n + 1
+    kinds = {c[0] for c in f.constraints}
+    assert {"eq1", "eq2a", "eq2b", "eq3a", "eq3b", "eq5f", "eq5c",
+            "eq6"} <= kinds | {"eq2a"}

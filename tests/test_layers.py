@@ -1,0 +1,159 @@
+"""Layer-level unit tests: attention variants vs naive reference, chunked
+xent vs direct, selective scan vs naive recurrence, RoPE/norm properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+RNG = np.random.default_rng(3)
+
+
+def naive_attention(q, k, v, *, causal, window=0, q_offset=0):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    kx = jnp.repeat(k, Hq // Hkv, axis=2)
+    vx = jnp.repeat(v, Hq // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 24)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])
+def test_blockwise_attention_vs_naive(causal, window, hq, hkv):
+    B, Sq, D = 2, 64, 16
+    q = jnp.asarray(RNG.normal(size=(B, Sq, hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Sq, hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Sq, hkv, D)), jnp.float32)
+    out = L.blockwise_attention(q, k, v, causal=causal, window=window,
+                                block_size=16)
+    ref = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_triangular_equals_blockwise(window):
+    B, Sq, H, D = 2, 128, 4, 16
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Sq, 2, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Sq, 2, D)), jnp.float32)
+    a = L.blockwise_attention(q, k, v, causal=True, window=window,
+                              block_size=32)
+    b = L.triangular_attention(q, k, v, window=window, block_size=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_per_row_lengths():
+    B, T, H, D = 3, 32, 4, 16
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, H, D)), jnp.float32)
+    lens = jnp.asarray([5, 17, 32])
+    out = L.decode_attention(q, k, v, lens)
+    for r in range(B):
+        l = int(lens[r])
+        ref = naive_attention(q[r:r + 1], k[r:r + 1, :l], v[r:r + 1, :l],
+                              causal=False)
+        np.testing.assert_allclose(out[r], ref[0], rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_kv_per_row_positions():
+    cache = jnp.zeros((3, 8, 2, 4))
+    new = jnp.ones((3, 1, 2, 4)) * jnp.asarray([1., 2., 3.])[:, None, None, None]
+    pos = jnp.asarray([0, 3, 7])
+    out = L.scatter_kv(cache, new, pos)
+    for r, p in enumerate((0, 3, 7)):
+        assert float(out[r, p].sum()) == pytest.approx((r + 1) * 8.0)
+        assert float(jnp.abs(out[r]).sum()) == pytest.approx((r + 1) * 8.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seq=st.integers(2, 40), vocab=st.integers(8, 64),
+       chunk=st.integers(2, 16))
+def test_chunked_xent_matches_direct(seq, vocab, chunk):
+    d = 12
+    x = jnp.asarray(RNG.normal(size=(2, seq, d)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(d, vocab)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, vocab, size=(2, seq)))
+    mask = jnp.asarray(RNG.integers(0, 2, size=(2, seq)), jnp.float32)
+    got = T.chunked_softmax_xent(x, w, labels, mask, chunk=chunk)
+    logits = x @ w
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_selective_scan_matches_naive():
+    B, Sq, D, N = 2, 37, 6, 4
+    dA = jnp.asarray(RNG.uniform(0.5, 0.99, size=(B, Sq, D, N)), jnp.float32)
+    dBx = jnp.asarray(RNG.normal(size=(B, Sq, D, N)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(B, D, N)), jnp.float32)
+    h_all, h_last = S.selective_scan(dA, dBx, h0, chunk=8)
+    h = h0
+    for t in range(Sq):
+        h = dA[:, t] * h + dBx[:, t]
+        np.testing.assert_allclose(h_all[:, t], h, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h_last, h, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_rotation_invariance():
+    """RoPE preserves norms and relative-position dot products."""
+    D = 32
+    x = jnp.asarray(RNG.normal(size=(1, 8, 2, D)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1),
+                               rtol=1e-5, atol=1e-5)
+    # <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, D)), jnp.float32)
+    dots = []
+    for i, j in [(3, 1), (7, 5), (12, 10)]:
+        qi = L.apply_rope(q, jnp.asarray([[i]]))
+        kj = L.apply_rope(k, jnp.asarray([[j]]))
+        dots.append(float(jnp.sum(qi * kj)))
+    assert max(dots) - min(dots) < 1e-4
+
+
+def test_norms():
+    x = jnp.asarray(RNG.normal(size=(4, 16)) * 10, jnp.float32)
+    y = L.rms_norm(x, jnp.ones(16), 1e-6)
+    np.testing.assert_allclose(jnp.mean(y * y, -1), 1.0, rtol=1e-3)
+    z = L.layer_norm(x, jnp.ones(16), jnp.zeros(16), 1e-6)
+    np.testing.assert_allclose(jnp.mean(z, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.mean(z * z, -1), 1.0, rtol=1e-3)
+
+
+def test_mamba_prefill_then_step_continuity():
+    """Prefill state then one step == full forward on S+1 tokens."""
+    from repro.configs import get_reduced
+    cfg = get_reduced("falcon-mamba-7b")
+    p = S.mamba_init(jax.random.key(0), cfg)
+    from repro.distribution import strip
+    p = strip(p)
+    x = jnp.asarray(RNG.normal(size=(2, 9, cfg.d_model)), jnp.float32)
+    full = S.mamba_fwd(p, cfg, x, chunk=4)
+    cache = strip(S.mamba_cache_init(cfg, 2, jnp.float32))
+    out, cache = S.mamba_prefill(p, cfg, x[:, :8], cache, chunk=4)
+    np.testing.assert_allclose(out, full[:, :8], rtol=2e-3, atol=2e-3)
+    step, _ = S.mamba_step(p, cfg, x[:, 8:9], cache)
+    np.testing.assert_allclose(step, full[:, 8:9], rtol=2e-3, atol=2e-3)
