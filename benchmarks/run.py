@@ -6,8 +6,11 @@
   fig10 — BERT-32..512 end-to-end + feature ablation (paper Fig. 10)
   fig11 — DSE search time, exact vs GA (paper Fig. 11)
   roofline — per (arch x cell x mesh) roofline terms from the dry-run grid
+  serve_fabric — multi-tenant recomposition serving; also writes
+                 BENCH_serve_fabric.json (per-tenant throughput,
+                 recompositions, time-to-recompose)
 
-Run: PYTHONPATH=src python -m benchmarks.run [fig8 fig9 ...]
+Run: PYTHONPATH=src python -m benchmarks.run [fig8 fig9 ... serve_fabric]
 """
 from __future__ import annotations
 
@@ -17,16 +20,18 @@ import time
 
 def main() -> None:
     from benchmarks import (fig8_kernel_efficiency, fig9_diverse_mm,
-                            fig10_bert_e2e, fig11_dse, roofline_table)
+                            fig10_bert_e2e, fig11_dse, roofline_table,
+                            serve_fabric)
 
     which = set(sys.argv[1:]) or {"fig8", "fig9", "fig10", "fig11",
-                                  "roofline"}
+                                  "roofline", "serve_fabric"}
     t00 = time.monotonic()
     for name, mod in [("fig8", fig8_kernel_efficiency),
                       ("fig9", fig9_diverse_mm),
                       ("fig10", fig10_bert_e2e),
                       ("fig11", fig11_dse),
-                      ("roofline", roofline_table)]:
+                      ("roofline", roofline_table),
+                      ("serve_fabric", serve_fabric)]:
         if name not in which:
             continue
         t0 = time.monotonic()

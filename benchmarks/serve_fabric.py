@@ -1,0 +1,79 @@
+"""Serving-fabric benchmark: traffic-driven multi-tenant recomposition.
+
+Emits machine-readable ``BENCH_serve_fabric.json`` (per-tenant throughput,
+recompositions performed, time-to-recompose) — the perf trajectory's first
+datapoint for the real-time recomposition controller.
+
+The scenario is the launcher's own ``--fabric`` traffic driver
+(``repro.launch.serve.run_fabric``), run in a subprocess because it fakes 8
+host devices and the device count is locked at first jax init.
+
+Run: PYTHONPATH=src python -m benchmarks.serve_fabric
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+OUT_PATH = pathlib.Path("BENCH_serve_fabric.json")
+
+_CMD = [sys.executable, "-m", "repro.launch.serve", "--fabric",
+        "--arch", "minitron-4b", "--arch", "qwen2.5-32b",
+        "--reduced", "--requests", "4", "--max-new-tokens", "12",
+        "--seed", "0"]
+
+
+def main() -> None:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(_CMD, capture_output=True, text=True, timeout=900,
+                         env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"serve_fabric scenario failed:\n"
+                           f"{out.stdout[-2000:]}\n{out.stderr[-4000:]}")
+    stats = json.loads(out.stdout[out.stdout.index("{"):])
+
+    wall_s = stats["wall_s"]
+    recompose_s = [e["seconds"] for e in stats["events"]]
+    # the honest cost of a recomposition: the migration device_put PLUS the
+    # first post-move step, where the XLA recompile for the new composition
+    # lands (it dominates)
+    stall_s = [s for e in stats["events"]
+               for s in e["post_step_seconds"].values()]
+    record = {
+        "bench": "serve_fabric",
+        "devices": 8,
+        "decode_steps": stats["decode_steps"],
+        "wall_s": wall_s,
+        "tokens_emitted": stats["tokens_emitted"],
+        "tokens_per_s_per_tenant": {
+            t: round(n / wall_s, 2)
+            for t, n in stats["tokens_emitted"].items()},
+        "recompositions": stats["recompositions"],
+        "recompose_reasons": [e["reason"] for e in stats["events"]],
+        "time_to_recompose_s": {
+            "migration_each": [round(s, 4) for s in recompose_s],
+            "migration_mean": round(
+                sum(recompose_s) / max(len(recompose_s), 1), 4),
+            "post_step_stall_each": [round(s, 4) for s in stall_s],
+            "post_step_stall_max": round(max(stall_s, default=0.0), 4),
+        },
+    }
+    OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+    for key in ("decode_steps", "recompositions", "wall_s"):
+        print(f"serve_fabric,{key},{record[key]}")
+    for t, tps in record["tokens_per_s_per_tenant"].items():
+        print(f"serve_fabric,tokens_per_s[{t}],{tps}")
+    print(f"serve_fabric,migration_mean_s,"
+          f"{record['time_to_recompose_s']['migration_mean']}")
+    print(f"serve_fabric,post_step_stall_max_s,"
+          f"{record['time_to_recompose_s']['post_step_stall_max']}")
+    print(f"# wrote {OUT_PATH.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,16 @@
-"""Composed accelerators (FILCO §1/§2.1): partition one device mesh into
-independent sub-accelerators serving DIFFERENT models concurrently, then
-re-unify it for a single large job.
+"""Real-time recomposition (FILCO §1/§2.1): one device mesh serving multiple
+tenants, with the fabric LIVE-recomposed as traffic shifts.
 
-This is the pod-scale face of FILCO's "unified or multiple independent
-accelerators": the MeshComposer carves the model axis; each tenant engine
-runs on its own sub-mesh.
+The scenario (8 fake host devices, 8 CUs on the 'model' axis):
+
+  phase 1 — tenants A and B each hold 4 CUs and serve concurrently
+            (composed: "multiple independent accelerators");
+  phase 2 — A takes a traffic burst while B idles: the analytical policy
+            grows A by stealing B's CUs mid-stream (decode state moves, B's
+            untouched requests keep their devices until B is parked);
+  phase 3 — a single large job arrives for A: the fabric unifies into the
+            monolithic accelerator (paper's CHARM-1 operating point is one
+            composition of the same fabric).
 
 Run (fakes 8 devices; ONLY examples/dry-run may do this):
   PYTHONPATH=src python examples/multi_tenant_serve.py
@@ -16,46 +22,66 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.configs import get_reduced  # noqa: E402
-from repro.core.composer import MeshComposer  # noqa: E402
-from repro.distribution import strip  # noqa: E402
-from repro.models import build_model  # noqa: E402
+from repro.serve import (AnalyticalPolicy, ComposedServer,  # noqa: E402
+                         ServeConfig, TenantSpec)
+
+
+def run_phase(server, title, steps):
+    for _ in range(steps):
+        server.step()
+    sizes = server.sizes()
+    print(f"{title}: composition={sizes} "
+          f"pending={ {t: ld.pending_tokens for t, ld in server.loads().items()} }")
 
 
 def main():
     mesh = jax.make_mesh((1, 8), ("data", "model"))
-    comp = MeshComposer(mesh, cu_axis="model")
-    print(f"fabric: {mesh.devices.size} devices on axis 'model'")
+    serve = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    server = ComposedServer(
+        mesh,
+        [TenantSpec("tenant-A", "minitron-4b", serve=serve),
+         TenantSpec("tenant-B", "qwen2.5-32b", seed=1, serve=serve)],
+        policy=AnalyticalPolicy(),
+        decide_every=4)
+    print(f"fabric: {mesh.devices.size} devices, "
+          f"{server.composer.num_cus} CUs on axis 'model'")
+    print(f"initial composition: {server.sizes()}")
 
-    # --- composed: two tenants on disjoint sub-accelerators ---------------
-    sub_a, sub_b = comp.compose([4, 4], names=["tenant-A", "tenant-B"])
-    tenants = [("tenant-A (minitron)", sub_a, "minitron-4b"),
-               ("tenant-B (qwen2.5)", sub_b, "qwen2.5-32b")]
     rng = np.random.default_rng(0)
-    for name, sub, arch in tenants:
-        cfg = get_reduced(arch)
-        model = build_model(cfg)
-        params = strip(model.init(jax.random.key(0)))
-        toks = rng.integers(1, cfg.vocab_size, size=(2, 12)).astype(np.int32)
-        with sub.mesh:
-            cache = strip(model.init_cache(2, 32))
-            logits, cache = jax.jit(
-                lambda p, t, c: model.prefill(p, {"tokens": t}, c)
-            )(params, toks, cache)
-        print(f"{name}: devices={sub.mesh.devices.size} "
-              f"cu_ids={sub.cu_ids} first_tokens={np.argmax(np.asarray(jax.device_get(logits)), -1)}")
 
-    # --- unified: the whole fabric as one accelerator ----------------------
-    uni = comp.unified()
-    cfg = get_reduced("granite-34b")
-    model = build_model(cfg)
-    params = strip(model.init(jax.random.key(1)))
-    toks = rng.integers(1, cfg.vocab_size, size=(4, 12)).astype(np.int32)
-    with uni.mesh:
-        loss, _ = jax.jit(lambda p, t: model.loss(
-            p, {"tokens": t, "labels": t}))(params, toks)
-    print(f"unified: devices={uni.mesh.devices.size} granite loss={float(loss):.3f}")
-    print("multi-tenant composition OK")
+    def traffic(tenant, n, plen, new):
+        vocab = server.cfgs[tenant].vocab_size
+        for _ in range(n):
+            server.submit(tenant, rng.integers(1, vocab, size=plen),
+                          max_new_tokens=new)
+
+    # phase 1: both tenants comparably loaded -> stay near the 4/4 split
+    traffic("tenant-A", 2, 8, 8)
+    traffic("tenant-B", 2, 8, 24)
+    run_phase(server, "phase 1 (balanced)", 4)
+
+    # phase 2: A bursts while B winds down -> policy shifts B's CUs to A
+    # (a live grow/shrink: B keeps serving, smaller)
+    traffic("tenant-A", 6, 10, 16)
+    run_phase(server, "phase 2 (A bursts)", 20)
+
+    # phase 3: one large job for A -> the fabric unifies
+    if server.sizes().get("tenant-A", 0) < server.composer.num_cus:
+        server.unify("tenant-A")
+    traffic("tenant-A", 1, 24, 24)
+    run_phase(server, "phase 3 (unified)", 30)
+
+    server.drain()
+    print("\nrecomposition events:")
+    for e in server.events:
+        print(f"  step {e.step:3d} [{e.reason}] {e.sizes_before} -> "
+              f"{e.sizes_after} moved={list(e.moved)} "
+              f"({e.seconds * 1e3:.1f} ms)")
+    assert server.events, "expected at least one live recomposition"
+    assert any(max(e.sizes_after.values()) == server.composer.num_cus
+               for e in server.events), "expected a unify step"
+    print(f"\nstats: {server.stats()}")
+    print("multi-tenant recomposition OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+import jax
+
+# Sharding-invariant RNG (newer jax defaults to this; the pinned jaxlib does
+# not): param init must produce identical values on one device, a production
+# mesh, or any recomposed sub-mesh — elastic checkpoint restarts and the
+# serving fabric's live recomposition both rely on it.
+jax.config.update("jax_threefry_partitionable", True)

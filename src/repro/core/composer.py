@@ -15,7 +15,7 @@ multi-tenant serving example and tested under a host-device-count subprocess.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 from jax.sharding import Mesh
@@ -76,6 +76,38 @@ class MeshComposer:
             start += size
         return out
 
+    def submesh(self, cu_ids: Sequence[int], name: str) -> SubAccelerator:
+        """A sub-accelerator over an arbitrary (possibly non-contiguous) set
+        of CU columns — delta recomposition routinely produces gaps."""
+        ids = tuple(sorted(cu_ids))
+        if not ids or ids[0] < 0 or ids[-1] >= self.num_cus:
+            raise ValueError(f"cu_ids {ids} outside fabric of {self.num_cus}")
+        idx = [slice(None)] * self.mesh.devices.ndim
+        idx[self.axis_index] = list(ids)
+        return SubAccelerator(name, ids,
+                              Mesh(self.mesh.devices[tuple(idx)],
+                                   self.mesh.axis_names))
+
+    def recompose(self, current: Mapping[str, SubAccelerator],
+                  target_sizes: Mapping[str, int],
+                  ) -> Tuple[Dict[str, SubAccelerator], RecompositionDelta]:
+        """Delta recomposition: grow/shrink/admit/evict tenants while leaving
+        every unaffected tenant's device assignment untouched (the same
+        SubAccelerator object, hence the same Mesh and the same devices).
+
+        Returns the new composition plus the delta describing who moved.
+        """
+        cur_ids = {t: sub.cu_ids for t, sub in current.items()}
+        new_ids = plan_recomposition(cur_ids, target_sizes, self.num_cus)
+        delta = recomposition_delta(cur_ids, new_ids)
+        out: Dict[str, SubAccelerator] = {}
+        for t, ids in new_ids.items():
+            if t in delta.unchanged:
+                out[t] = current[t]
+            else:
+                out[t] = self.submesh(ids, t)
+        return out, delta
+
     def for_plan(self, plan: ExecutionPlan) -> Dict[int, SubAccelerator]:
         """Map every planned layer's CU set to a sub-mesh.  Layers sharing a
         CU set share the sub-accelerator (ping-pong reuse across time)."""
@@ -87,13 +119,80 @@ class MeshComposer:
                 if max(key) >= self.num_cus:
                     raise ValueError(
                         f"plan uses CU {max(key)} but mesh has {self.num_cus}")
-                idx = [slice(None)] * self.mesh.devices.ndim
-                idx[self.axis_index] = list(key)
-                blk = self.mesh.devices[tuple(idx)]
-                cache[key] = SubAccelerator(
-                    f"cus{key}", key, Mesh(blk, self.mesh.axis_names))
+                cache[key] = self.submesh(key, f"cus{key}")
             result[pl.layer] = cache[key]
         return result
+
+
+@dataclasses.dataclass(frozen=True)
+class RecompositionDelta:
+    """Which tenants a recomposition touches.  ``unchanged`` tenants keep the
+    exact same CU ids (their params/state never move); only ``moved`` and
+    ``admitted`` tenants pay the resharding cost — FILCO's real-time
+    reconfiguration is cheap precisely because the delta is partial."""
+
+    unchanged: Tuple[str, ...]
+    moved: Tuple[str, ...]
+    admitted: Tuple[str, ...]
+    evicted: Tuple[str, ...]
+
+
+def plan_recomposition(current: Mapping[str, Sequence[int]],
+                       target_sizes: Mapping[str, int],
+                       num_cus: int) -> Dict[str, Tuple[int, ...]]:
+    """Assign CU ids for ``target_sizes`` (tenant -> CU count), minimizing
+    movement relative to ``current`` (tenant -> CU ids).
+
+    Pure integer math (no devices): tenants whose size is unchanged keep
+    their exact CU set when it doesn't collide with an earlier claim; resized
+    tenants prefer CUs they already own, then the lowest free ids.  Tenants
+    with target size 0 (parked/evicted) get no entry.  Deterministic in the
+    iteration order of ``target_sizes``.
+    """
+    sizes = {t: s for t, s in target_sizes.items() if s > 0}
+    total = sum(sizes.values())
+    if total > num_cus:
+        raise ValueError(f"target sizes {dict(sizes)} need {total} CUs, "
+                         f"fabric has {num_cus}")
+    for t, s in sizes.items():
+        old = current.get(t)
+        if old is not None and any(c >= num_cus for c in old):
+            raise ValueError(f"tenant {t} holds CU >= {num_cus}")
+
+    out: Dict[str, Tuple[int, ...]] = {}
+    claimed: set = set()
+    # pass 1: same-size tenants keep their CUs outright
+    for t, s in sizes.items():
+        old = tuple(current.get(t, ()))
+        if len(old) == s and not (set(old) & claimed):
+            out[t] = old
+            claimed |= set(old)
+    # pass 2: everyone else — prefer owned CUs, then lowest free ids
+    for t, s in sizes.items():
+        if t in out:
+            continue
+        keep = [c for c in current.get(t, ()) if c not in claimed][:s]
+        free = (c for c in range(num_cus)
+                if c not in claimed and c not in keep)
+        ids = sorted(keep + [next(free) for _ in range(s - len(keep))])
+        out[t] = tuple(ids)
+        claimed |= set(ids)
+    return out
+
+
+def recomposition_delta(current: Mapping[str, Sequence[int]],
+                        new: Mapping[str, Sequence[int]]) -> RecompositionDelta:
+    unchanged, moved, admitted = [], [], []
+    for t, ids in new.items():
+        if t not in current:
+            admitted.append(t)
+        elif tuple(current[t]) == tuple(ids):
+            unchanged.append(t)
+        else:
+            moved.append(t)
+    evicted = [t for t in current if t not in new]
+    return RecompositionDelta(tuple(unchanged), tuple(moved),
+                              tuple(admitted), tuple(evicted))
 
 
 def concurrent_groups(plan: ExecutionPlan) -> List[List[PlannedLayer]]:

@@ -1,13 +1,18 @@
 """Serving launcher.
 
+Single-tenant continuous batching:
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --reduced \
       --requests 8
 
-Builds the model, initializes (or restores) params, and drives the
-continuous-batching engine over a synthetic request stream.  On real pods the
-engine runs under serve_rules() on the production mesh; optionally composed
-into multiple independent sub-accelerators for multi-tenant serving
-(examples/multi_tenant_serve.py).
+Multi-tenant fabric with real-time recomposition (traffic-driven: bursty
+tenants steal CUs from idle ones; a lone busy tenant unifies the fabric).
+Needs one CU (model-axis column) per tenant — on a CPU host fake enough
+devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --fabric \
+      --arch minitron-4b --arch qwen2.5-32b --reduced --requests 12
 """
 from __future__ import annotations
 
@@ -22,12 +27,64 @@ from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.distribution import partitioning as part
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import (AnalyticalPolicy, ComposedServer, ServeConfig,
+                         ServeEngine, TenantSpec)
+
+
+def run_fabric(args) -> int:
+    """Traffic-driven multi-tenant serving on one recomposable fabric."""
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else
+            jax.make_mesh((1, jax.device_count()), ("data", "model")))
+    serve = ServeConfig(max_slots=args.max_slots, max_len=args.max_len,
+                        eos_id=-1)
+    tenants = [TenantSpec(f"tenant{i}-{arch}", arch, reduced=args.reduced,
+                          serve=serve, seed=i)
+               for i, arch in enumerate(args.arch)]
+    server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
+                            decide_every=args.decide_every)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.monotonic()
+    # bursty open-loop traffic: each tenant gets its requests in one burst
+    # at a random step, so load keeps shifting under the policy's feet
+    bursts = sorted((int(rng.integers(0, 4 * args.requests)), t.name)
+                    for t in tenants for _ in range(args.requests))
+    steps = 0
+    while bursts or server.pending():
+        while bursts and bursts[0][0] <= steps:
+            _, name = bursts.pop(0)
+            vocab = server.cfgs[name].vocab_size
+            plen = int(rng.integers(4, 24))
+            server.submit(name, rng.integers(1, vocab, size=plen),
+                          max_new_tokens=args.max_new_tokens)
+        server.step()
+        steps += 1
+        if steps > 10_000:
+            break
+    dt = time.monotonic() - t0
+    stats = server.stats()
+    print(json.dumps({
+        "tenants": [t.name for t in tenants], "decode_steps": steps,
+        "wall_s": round(dt, 2), **stats,
+        "events": [{"step": e.step, "reason": e.reason,
+                    "sizes": e.sizes_after,
+                    "seconds": round(e.seconds, 4),
+                    "post_step_seconds": {
+                        t: round(s, 4)
+                        for t, s in e.post_step_seconds.items()}}
+                   for e in server.events],
+    }, indent=1))
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--arch", choices=ARCH_IDS, action="append",
+                    required=True,
+                    help="repeat for multiple tenants with --fabric")
+    ap.add_argument("--fabric", action="store_true",
+                    help="multi-tenant ComposedServer with live recomposition")
+    ap.add_argument("--decide-every", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
@@ -37,6 +94,12 @@ def main(argv=None) -> int:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.fabric:
+        return run_fabric(args)
+    if len(args.arch) != 1:
+        ap.error("multiple --arch requires --fabric")
+    args.arch = args.arch[0]
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)

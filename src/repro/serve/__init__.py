@@ -1,3 +1,14 @@
 from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
+                                RecompositionEvent, TenantLoad, TenantSpec)
 
-__all__ = ["Request", "ServeConfig", "ServeEngine"]
+__all__ = [
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "AnalyticalPolicy",
+    "ComposedServer",
+    "RecompositionEvent",
+    "TenantLoad",
+    "TenantSpec",
+]

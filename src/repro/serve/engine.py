@@ -20,6 +20,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core.arena import FlexArena, ROLE_ACT
@@ -27,6 +28,23 @@ from repro.distribution import partitioning as part
 from repro.models.model import Model
 
 PyTree = Any
+
+
+def _mesh_of(sub) -> Optional[Mesh]:
+    """Accept a Mesh, a composer SubAccelerator, or None."""
+    if sub is None or isinstance(sub, Mesh):
+        return sub
+    return sub.mesh
+
+
+def _replicate(tree: PyTree, mesh: Optional[Mesh]) -> PyTree:
+    """Commit a pytree to a (sub-)mesh, replicated on every device.  The
+    engine is mesh-agnostic: which devices run it is entirely decided by
+    where its params/cache live, so moving an engine between compositions
+    is one device_put of its state."""
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, NamedSharding(mesh, PartitionSpec()))
 
 
 @dataclasses.dataclass
@@ -53,9 +71,9 @@ class ServeEngine:
     def __init__(self, model: Model, params: PyTree, cfg: ServeConfig,
                  mesh=None, rules: Optional[part.ShardingRules] = None):
         self.model = model
-        self.params = params
         self.cfg = cfg
-        self.mesh = mesh
+        self.params = params
+        self.reshard_count = 0
         mc = model.cfg
         # per-layer per-token KV elements (admission accounting)
         if mc.mla is not None:
@@ -69,6 +87,10 @@ class ServeEngine:
             cfg.max_slots * cfg.max_len * self._per_token_elems)
         self._queue: List[Request] = []
         self._active: Dict[int, Request] = {}
+        # finished rid -> emitted tokens; bounded so a long-running engine
+        # doesn't grow host memory with every request ever served
+        self._finished: Dict[int, List[int]] = {}
+        self.finished_cap = 10_000
         self._next_rid = 0
         self._free_slots = list(range(cfg.max_slots))
         # one pooled cache for all slots
@@ -76,6 +98,45 @@ class ServeEngine:
         self._prefill_jit = jax.jit(self._prefill_one, static_argnums=(3,))
         self._decode_jit = jax.jit(self._decode_all)
         self._pos = np.zeros(cfg.max_slots, np.int32)   # per-slot next index
+        self.reshard_to(mesh)          # commit params+cache to the sub-mesh
+        self.reshard_count = 0         # construction placement isn't a move
+
+
+    # ------------------------------------------------------------------
+    def reshard_to(self, sub) -> None:
+        """Migrate this engine — params AND live decode state — onto a new
+        sub-accelerator (FILCO real-time recomposition, §1/§2.1).
+
+        The engine is purely functional on device: everything it owns is the
+        params pytree and the pooled cache pytree, so growing, shrinking or
+        moving its composition is a replicated device_put of both.  Host-side
+        state (queues, slots, arena views) is untouched, and decode numerics
+        are bit-identical because replication does not change the math.
+        """
+        mesh = _mesh_of(sub)
+        self.mesh = mesh
+        self.params = _replicate(self.params, mesh)
+        self.cache = _replicate(self.cache, mesh)
+        self.reshard_count += 1
+
+    # ------------------------------------------------------------------
+    # load metrics consumed by the recomposition policy
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_count(self) -> int:
+        return len(self._active)
+
+    def pending_tokens(self) -> int:
+        """Decode steps of work still owed: remaining tokens of active
+        requests plus full budgets of queued ones."""
+        owed = sum(req.max_new_tokens - len(req.out_tokens)
+                   for req in self._active.values())
+        owed += sum(req.max_new_tokens + len(req.tokens)
+                    for req in self._queue)
+        return max(owed, 0)
 
     # ------------------------------------------------------------------
     def submit(self, tokens, max_new_tokens: int = 16) -> int:
@@ -105,8 +166,11 @@ class ServeEngine:
             req = self._queue[0]
             need = (len(req.tokens) + req.max_new_tokens)
             if need > self.cfg.max_len:
+                # rejected (would never fit a slot): still recorded, with
+                # whatever was emitted (nothing) — requests never vanish
                 req.done = True
                 self._queue.pop(0)
+                self._record_finished(req)
                 continue
             try:
                 view = self.arena.alloc(need, self._per_token_elems, ROLE_ACT)
@@ -171,21 +235,33 @@ class ServeEngine:
                 req.done = True
                 self.arena.free_view(req.view)
                 self._free_slots.append(slot)
+                self._record_finished(req)
                 del self._active[slot]
         return emitted
 
+    def _record_finished(self, req: Request) -> None:
+        self._finished[req.rid] = list(req.out_tokens)
+        while len(self._finished) > self.finished_cap:
+            self._finished.pop(next(iter(self._finished)))  # oldest first
+
     def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[int]]:
-        out: Dict[int, List[int]] = {}
         for _ in range(max_steps):
             if not self._queue and not self._active:
                 break
             self.step()
-        for req in list(self._active.values()) + self._queue:
-            out[req.rid] = req.out_tokens
-        return out
+        return self.snapshot()
 
     def results(self) -> Dict[int, List[int]]:
-        return {}
+        """Completed (or rejected) requests' emitted tokens."""
+        return {rid: list(toks) for rid, toks in self._finished.items()}
+
+    def snapshot(self) -> Dict[int, List[int]]:
+        """Every request seen so far -> tokens emitted (in-flight, queued
+        and finished)."""
+        out = {req.rid: list(req.out_tokens)
+               for req in list(self._active.values()) + self._queue}
+        out.update(self.results())
+        return out
 
 
 def _write_slot(pool_cache: PyTree, single_cache: PyTree, slot: int) -> PyTree:

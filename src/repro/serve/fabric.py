@@ -1,0 +1,353 @@
+"""Real-time recomposition controller — the serving-side face of FILCO's
+"reconfigured in real-time and flexibly composed into a unified or multiple
+independent accelerators" (paper §1, §2.1).
+
+A :class:`ComposedServer` owns the full device mesh.  Each tenant runs one
+continuous-batching :class:`~repro.serve.engine.ServeEngine` on a
+:class:`~repro.core.composer.MeshComposer` sub-accelerator.  Between decode
+steps the controller samples per-tenant load (queue depth, owed decode work,
+arena pressure) and asks a policy — by default the analytical model driving
+the DSE Stage-2 search — for a new CU split.  When the predicted gain clears
+the hysteresis threshold it *live-recomposes*: the affected tenants' params
+and pooled decode caches are reshard onto their new sub-meshes while
+unaffected tenants keep their exact devices (delta recomposition), so a
+bursty tenant can steal CUs from an idle one mid-stream, and the fabric can
+unify into one monolithic accelerator for a single large job.
+
+Replication-based resharding keeps decode numerics bit-identical across any
+grow/shrink/merge/unify sequence — the property tests/test_fabric.py pins.
+The flip side: replicated decode does not get faster with more CUs yet, so
+the policy's analytical speedup is aspirational until engines run under
+serve_rules() tensor parallelism on their sub-mesh (the planned next step;
+the controller, delta planner and migration protocol are TP-agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.common.platform import TPU_V5E, PlatformProfile
+from repro.configs import get_config, get_reduced
+from repro.configs.base import ModelConfig
+from repro.core.analytical import AccelConfig, layer_latency
+from repro.core.composer import MeshComposer, SubAccelerator
+from repro.distribution import partitioning as part
+from repro.models import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant model co-resident on the fabric."""
+
+    name: str
+    arch: str                        # architecture registry id
+    reduced: bool = True
+    serve: ServeConfig = ServeConfig()
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantLoad:
+    """Observed load signals the policy decides on."""
+
+    pending_tokens: int              # decode steps of work owed
+    queue_depth: int                 # requests awaiting admission
+    active: int                      # live decode slots
+    arena_utilization: float         # KV arena pressure, 0..1
+
+
+@dataclasses.dataclass(frozen=True)
+class RecompositionEvent:
+    """One applied recomposition, for logs/benchmarks."""
+
+    step: int
+    sizes_before: Dict[str, int]
+    sizes_after: Dict[str, int]
+    moved: Tuple[str, ...]
+    unchanged: Tuple[str, ...]
+    parked: Tuple[str, ...]
+    seconds: float                   # state migration (device_put) only
+    reason: str
+    # moved tenant -> wall time of its first step on the new composition;
+    # this is where the XLA recompile stall lands, and it dominates the
+    # migration time — filled in by ComposedServer.step()
+    post_step_seconds: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# policy: Stage-2-style split search on the analytical model
+# ---------------------------------------------------------------------------
+
+class AnalyticalPolicy:
+    """Chooses a CU split by pricing each tenant's decode step on candidate
+    sub-accelerator design points with the analytical latency model (the same
+    machinery DSE Stage 2 schedules with, §3.1) and minimizing the predicted
+    makespan of the owed work.
+
+    Hysteresis: a new split is only worth a live recomposition when the
+    predicted speedup clears ``min_gain`` — resharding has a real cost
+    (device_put + one recompile per new composition).
+    """
+
+    def __init__(self, platform: PlatformProfile = TPU_V5E,
+                 min_gain: float = 1.25):
+        self.platform = platform
+        self.min_gain = min_gain
+        self._cost_cache: Dict[Tuple[str, int, int], float] = {}
+
+    # -- per-tenant decode-step cost on a c-CU sub-accelerator -------------
+    def step_cost(self, cfg: ModelConfig, batch: int, cus: int) -> float:
+        if cus <= 0:
+            return float("inf")
+        # full and reduced configs share a name: key on the priced dims too
+        key = (cfg.name, cfg.num_layers, cfg.d_model, max(batch, 1), cus)
+        if key not in self._cost_cache:
+            accel = AccelConfig(
+                name=f"tpu-sub{cus}", num_cus=cus,
+                aies_per_cu=self.platform.num_compute_units,
+                onchip_elems=cus * (self.platform.onchip_bytes // 4),
+                num_fmus=max(cus, 1), fp=True, fmv=True, fmf=True)
+            d = cfg.d_model
+            # dominant decode GEMMs per layer: attention out/in (d x d) and
+            # the MLP pair (d x d_ff), batched over live slots
+            lb_attn = layer_latency(accel, self.platform,
+                                    max(batch, 1), d, d)
+            lb_mlp = layer_latency(accel, self.platform,
+                                   max(batch, 1), d, cfg.d_ff or 4 * d)
+            self._cost_cache[key] = cfg.num_layers * (
+                2 * lb_attn.total_s + 2 * lb_mlp.total_s)
+        return self._cost_cache[key]
+
+    # -- split search ------------------------------------------------------
+    def decide(self, loads: Mapping[str, TenantLoad],
+               cfgs: Mapping[str, ModelConfig],
+               current: Mapping[str, int],
+               num_cus: int) -> Tuple[Dict[str, int], str]:
+        """Return (target sizes, reason).  Tenants with no load are parked
+        (size 0); returning ``current`` means "leave the fabric alone"."""
+        # arena pressure inflates demand: a hot arena means queued work the
+        # pending-token count can't see yet
+        demand = {t: ld.pending_tokens * (1.0 + ld.arena_utilization)
+                  for t, ld in loads.items()}
+        busy = [t for t, d in demand.items() if d > 0]
+        if not busy:
+            return dict(current), "idle"
+
+        def makespan(sizes: Mapping[str, int]) -> float:
+            return max(demand[t] * self.step_cost(
+                cfgs[t], loads[t].active or 1, sizes.get(t, 0))
+                for t in busy)
+
+        best_sizes, best_cost = None, float("inf")
+        for split in _candidate_splits(num_cus, busy, demand):
+            sizes = dict(zip(busy, split))
+            cost = makespan(sizes)
+            if cost < best_cost:
+                best_sizes, best_cost = sizes, cost
+        assert best_sizes is not None
+
+        cur_cost = makespan(current)
+        if cur_cost == float("inf"):
+            return best_sizes, "admit"          # a parked tenant got work
+        if cur_cost / max(best_cost, 1e-12) >= self.min_gain:
+            if len(busy) == 1:
+                return best_sizes, "unify"
+            return best_sizes, "rebalance"
+        return dict(current), "hysteresis"
+
+
+def _compositions(total: int, parts: int):
+    """All ways to write ``total`` as ``parts`` positive integers."""
+    if parts == 1:
+        yield (total,)
+        return
+    for cuts in itertools.combinations(range(1, total), parts - 1):
+        prev, out = 0, []
+        for c in cuts:
+            out.append(c - prev)
+            prev = c
+        out.append(total - prev)
+        yield tuple(out)
+
+
+# exhaustive Stage-2-style enumeration is C(num_cus-1, tenants-1): fine on a
+# board-scale fabric, explosive on a pod.  Past this budget, fall back to a
+# demand-proportional water-filling split (the argmax of the monotone
+# makespan model in the common case, computed in O(cus x tenants)).
+MAX_ENUMERATED_SPLITS = 20_000
+
+
+def _candidate_splits(num_cus: int, busy: Sequence[str],
+                      demand: Mapping[str, float]):
+    if math.comb(num_cus - 1, len(busy) - 1) <= MAX_ENUMERATED_SPLITS:
+        yield from _compositions(num_cus, len(busy))
+        return
+    total = sum(demand[t] for t in busy)
+    shares = [max(1, int(num_cus * demand[t] / total)) for t in busy]
+    spare = num_cus - sum(shares)
+    order = sorted(range(len(busy)), key=lambda i: -demand[busy[i]])
+    i = 0
+    while spare != 0:                    # hand leftovers to (or claw back
+        j = order[i % len(order)]        # from) the most-loaded tenants
+        step = 1 if spare > 0 else (-1 if shares[j] > 1 else 0)
+        shares[j] += step
+        spare -= step
+        i += 1
+    yield tuple(shares)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+
+class ComposedServer:
+    """Multi-tenant serving on one composable fabric with live, delta
+    recomposition between decode steps."""
+
+    def __init__(self, mesh, tenants: Sequence[TenantSpec], *,
+                 policy: Optional[AnalyticalPolicy] = None,
+                 decide_every: int = 4, cu_axis: str = "model"):
+        self.composer = MeshComposer(mesh, cu_axis=cu_axis)
+        self.policy = policy
+        self.decide_every = decide_every
+        self.specs = {t.name: t for t in tenants}
+        self.events: List[RecompositionEvent] = []
+        self._stall_probe: Dict[str, RecompositionEvent] = {}
+        self._step_no = 0
+        self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
+
+        # initial composition: equal shares, remainder to the first tenants
+        n = len(tenants)
+        if n > self.composer.num_cus:
+            raise ValueError(
+                f"{n} tenants need at least {n} CUs; the fabric has "
+                f"{self.composer.num_cus} (on CPU, fake more host devices "
+                f"with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        base, extra = divmod(self.composer.num_cus, n)
+        sizes = {t.name: base + (1 if i < extra else 0)
+                 for i, t in enumerate(tenants)}
+        self.subs, _ = self.composer.recompose({}, sizes)
+
+        self.cfgs: Dict[str, ModelConfig] = {}
+        self.engines: Dict[str, ServeEngine] = {}
+        for spec in tenants:
+            cfg = (get_reduced(spec.arch) if spec.reduced
+                   else get_config(spec.arch))
+            model = build_model(cfg)
+            params = part.strip(model.init(jax.random.key(spec.seed)))
+            self.cfgs[spec.name] = cfg
+            self.engines[spec.name] = ServeEngine(
+                model, params, spec.serve, mesh=self.subs[spec.name])
+
+    # ------------------------------------------------------------------
+    def submit(self, tenant: str, tokens, max_new_tokens: int = 16) -> int:
+        return self.engines[tenant].submit(tokens, max_new_tokens)
+
+    def sizes(self) -> Dict[str, int]:
+        return {t: len(self.subs[t].cu_ids) if t in self.subs else 0
+                for t in self.engines}
+
+    def loads(self) -> Dict[str, TenantLoad]:
+        return {t: TenantLoad(eng.pending_tokens(), eng.queue_depth,
+                              eng.active_count, eng.arena.utilization())
+                for t, eng in self.engines.items()}
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[str, List[Tuple[int, int]]]:
+        """One fabric iteration: step every composed (non-parked) tenant,
+        then maybe recompose.  Returns per-tenant emitted (rid, token)."""
+        emitted = {}
+        for t, eng in self.engines.items():
+            if t not in self.subs:
+                continue                      # parked: no CUs this interval
+            probe = self._stall_probe.pop(t, None)
+            t0 = time.monotonic() if probe is not None else 0.0
+            out = eng.step()
+            if probe is not None:
+                probe.post_step_seconds[t] = time.monotonic() - t0
+            self._tokens_emitted[t] += len(out)
+            if out:
+                emitted[t] = out
+        self._step_no += 1
+        if (self.policy is not None and self.decide_every > 0
+                and self._step_no % self.decide_every == 0):
+            self.autoscale()
+        return emitted
+
+    def autoscale(self) -> Optional[RecompositionEvent]:
+        """Consult the policy; apply the recomposition it asks for."""
+        target, reason = self.policy.decide(
+            self.loads(), self.cfgs, self.sizes(), self.composer.num_cus)
+        target = {t: s for t, s in target.items() if s > 0}
+        if target == {t: s for t, s in self.sizes().items() if s > 0}:
+            return None
+        return self.recompose(target, reason=reason)
+
+    def recompose(self, target_sizes: Mapping[str, int], *,
+                  reason: str = "manual") -> RecompositionEvent:
+        """Live recomposition: grow/shrink/admit/park tenants.  Only moved
+        tenants pay a state migration; unchanged ones keep their devices."""
+        before = self.sizes()
+        t0 = time.monotonic()
+        new_subs, delta = self.composer.recompose(self.subs, target_sizes)
+        for t in delta.moved + delta.admitted:
+            eng = self.engines[t]
+            eng.reshard_to(new_subs[t])
+            jax.block_until_ready((eng.params, eng.cache))
+        self.subs = new_subs
+        seconds = time.monotonic() - t0
+        event = RecompositionEvent(
+            step=self._step_no, sizes_before=before, sizes_after=self.sizes(),
+            moved=delta.moved + delta.admitted, unchanged=delta.unchanged,
+            parked=delta.evicted, seconds=seconds, reason=reason)
+        for t in event.moved:
+            self._stall_probe[t] = event
+        self.events.append(event)
+        return event
+
+    def unify(self, tenant: str, *, reason: str = "unify"
+              ) -> RecompositionEvent:
+        """The monolithic composition: the whole fabric for one tenant."""
+        return self.recompose({tenant: self.composer.num_cus}, reason=reason)
+
+    # ------------------------------------------------------------------
+    def pending(self) -> int:
+        return sum(ld.pending_tokens for ld in self.loads().values())
+
+    def drain(self, max_steps: int = 10_000) -> Dict[str, Dict[int, List[int]]]:
+        """Step until every tenant's queue and slots are empty; returns
+        per-tenant {rid: tokens} for all requests seen so far."""
+        for _ in range(max_steps):
+            busy = [t for t, eng in self.engines.items()
+                    if eng.queue_depth or eng.active_count]
+            if not busy:
+                break
+            if any(t not in self.subs for t in busy) and self.policy is None:
+                # no policy to re-admit a parked tenant: give it CUs back
+                self.recompose({t: 0 for t in self.engines} |
+                               {t: self.composer.num_cus // max(len(busy), 1)
+                                for t in busy}, reason="drain")
+            self.step()
+        return self.results()
+
+    def results(self) -> Dict[str, Dict[int, List[int]]]:
+        return {t: eng.snapshot() for t, eng in self.engines.items()}
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "steps": self._step_no,
+            "tokens_emitted": dict(self._tokens_emitted),
+            "recompositions": len(self.events),
+            "recompose_seconds": [round(e.seconds, 4) for e in self.events],
+            "reshards_per_tenant": {t: eng.reshard_count
+                                    for t, eng in self.engines.items()},
+            "composition": {t: list(self.subs[t].cu_ids)
+                            for t in self.subs},
+        }

@@ -1,0 +1,190 @@
+"""Deterministic stand-in for `hypothesis`, installed into ``sys.modules`` by
+``conftest.py`` ONLY when the real package is missing (air-gapped containers
+that cannot ``pip install``).  The pinned dev requirements declare the real
+`hypothesis`, so CI always runs the genuine engine; this shim exists so tier-1
+still *collects and passes* without it.
+
+Scope: exactly the API surface the test suite uses — ``given``, ``settings``
+(including profiles), ``assume`` and the ``integers`` / ``booleans`` /
+``floats`` / ``lists`` / ``tuples`` / ``sampled_from`` / ``just`` strategies.
+Examples are drawn from a per-test CRC32-seeded generator (stable across
+processes and runs, PYTHONHASHSEED-independent), with an extra all-minima /
+all-maxima boundary pass where the strategies expose bounds.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+from typing import Any, Callable, Dict, Tuple
+
+import numpy as np
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _UnsatisfiedAssumption
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 boundary: Tuple[Any, ...] = ()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        boundary=(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                     boundary=(False, True))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored: Any) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        boundary=(min_value, max_value))
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: np.random.Generator):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def sampled_from(seq) -> _Strategy:
+    pool = list(seq)
+    return _Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))],
+                     boundary=(pool[0], pool[-1]) if pool else ())
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value, boundary=(value,))
+
+
+# ---------------------------------------------------------------------------
+# settings + profiles
+# ---------------------------------------------------------------------------
+
+_PROFILES: Dict[str, Dict[str, Any]] = {"default": {"max_examples": 25}}
+_ACTIVE_PROFILE = "default"
+
+
+class settings:
+    """Decorator + profile registry mirroring ``hypothesis.settings``."""
+
+    def __init__(self, max_examples: int | None = None,
+                 deadline: Any = None, derandomize: bool = True,
+                 **_ignored: Any):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        # applied above @given: cap the wrapper's example budget
+        if self.max_examples is not None:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+    @staticmethod
+    def register_profile(name: str, **kwargs: Any) -> None:
+        _PROFILES[name] = kwargs
+
+    @staticmethod
+    def load_profile(name: str) -> None:
+        global _ACTIVE_PROFILE
+        if name not in _PROFILES:
+            raise KeyError(f"unknown hypothesis profile {name!r}")
+        _ACTIVE_PROFILE = name
+
+
+def _profile_cap() -> int:
+    return int(_PROFILES[_ACTIVE_PROFILE].get("max_examples", 25))
+
+
+# ---------------------------------------------------------------------------
+# given
+# ---------------------------------------------------------------------------
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixtures, **fixture_kw):
+            budget = min(
+                getattr(wrapper, "_stub_max_examples", None) or 10 ** 9,
+                _profile_cap())
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+
+            def run_one(args, kwargs):
+                try:
+                    fn(*fixtures, *args, **fixture_kw, **kwargs)
+                except _UnsatisfiedAssumption:
+                    pass
+
+            strats = list(arg_strategies) + list(kw_strategies.values())
+            if strats and all(s.boundary for s in strats):
+                for pick in (0, -1):   # all-minima, then all-maxima
+                    run_one(
+                        tuple(s.boundary[pick] for s in arg_strategies),
+                        {k: s.boundary[pick]
+                         for k, s in kw_strategies.items()})
+            for _ in range(budget):
+                run_one(tuple(s.draw(rng) for s in arg_strategies),
+                        {k: s.draw(rng) for k, s in kw_strategies.items()})
+
+        # pytest must only see genuine fixture params: positional strategies
+        # bind the rightmost args (hypothesis semantics), keywords by name.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_pos = len(arg_strategies)
+        bound = {p.name for p in params[len(params) - n_pos:]} if n_pos else set()
+        bound |= set(kw_strategies)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in bound])
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return decorate
+
+
+class _AnyAttr:
+    """Stands in for enums like ``HealthCheck`` — any attribute resolves."""
+
+    def __getattr__(self, name: str) -> str:
+        return name
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for s in (integers, booleans, floats, tuples, lists, sampled_from, just):
+        setattr(st, s.__name__, s)
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.strategies = st
+    mod.HealthCheck = _AnyAttr()
+    mod.__version__ = "0.0.0-stub"
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -7,6 +7,40 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# ---------------------------------------------------------------------------
+# hypothesis: use the real engine when installed (CI installs the pinned dev
+# requirements), otherwise register the deterministic shim so the five
+# property-test modules still collect and pass in air-gapped containers.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
+from hypothesis import settings as _hsettings  # noqa: E402
+
+# CI profile: derandomized, few examples, no deadline — keeps tier-1 in
+# minutes.  Selected by HYPOTHESIS_PROFILE, or automatically when CI is set
+# (GitHub Actions exports CI=true).
+_hsettings.register_profile("ci", max_examples=10, deadline=None,
+                            derandomize=True)
+_hsettings.register_profile("dev", max_examples=25, deadline=None)
+_hsettings.load_profile(os.environ.get(
+    "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Under CI/FAST, skip @pytest.mark.slow cases so the exact tier-1
+    command (`pytest -x -q`) fits the workflow's timeout budget."""
+    if not (os.environ.get("CI") or os.environ.get("FAST")):
+        return
+    skip = pytest.mark.skip(
+        reason="slow case skipped under CI/FAST; run locally without CI=1")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -102,10 +102,14 @@ def test_compressed_psum_cross_pod():
     from functools import partial
     from repro.optim import compressed_psum, ErrorFeedback
 
+    shard_map = getattr(jax, "shard_map", None)  # jax >= 0.5 spelling
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
+
     mesh = jax.make_mesh((8,), ("pod",))
     x = np.random.default_rng(1).normal(size=(8, 64)).astype(np.float32)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=jax.sharding.PartitionSpec("pod"),
              out_specs=jax.sharding.PartitionSpec("pod"))
     def reduce_compressed(xs):

@@ -18,6 +18,7 @@ from repro.models import ssm as S
 # fused / fused_serial selective scan == chunked baseline (values + grads)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("impl", ["fused", "fused_serial"])
 @pytest.mark.parametrize("chunk", [4, 8, 16])
 def test_fused_ssm_matches_baseline(impl, chunk):

@@ -192,6 +192,7 @@ def test_trainer_preemption_checkpoints_and_resumes():
 # serving engine
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_engine_matches_offline_greedy():
     cfg = get_reduced("qwen2.5-32b")
     m = build_model(cfg)
