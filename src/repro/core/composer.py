@@ -23,6 +23,17 @@ from jax.sharding import Mesh
 from repro.core.dse import ExecutionPlan, PlannedLayer
 
 
+def mesh_fingerprint(mesh: Optional[Mesh]) -> Optional[Tuple]:
+    """Identity of a composed mesh for executable caching: axis names, axis
+    sizes, and the exact device ids.  Two recompositions that land a tenant
+    on the same devices in the same arrangement share compiled executables;
+    anything else (different CUs, different count) is a different program."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
 @dataclasses.dataclass(frozen=True)
 class SubAccelerator:
     """A composed accelerator: a contiguous slice of mesh CUs."""
@@ -30,6 +41,9 @@ class SubAccelerator:
     name: str
     cu_ids: Tuple[int, ...]          # columns of the model axis
     mesh: Optional[Mesh]             # None when constructed without devices
+
+    def fingerprint(self) -> Optional[Tuple]:
+        return mesh_fingerprint(self.mesh)
 
 
 def split_axis(devices: np.ndarray, axis: int,

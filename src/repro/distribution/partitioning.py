@@ -211,3 +211,107 @@ def validate_divisibility(shape: Sequence[int], spec: P, mesh: Mesh) -> bool:
         if dim % total:
             return False
     return True
+
+
+def sanitize_spec(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes a PartitionSpec references that this mesh lacks (the
+    'pod' axis on single-pod meshes, and on composed sub-meshes)."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            if not kept:
+                return None
+            return kept if len(kept) > 1 else kept[0]
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def fit_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """sanitize_spec + divisibility: drop sharded axes whose product does not
+    evenly divide the array dim (hymba's 25 heads on a 16-wide model axis,
+    batch=1 long-context cells, odd vocabularies).  Explicit NamedShardings
+    must divide evenly; replication is the graceful degradation, and the
+    roofline table shows its cost."""
+    spec = sanitize_spec(spec, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+
+    def fit(dim, entry):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                prod *= sizes[a]
+        if not kept:
+            return None
+        return tuple(kept) if len(kept) > 1 else kept[0]
+
+    return P(*(fit(d, e) for d, e in zip(shape, entries)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """The sharding-relevant skeleton of a pytree — treedef plus per-leaf
+    (shape, dtype, logical spec) — captured once from an annotated tree and
+    reusable for any target mesh after the values have been stripped.
+
+    This is what lets a live serving engine recompute NamedShardings for an
+    arbitrary composed sub-mesh (grow/shrink/unify) without carrying the
+    Annotated wrappers through the hot path: `shardings(mesh, rules)` fits
+    every leaf's logical spec to the mesh (axis filtering + divisibility
+    fallback to replication) and `avals(mesh, rules)` produces the
+    ShapeDtypeStructs an ahead-of-time lowering needs.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    logicals: Tuple[Optional[LogicalSpec], ...]
+
+    @classmethod
+    def of(cls, tree) -> "ShardingPlan":
+        leaves, treedef = jax.tree_util.tree_flatten(
+            tree, is_leaf=lambda x: isinstance(x, Annotated))
+        shapes, dtypes, logicals = [], [], []
+        for leaf in leaves:
+            val = leaf.value if isinstance(leaf, Annotated) else leaf
+            shapes.append(tuple(getattr(val, "shape", ())))
+            dtypes.append(np.dtype(getattr(val, "dtype", np.float32)))
+            logicals.append(leaf.logical if isinstance(leaf, Annotated)
+                            else None)
+        return cls(treedef, tuple(shapes), tuple(dtypes), tuple(logicals))
+
+    @property
+    def annotated(self) -> bool:
+        return any(l is not None for l in self.logicals)
+
+    def specs(self, mesh: Mesh, rules: ShardingRules) -> list:
+        return [fit_spec(rules.spec(l) if l is not None else P(), shape, mesh)
+                for shape, l in zip(self.shapes, self.logicals)]
+
+    def shardings(self, mesh: Mesh, rules: ShardingRules):
+        """Pytree of NamedShardings on `mesh` (matches the stripped tree)."""
+        return self.treedef.unflatten(
+            [NamedSharding(mesh, s) for s in self.specs(mesh, rules)])
+
+    def avals(self, mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+        """Pytree of ShapeDtypeStructs (with shardings when mesh is given)
+        for ahead-of-time lowering."""
+        if mesh is None:
+            leaves = [jax.ShapeDtypeStruct(s, d)
+                      for s, d in zip(self.shapes, self.dtypes)]
+        else:
+            rules = rules or ShardingRules(rules={})
+            leaves = [jax.ShapeDtypeStruct(s, d, sharding=NamedSharding(mesh, p))
+                      for s, d, p in zip(self.shapes, self.dtypes,
+                                         self.specs(mesh, rules))]
+        return self.treedef.unflatten(leaves)

@@ -6,10 +6,14 @@ dry-run is allowed to fake 512 host devices).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
+
+# spec fitting lives with the sharding rules now (the serving engine fits
+# specs per composed sub-mesh at runtime); re-exported here for launch code.
+from repro.distribution.partitioning import fit_spec, sanitize_spec  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,48 +27,3 @@ def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
                    axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     return jax.make_mesh(shape, axes)
-
-
-def sanitize_spec(spec: P, mesh: Mesh) -> P:
-    """Drop mesh axes a PartitionSpec references that this mesh lacks (the
-    'pod' axis on single-pod meshes)."""
-    names = set(mesh.axis_names)
-
-    def keep(entry):
-        if entry is None:
-            return None
-        if isinstance(entry, tuple):
-            kept = tuple(a for a in entry if a in names)
-            if not kept:
-                return None
-            return kept if len(kept) > 1 else kept[0]
-        return entry if entry in names else None
-
-    return P(*(keep(e) for e in spec))
-
-
-def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
-    """sanitize_spec + divisibility: drop sharded axes whose product does not
-    evenly divide the array dim (hymba's 25 heads on a 16-wide model axis,
-    batch=1 long-context cells, odd vocabularies).  Explicit NamedShardings
-    must divide evenly; replication is the graceful degradation, and the
-    roofline table shows its cost."""
-    spec = sanitize_spec(spec, mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    entries = list(spec) + [None] * (len(shape) - len(spec))
-
-    def fit(dim, entry):
-        if entry is None:
-            return None
-        axes = entry if isinstance(entry, tuple) else (entry,)
-        kept = []
-        prod = 1
-        for a in axes:
-            if dim % (prod * sizes[a]) == 0:
-                kept.append(a)
-                prod *= sizes[a]
-        if not kept:
-            return None
-        return tuple(kept) if len(kept) > 1 else kept[0]
-
-    return P(*(fit(d, e) for d, e in zip(shape, entries)))

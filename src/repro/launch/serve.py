@@ -7,16 +7,30 @@ Single-tenant continuous batching:
 
 Multi-tenant fabric with real-time recomposition (traffic-driven: bursty
 tenants steal CUs from idle ones; a lone busy tenant unifies the fabric).
-Needs one CU (model-axis column) per tenant — on a CPU host fake enough
-devices first:
+Tenant engines run tensor-parallel on their sub-meshes and recompositions
+pre-compile the target composition (--no-tp / --no-warm to disable).  Needs
+one CU (model-axis column) per tenant — on a CPU host fake enough devices
+first:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --fabric \
       --arch minitron-4b --arch qwen2.5-32b --reduced --requests 12
+
+Tokens/s-vs-CU-count scaling curve (the measured counterpart of the
+policy's analytical speedup — run under fake devices as above):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --scaling-curve
+
+TP-decode smoke (2-way TP streams must equal replicated 1-way; CI guard):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --tp-smoke
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -24,11 +38,12 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.distribution import partitioning as part
+from repro.configs.base import ModelConfig
+from repro.core.composer import MeshComposer
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.serve import (AnalyticalPolicy, ComposedServer, ServeConfig,
-                         ServeEngine, TenantSpec)
+                         ServeEngine, TenantSpec, serve_engine_rules)
 
 
 def run_fabric(args) -> int:
@@ -42,7 +57,9 @@ def run_fabric(args) -> int:
                           serve=serve, seed=i)
                for i, arch in enumerate(args.arch)]
     server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
-                            decide_every=args.decide_every)
+                            decide_every=args.decide_every,
+                            tp=not args.no_tp, warm=not args.no_warm,
+                            prewarm_async=args.prewarm_async)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     # bursty open-loop traffic: each tenant gets its requests in one burst
@@ -69,6 +86,9 @@ def run_fabric(args) -> int:
         "events": [{"step": e.step, "reason": e.reason,
                     "sizes": e.sizes_after,
                     "seconds": round(e.seconds, 4),
+                    "warm_compile_seconds": round(e.warm_compile_seconds, 4),
+                    "warm_builds": e.warm_builds,
+                    "overlapped": e.overlapped,
                     "post_step_seconds": {
                         t: round(s, 4)
                         for t, s in e.post_step_seconds.items()}}
@@ -77,10 +97,136 @@ def run_fabric(args) -> int:
     return 0
 
 
+# ---------------------------------------------------------------------------
+# tokens/s vs CU count: the measured scaling curve
+# ---------------------------------------------------------------------------
+
+def bench_config(d_model: int, layers: int, d_ff: int) -> ModelConfig:
+    """A dense decode-bench model heavy enough that per-CU work dominates
+    dispatch overhead on a CPU host (the reduced smoke configs are dominated
+    by fixed per-step cost, which no amount of TP can shrink)."""
+    heads = max(d_model // 128, 1)
+    return ModelConfig(
+        name=f"serve-bench-d{d_model}-L{layers}", family="dense",
+        num_layers=layers, d_model=d_model, num_heads=heads,
+        num_kv_heads=max(heads // 2, 1), d_ff=d_ff, vocab_size=2048,
+        head_dim=128, attn_type="full", dtype="float32", remat=False)
+
+
+def run_scaling(args) -> int:
+    """Measure steady-state decode tokens/s at each sub-mesh size: the
+    direct validation that CUs granted by the policy buy throughput.
+
+    CUs buy *capacity*: the tenant's pooled KV cache shards over its
+    sub-mesh, so a composition of k CUs holds k times the decode slots at
+    the same per-device memory (``--scale-slots-per-cu``).  Decode at small
+    batch is weights-bound, so the extra slots ride the same weight streams
+    and per-step latency stays ~flat while tokens/s scales with the grant —
+    the measured counterpart of the policy's analytical speedup.  The
+    flatness of ``step_ms_by_cus`` is itself part of the evidence."""
+    cfg = bench_config(args.scale_dmodel, args.scale_layers, args.scale_dff)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    comp = MeshComposer(mesh)
+    rules = None if args.no_tp else serve_engine_rules()
+    sizes = [s for s in args.scale_sizes if s <= comp.num_cus]
+    M = args.scale_steps
+    curve, lat, slots = {}, {}, {}
+    for size in sizes:
+        B = args.scale_slots_per_cu * size
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_slots=B, max_len=args.max_len,
+                                      eos_id=-1),
+                          mesh=comp.submesh(range(size), f"cus{size}"),
+                          rules=rules)
+        rng = np.random.default_rng(args.seed)
+        for _ in range(B):
+            eng.submit(rng.integers(1, cfg.vocab_size, size=16),
+                       max_new_tokens=3 * M + 8)
+        for _ in range(3):                    # prefill + warm the executable
+            eng.step()
+        jax.block_until_ready(eng.cache)
+        best, steps_ms = 0.0, []
+        for _ in range(2):                    # best-of-2 absorbs host jitter
+            t0 = time.perf_counter()
+            for _ in range(M):
+                s0 = time.perf_counter()
+                eng.step()
+                steps_ms.append((time.perf_counter() - s0) * 1e3)
+            jax.block_until_ready(eng.cache)
+            best = max(best, B * M / (time.perf_counter() - t0))
+        curve[size], slots[size] = round(best, 2), B
+        arr = np.asarray(steps_ms)
+        lat[size] = {"p50": round(float(np.percentile(arr, 50)), 2),
+                     "p95": round(float(np.percentile(arr, 95)), 2)}
+    monotone = all(curve[a] < curve[b]
+                   for a, b in zip(sizes, sizes[1:]))
+    print(json.dumps({
+        "bench_model": cfg.name, "measured_steps": M,
+        "tp": not args.no_tp,
+        "slots_by_cus": {str(s): slots[s] for s in sizes},
+        "tokens_per_s_by_cus": {str(s): curve[s] for s in sizes},
+        "step_ms_by_cus": {str(s): lat[s] for s in sizes},
+        "monotone": monotone,
+    }, indent=1))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# TP smoke: sharded decode must emit the replicated stream
+# ---------------------------------------------------------------------------
+
+def run_tp_smoke(args) -> int:
+    """2-way TP vs replicated 1-way: same prompts, identical token streams,
+    including across a mid-stream reshard that changes the TP degree.  Fast
+    CI guard against sharded decode silently regressing to replication or
+    diverging from it."""
+    if jax.device_count() < 2:
+        print("tp-smoke needs >= 2 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    cfg = dataclasses.replace(get_reduced("minitron-4b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    comp = MeshComposer(mesh)
+    sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 12)))
+               for _ in range(3)]
+
+    def run(tp, rules, reshard_at=None):
+        eng = ServeEngine(model, params, sc,
+                          mesh=comp.submesh(range(tp), f"tp{tp}"),
+                          rules=rules)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8)
+        step = 0
+        while eng.has_work:
+            if reshard_at and step in reshard_at:
+                eng.reshard_to(comp.submesh(range(reshard_at[step]), "re"))
+            eng.step()
+            step += 1
+            assert step < 200
+        return eng.results()
+
+    ref = run(1, None)                                 # replicated baseline
+    tp2 = run(2, serve_engine_rules())
+    dyn = run(2, serve_engine_rules(), reshard_at={4: 1, 8: 2})
+    ok = ref == tp2 == dyn
+    print(json.dumps({"match_tp2": tp2 == ref, "match_dyn": dyn == ref,
+                      "requests": len(ref), "ok": ok}))
+    if not ok:
+        print("TP smoke FAILED: sharded decode diverged from replicated")
+        return 1
+    print("TP smoke OK: 2-way TP and mid-stream reshard match replicated")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, action="append",
-                    required=True,
                     help="repeat for multiple tenants with --fabric")
     ap.add_argument("--fabric", action="store_true",
                     help="multi-tenant ComposedServer with live recomposition")
@@ -93,8 +239,34 @@ def main(argv=None) -> int:
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-tp", action="store_true",
+                    help="replicated engines (no tensor parallelism)")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip pre-compiling recomposition targets")
+    ap.add_argument("--prewarm-async", action="store_true",
+                    help="compile recomposition targets in a background "
+                         "thread while serving continues")
+    ap.add_argument("--scaling-curve", action="store_true",
+                    help="measure decode tokens/s at each --scale-sizes "
+                         "sub-mesh size")
+    ap.add_argument("--scale-sizes", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--scale-steps", type=int, default=10)
+    ap.add_argument("--scale-slots-per-cu", type=int, default=4,
+                    help="decode slots per granted CU (capacity scales "
+                         "with the composition)")
+    ap.add_argument("--scale-dmodel", type=int, default=2048)
+    ap.add_argument("--scale-layers", type=int, default=4)
+    ap.add_argument("--scale-dff", type=int, default=8192)
+    ap.add_argument("--tp-smoke", action="store_true",
+                    help="assert 2-way TP decode matches replicated decode")
     args = ap.parse_args(argv)
 
+    if args.tp_smoke:
+        return run_tp_smoke(args)
+    if args.scaling_curve:
+        return run_scaling(args)
+    if not args.arch:
+        ap.error("--arch is required (except with --tp-smoke/--scaling-curve)")
     if args.fabric:
         return run_fabric(args)
     if len(args.arch) != 1:
@@ -103,15 +275,16 @@ def main(argv=None) -> int:
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
-    params = part.strip(model.init(jax.random.key(args.seed)))
-    mesh = None
+    params = model.init(jax.random.key(args.seed))
+    mesh = rules = None
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = None if args.no_tp else serve_engine_rules()
 
     engine = ServeEngine(model, params,
                          ServeConfig(max_slots=args.max_slots,
                                      max_len=args.max_len, eos_id=-1),
-                         mesh=mesh)
+                         mesh=mesh, rules=rules)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     rids = []
@@ -121,16 +294,22 @@ def main(argv=None) -> int:
         rids.append(engine.submit(prompt, max_new_tokens=args.max_new_tokens))
     steps = 0
     emitted = 0
-    while engine._queue or engine._active:
+    step_ms = []
+    while engine.has_work:
+        s0 = time.perf_counter()
         emitted += len(engine.step())
+        step_ms.append((time.perf_counter() - s0) * 1e3)
         steps += 1
         if steps > 10_000:
             break
     dt = time.monotonic() - t0
+    arr = np.asarray(step_ms)
     print(json.dumps({
         "requests": args.requests, "decode_steps": steps,
         "tokens_emitted": emitted, "wall_s": round(dt, 2),
         "tokens_per_s": round(emitted / dt, 1),
+        "step_ms": {"p50": round(float(np.percentile(arr, 50)), 2),
+                    "p95": round(float(np.percentile(arr, 95)), 2)},
         "arena_utilization": engine.arena.utilization(),
     }, indent=1))
     return 0

@@ -119,6 +119,11 @@ class Model:
             cache["src_len"] = jnp.asarray(src_len, jnp.int32)
         return cache
 
+    @staticmethod
+    def cache_slot_axes(cache):
+        """Batch-slot axis per cache leaf (see transformer.cache_slot_axes)."""
+        return T.cache_slot_axes(cache)
+
     def prefill(self, params, batch, cache, *, attn_impl: str = "blockwise",
                 moe_dispatch: str = "einsum", residual_spec=None,
                 true_len=None, attn_block: int = 512):

@@ -316,6 +316,26 @@ def decoder_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
             "pos": Annotated(jnp.zeros((batch,), jnp.int32), ("batch",))}
 
 
+def cache_slot_axes(cache) -> PyTree:
+    """Explicit batch-slot axis index per cache leaf, -1 for leaves without
+    one (scalars like ``src_len``).
+
+    Scanned stacks carry the layer axis leading, so their slot axis is 1;
+    every other leaf (prologue layers, per-row ``pos``, cross-attention KV)
+    is slot-leading.  Serving code writes single-request prefill results into
+    the pooled cache along these axes — positional, never inferred from shape
+    mismatch, so a 1-slot pool updates exactly like an N-slot one.
+    """
+    def axis(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return -1
+        head = path[0]
+        name = getattr(head, "key", None)
+        return 1 if name == "scanned" else 0
+
+    return jax.tree_util.tree_map_with_path(axis, cache)
+
+
 def decoder_prefill(params, cfg: ModelConfig, x, positions, cache, *,
                     attn_impl="blockwise", enc_out=None, enc_positions=None,
                     moe_dispatch="einsum", residual_spec=None, true_len=None,

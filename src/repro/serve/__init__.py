@@ -1,8 +1,11 @@
+from repro.serve.compile_cache import ExecutableCache
 from repro.serve.engine import Request, ServeConfig, ServeEngine
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
-                                RecompositionEvent, TenantLoad, TenantSpec)
+                                RecompositionEvent, TenantLoad, TenantSpec,
+                                serve_engine_rules)
 
 __all__ = [
+    "ExecutableCache",
     "Request",
     "ServeConfig",
     "ServeEngine",
@@ -11,4 +14,5 @@ __all__ = [
     "RecompositionEvent",
     "TenantLoad",
     "TenantSpec",
+    "serve_engine_rules",
 ]

@@ -4,25 +4,27 @@ independent accelerators" (paper §1, §2.1).
 
 A :class:`ComposedServer` owns the full device mesh.  Each tenant runs one
 continuous-batching :class:`~repro.serve.engine.ServeEngine` on a
-:class:`~repro.core.composer.MeshComposer` sub-accelerator.  Between decode
-steps the controller samples per-tenant load (queue depth, owed decode work,
-arena pressure) and asks a policy — by default the analytical model driving
-the DSE Stage-2 search — for a new CU split.  When the predicted gain clears
-the hysteresis threshold it *live-recomposes*: the affected tenants' params
-and pooled decode caches are reshard onto their new sub-meshes while
-unaffected tenants keep their exact devices (delta recomposition), so a
-bursty tenant can steal CUs from an idle one mid-stream, and the fabric can
-unify into one monolithic accelerator for a single large job.
+:class:`~repro.core.composer.MeshComposer` sub-accelerator, tensor-parallel
+over its sub-mesh's model axis (``serve_engine_rules``), so a tenant's
+measured tokens/s actually tracks the CUs it holds.  Between decode steps
+the controller samples per-tenant load (queue depth, owed decode work, arena
+pressure) and asks a policy — by default the analytical model driving the
+DSE Stage-2 search — for a new CU split.  When the predicted gain clears the
+hysteresis threshold it *live-recomposes*: the affected tenants' params and
+pooled decode caches are reshard (sharded→sharded device_put) onto their new
+sub-meshes while unaffected tenants keep their exact devices (delta
+recomposition).
 
-Replication-based resharding keeps decode numerics bit-identical across any
-grow/shrink/merge/unify sequence — the property tests/test_fabric.py pins.
-The flip side: replicated decode does not get faster with more CUs yet, so
-the policy's analytical speedup is aspirational until engines run under
-serve_rules() tensor parallelism on their sub-mesh (the planned next step;
-the controller, delta planner and migration protocol are TP-agnostic).
+Reconfiguration cost is attacked on both ends, mirroring the paper's
+real-time story: state migration is a ~10 ms device_put, and the dominant
+post-recomposition XLA recompile (0.7-2.3 s measured cold) is hoisted off
+the serving path by pre-compiling the target composition's decode/prefill
+executables *before* the switch commits (``warm_compile``), optionally in a
+background thread (``prewarm_async``) so compilation overlaps serving.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import itertools
 import math
@@ -30,15 +32,32 @@ import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.common.platform import TPU_V5E, PlatformProfile
 from repro.configs import get_config, get_reduced
 from repro.configs.base import ModelConfig
 from repro.core.analytical import AccelConfig, layer_latency
-from repro.core.composer import MeshComposer, SubAccelerator
+from repro.core.composer import MeshComposer
 from repro.distribution import partitioning as part
 from repro.models import build_model
 from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def serve_engine_rules() -> part.ShardingRules:
+    """serve_rules() tuned for the decode engine's composed sub-meshes.
+
+    Two deltas vs the static-analysis serving rules: the KV cache shards
+    over kv *heads* rather than split-K sequence (a dynamic-position scatter
+    into a sequence-sharded cache forces SPMD to rematerialize the whole
+    cache every step), and head counts that don't divide a given sub-mesh
+    fall back to replication per-leaf at reshard time (fit_spec), so the
+    same rules serve a 1-CU and an 8-CU composition.
+    """
+    rules = dict(part.serve_rules().rules)
+    rules["kv_seq"] = None
+    rules["kv_heads"] = "model"
+    return part.ShardingRules(rules=rules)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,10 +94,14 @@ class RecompositionEvent:
     seconds: float                   # state migration (device_put) only
     reason: str
     # moved tenant -> wall time of its first step on the new composition;
-    # this is where the XLA recompile stall lands, and it dominates the
-    # migration time — filled in by ComposedServer.step()
+    # with a cold executable cache this is where the XLA recompile stall
+    # lands — filled in by ComposedServer.step()
     post_step_seconds: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # ahead-of-time compilation performed before the switch committed
+    warm_compile_seconds: float = 0.0
+    warm_builds: int = 0             # cold executables compiled while warming
+    overlapped: bool = False         # warmed in the background thread
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +116,7 @@ class AnalyticalPolicy:
 
     Hysteresis: a new split is only worth a live recomposition when the
     predicted speedup clears ``min_gain`` — resharding has a real cost
-    (device_put + one recompile per new composition).
+    (device_put + one warm compile per new composition).
     """
 
     def __init__(self, platform: PlatformProfile = TPU_V5E,
@@ -209,19 +232,37 @@ def _candidate_splits(num_cus: int, busy: Sequence[str],
 
 class ComposedServer:
     """Multi-tenant serving on one composable fabric with live, delta
-    recomposition between decode steps."""
+    recomposition between decode steps.
+
+    tp: shard each tenant's engine (params + pooled KV cache) over its
+        sub-mesh with ``serve_engine_rules`` so granted CUs buy measured
+        tokens/s; off -> replicated engines (bit-identical resharding).
+    warm: pre-compile a target composition's executables before committing
+        a recomposition, so the first post-move step skips the XLA stall.
+    prewarm_async: compile candidate compositions in a background thread
+        while the old composition keeps serving; the switch commits on a
+        later autoscale tick once the executables are ready.
+    """
 
     def __init__(self, mesh, tenants: Sequence[TenantSpec], *,
                  policy: Optional[AnalyticalPolicy] = None,
-                 decide_every: int = 4, cu_axis: str = "model"):
+                 decide_every: int = 4, cu_axis: str = "model",
+                 tp: bool = True, warm: bool = True,
+                 prewarm_async: bool = False):
         self.composer = MeshComposer(mesh, cu_axis=cu_axis)
         self.policy = policy
         self.decide_every = decide_every
+        self.rules = serve_engine_rules() if tp else None
+        self.warm = warm
+        self.prewarm_async = prewarm_async
         self.specs = {t.name: t for t in tenants}
         self.events: List[RecompositionEvent] = []
+        self.step_seconds: Dict[str, List[float]] = {t.name: [] for t in tenants}
         self._stall_probe: Dict[str, RecompositionEvent] = {}
         self._step_no = 0
         self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
+        self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._pending_prewarm: Optional[Tuple[Dict[str, int], str, list]] = None
 
         # initial composition: equal shares, remainder to the first tenants
         n = len(tenants)
@@ -241,10 +282,11 @@ class ComposedServer:
             cfg = (get_reduced(spec.arch) if spec.reduced
                    else get_config(spec.arch))
             model = build_model(cfg)
-            params = part.strip(model.init(jax.random.key(spec.seed)))
+            params = model.init(jax.random.key(spec.seed))  # annotated: TP
             self.cfgs[spec.name] = cfg
             self.engines[spec.name] = ServeEngine(
-                model, params, spec.serve, mesh=self.subs[spec.name])
+                model, params, spec.serve, mesh=self.subs[spec.name],
+                rules=self.rules)
 
     # ------------------------------------------------------------------
     def submit(self, tenant: str, tokens, max_new_tokens: int = 16) -> int:
@@ -268,10 +310,26 @@ class ComposedServer:
             if t not in self.subs:
                 continue                      # parked: no CUs this interval
             probe = self._stall_probe.pop(t, None)
-            t0 = time.monotonic() if probe is not None else 0.0
+            busy = eng.has_work
+            q0 = eng.queue_depth
+            t0 = time.monotonic()
             out = eng.step()
             if probe is not None:
-                probe.post_step_seconds[t] = time.monotonic() - t0
+                # pipelined dispatch returns before the step executes; the
+                # probed post-move step must cover the whole step (compile
+                # when cold + execution), not just the async dispatch
+                jax.block_until_ready(eng.cache)
+            dt = time.monotonic() - t0
+            if probe is not None:
+                probe.post_step_seconds[t] = dt
+            elif busy and eng.queue_depth == q0:
+                # decode percentiles only: idle no-op steps would deflate
+                # them; admission steps (blocking prefill) and probed
+                # full-sync steps would inflate them
+                times = self.step_seconds[t]
+                times.append(dt)
+                if len(times) > 10_000:
+                    del times[:5_000]
             self._tokens_emitted[t] += len(out)
             if out:
                 emitted[t] = out
@@ -282,22 +340,64 @@ class ComposedServer:
         return emitted
 
     def autoscale(self) -> Optional[RecompositionEvent]:
-        """Consult the policy; apply the recomposition it asks for."""
+        """Consult the policy; apply the recomposition it asks for.
+
+        With ``prewarm_async`` the switch is two-phase: kick background
+        compiles for the chosen composition, keep serving on the current
+        one, and commit on a later tick once every executable is warm."""
+        if self._pending_prewarm is not None:
+            target, reason, futures = self._pending_prewarm
+            if not all(f.done() for f in futures):
+                return None               # still compiling in the background
+            self._pending_prewarm = None
+            for f in futures:
+                f.result()                # surface background build errors
+            if self._normalized(target) == self._normalized(self.sizes()):
+                return None
+            return self.recompose(target, reason=reason, overlapped=True)
+
         target, reason = self.policy.decide(
             self.loads(), self.cfgs, self.sizes(), self.composer.num_cus)
         target = {t: s for t, s in target.items() if s > 0}
-        if target == {t: s for t, s in self.sizes().items() if s > 0}:
+        if target == self._normalized(self.sizes()):
+            return None
+        if self.warm and self.prewarm_async:
+            new_subs, delta = self.composer.recompose(self.subs, target)
+            futures = [self._pool().submit(self.engines[t].warm_compile,
+                                           new_subs[t])
+                       for t in delta.moved + delta.admitted]
+            self._pending_prewarm = (target, reason, futures)
             return None
         return self.recompose(target, reason=reason)
 
+    @staticmethod
+    def _normalized(sizes: Mapping[str, int]) -> Dict[str, int]:
+        return {t: s for t, s in sizes.items() if s > 0}
+
+    def _pool(self) -> concurrent.futures.ThreadPoolExecutor:
+        if self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="prewarm")
+        return self._executor
+
     def recompose(self, target_sizes: Mapping[str, int], *,
-                  reason: str = "manual") -> RecompositionEvent:
+                  reason: str = "manual",
+                  overlapped: bool = False) -> RecompositionEvent:
         """Live recomposition: grow/shrink/admit/park tenants.  Only moved
-        tenants pay a state migration; unchanged ones keep their devices."""
+        tenants pay a state migration; unchanged ones keep their devices.
+        With warming on, the target composition's executables are compiled
+        before any state moves, so the post-move step is stall-free."""
         before = self.sizes()
-        t0 = time.monotonic()
         new_subs, delta = self.composer.recompose(self.subs, target_sizes)
-        for t in delta.moved + delta.admitted:
+        touched = delta.moved + delta.admitted
+        warm_s, warm_builds = 0.0, 0
+        if self.warm:
+            w0 = time.monotonic()
+            for t in touched:
+                warm_builds += self.engines[t].warm_compile(new_subs[t])
+            warm_s = time.monotonic() - w0
+        t0 = time.monotonic()
+        for t in touched:
             eng = self.engines[t]
             eng.reshard_to(new_subs[t])
             jax.block_until_ready((eng.params, eng.cache))
@@ -305,8 +405,10 @@ class ComposedServer:
         seconds = time.monotonic() - t0
         event = RecompositionEvent(
             step=self._step_no, sizes_before=before, sizes_after=self.sizes(),
-            moved=delta.moved + delta.admitted, unchanged=delta.unchanged,
-            parked=delta.evicted, seconds=seconds, reason=reason)
+            moved=touched, unchanged=delta.unchanged,
+            parked=delta.evicted, seconds=seconds, reason=reason,
+            warm_compile_seconds=warm_s, warm_builds=warm_builds,
+            overlapped=overlapped)
         for t in event.moved:
             self._stall_probe[t] = event
         self.events.append(event)
@@ -322,11 +424,10 @@ class ComposedServer:
         return sum(ld.pending_tokens for ld in self.loads().values())
 
     def drain(self, max_steps: int = 10_000) -> Dict[str, Dict[int, List[int]]]:
-        """Step until every tenant's queue and slots are empty; returns
-        per-tenant {rid: tokens} for all requests seen so far."""
+        """Step until every tenant's queue, slots and in-flight dispatches
+        are empty; returns per-tenant {rid: tokens} for all requests seen."""
         for _ in range(max_steps):
-            busy = [t for t, eng in self.engines.items()
-                    if eng.queue_depth or eng.active_count]
+            busy = [t for t, eng in self.engines.items() if eng.has_work]
             if not busy:
                 break
             if any(t not in self.subs for t in busy) and self.policy is None:
@@ -340,14 +441,31 @@ class ComposedServer:
     def results(self) -> Dict[str, Dict[int, List[int]]]:
         return {t: eng.snapshot() for t, eng in self.engines.items()}
 
+    def decode_step_ms(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant decode step latency percentiles (milliseconds)."""
+        out = {}
+        for t, times in self.step_seconds.items():
+            if not times:
+                continue
+            arr = np.asarray(times) * 1e3
+            out[t] = {"p50": round(float(np.percentile(arr, 50)), 3),
+                      "p95": round(float(np.percentile(arr, 95)), 3),
+                      "n": len(times)}
+        return out
+
     def stats(self) -> Dict[str, object]:
         return {
             "steps": self._step_no,
             "tokens_emitted": dict(self._tokens_emitted),
             "recompositions": len(self.events),
             "recompose_seconds": [round(e.seconds, 4) for e in self.events],
+            "warm_compile_seconds": [round(e.warm_compile_seconds, 4)
+                                     for e in self.events],
             "reshards_per_tenant": {t: eng.reshard_count
                                     for t, eng in self.engines.items()},
+            "compile_builds": {t: eng.compile_builds
+                               for t, eng in self.engines.items()},
+            "decode_step_ms": self.decode_step_ms(),
             "composition": {t: list(self.subs[t].cu_ids)
                             for t in self.subs},
         }

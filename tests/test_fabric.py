@@ -213,6 +213,145 @@ def test_composed_server_delta_leaves_unmoved_tenant_devices():
     assert res["a_ndev"] == 4 and res["b_ndev"] == 2
 
 
+def test_tp_decode_equivalence_across_degrees():
+    """Same prompts through 1-way (replicated), 2-way and 4-way TP
+    sub-meshes must emit identical token streams, including across a
+    mid-stream reshard_to() that changes the TP degree (satellite +
+    tentpole acceptance: sharded decode is an implementation detail, never
+    a numerics change a user can observe)."""
+    res = _run("""
+    import dataclasses
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.models import build_model
+    from repro.serve import ServeConfig, ServeEngine, serve_engine_rules
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    # fp32: greedy argmax must be reduction-order-proof across TP degrees
+    cfg = dataclasses.replace(get_reduced("minitron-4b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(4, 12))) for _ in range(3)]
+
+    def run(tp, rules, script=None):
+        eng = ServeEngine(model, params, sc,
+                          mesh=comp.submesh(range(tp), f"tp{tp}"),
+                          rules=rules)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=10)
+        step = 0
+        while eng.has_work:
+            if script and step in script:
+                eng.reshard_to(comp.submesh(range(script[step]), "re"))
+            eng.step()
+            step += 1
+            assert step < 200
+        return {str(r): t for r, t in eng.results().items()}
+
+    rules = serve_engine_rules()
+    ref = run(1, None)                           # replicated baseline
+    tp2 = run(2, rules)
+    tp4 = run(4, rules)
+    dyn = run(4, rules, {3: 2, 7: 8, 11: 4})     # shrink -> unify -> back
+    print(json.dumps({"n": len(ref), "tp2": tp2 == ref, "tp4": tp4 == ref,
+                      "dyn": dyn == ref}))
+    """)
+    assert res["n"] == 3
+    assert res["tp2"] and res["tp4"], "TP decode diverged from replicated"
+    assert res["dyn"], "mid-stream TP-degree change altered the stream"
+
+
+def test_warm_recompose_skips_post_move_compile():
+    """With warming on, the target composition's executables are built
+    before the switch commits: the first post-move step performs zero cold
+    compiles, and the engine is actually sharded over its new sub-mesh."""
+    res = _run("""
+    from repro.serve.fabric import ComposedServer, TenantSpec
+    from repro.serve.engine import ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
+    srv = ComposedServer(mesh, [
+        TenantSpec("a", "minitron-4b", serve=sc),
+        TenantSpec("b", "minitron-4b", seed=1, serve=sc),
+    ], policy=None, tp=True, warm=True)          # sizes: a=4, b=4
+    rng = np.random.default_rng(0)
+    vocab = srv.cfgs["a"].vocab_size
+    for t in ("a", "b"):
+        srv.submit(t, rng.integers(1, vocab, size=8), max_new_tokens=16)
+    for _ in range(3):
+        srv.step()                               # executables for 4+4 built
+
+    ev = srv.recompose({"a": 6, "b": 2})
+    builds_after_warm = {t: srv.engines[t].compile_builds for t in "ab"}
+    srv.step()                                   # first post-move step
+    builds_after_step = {t: srv.engines[t].compile_builds for t in "ab"}
+
+    def tp_degree(t):
+        leaf = jax.tree.leaves(srv.engines[t].params)[0]
+        return len(leaf.sharding.device_set)
+
+    print(json.dumps({
+        "warm_builds": ev.warm_builds,
+        "warm_seconds_pos": ev.warm_compile_seconds > 0,
+        "cold_after_move": {t: builds_after_step[t] - builds_after_warm[t]
+                            for t in "ab"},
+        "a_ndev": tp_degree("a"), "b_ndev": tp_degree("b"),
+        "post_step_recorded": sorted(ev.post_step_seconds),
+    }))
+    """)
+    assert res["warm_builds"] >= 2 and res["warm_seconds_pos"]
+    assert res["cold_after_move"] == {"a": 0, "b": 0}, \
+        "post-recomposition step recompiled despite warming"
+    assert res["a_ndev"] == 6 and res["b_ndev"] == 2
+    assert res["post_step_recorded"] == ["a", "b"]
+
+
+def test_prewarm_async_commits_after_background_compile():
+    """prewarm_async: the policy's chosen composition compiles in a
+    background thread while the old composition keeps serving; the switch
+    commits on a later autoscale tick, marked `overlapped`, and every
+    request still completes with its full budget."""
+    res = _run("""
+    import time
+    from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
+                                    TenantSpec)
+    from repro.serve.engine import ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    srv = ComposedServer(mesh, [
+        TenantSpec("a", "minitron-4b", serve=sc),
+        TenantSpec("b", "minitron-4b", seed=1, serve=sc),
+    ], policy=AnalyticalPolicy(), decide_every=2, prewarm_async=True)
+    rng = np.random.default_rng(0)
+    vocab = srv.cfgs["a"].vocab_size
+    for _ in range(4):
+        srv.submit("a", rng.integers(1, vocab, size=8), max_new_tokens=24)
+    steps = 0
+    while (not srv.events) and steps < 300:
+        srv.step()
+        if srv._pending_prewarm is not None:
+            time.sleep(0.05)      # let the compile thread make progress
+        steps += 1
+    out = srv.drain(max_steps=400)
+    lens = sorted(len(v) for v in out["a"].values())
+    print(json.dumps({
+        "events": len(srv.events),
+        "overlapped": [e.overlapped for e in srv.events],
+        "lens": lens,
+    }))
+    """)
+    assert res["events"] >= 1
+    assert res["overlapped"][0] is True, \
+        "first recomposition should commit from the background prewarm"
+    assert res["lens"] == [24, 24, 24, 24]
+
+
 @pytest.mark.slow
 def test_traffic_driven_autoscale_end_to_end():
     """Policy-driven fabric: a burst triggers at least one recomposition and
