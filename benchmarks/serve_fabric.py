@@ -13,7 +13,11 @@ the serving path makes:
   ~flat (the curve reports both);
 * warm-vs-cold recomposition stall: the first post-move decode step with
   the target composition's executables pre-compiled vs with a cold cache
-  (where the XLA recompile lands).
+  (where the XLA recompile lands);
+* the ``mixed`` heterogeneous scenario: transformer decode + mamba SSM +
+  encoder tenants on one fabric under class-aware CU costing, with
+  per-class throughput (tokens/s, or seqs/s for the encoder) and
+  recomposition stalls.
 
 Each scenario is the launcher itself (``repro.launch.serve``) run in a
 subprocess because it fakes 8 host devices and the device count is locked
@@ -35,6 +39,11 @@ _FABRIC = [sys.executable, "-m", "repro.launch.serve", "--fabric",
            "--arch", "minitron-4b", "--arch", "qwen2.5-32b",
            "--reduced", "--requests", "4", "--max-new-tokens", "12",
            "--seed", "0"]
+# heterogeneous fleet: one tenant per workload class (transformer decode +
+# mamba SSM + encoder embedding) under class-aware CU costing
+_MIXED = [sys.executable, "-m", "repro.launch.serve", "--fabric",
+          "--scenario", "mixed", "--reduced", "--requests", "4",
+          "--max-new-tokens", "12", "--seed", "0"]
 _SCALING = [sys.executable, "-m", "repro.launch.serve", "--scaling-curve",
             "--scale-sizes", "1", "2", "4", "--scale-steps", "10",
             "--seed", "0"]
@@ -60,6 +69,7 @@ def _stalls(stats):
 def main() -> None:
     warm = _run(_FABRIC)
     cold = _run(_FABRIC + ["--no-warm"])
+    mixed = _run(_MIXED)
     scaling = _run(_SCALING)
 
     wall_s = warm["wall_s"]
@@ -101,6 +111,23 @@ def main() -> None:
             "cold_over_warm_max": round(cold_max / warm_max, 1)
             if warm_max else None,
         },
+        # heterogeneous fleet: one tenant per workload class on one fabric,
+        # class-aware costing (decode bandwidth / SSM state bandwidth /
+        # encoder compute).  Throughput is tokens/s for decode+ssm tenants
+        # and seqs/s (completed embeddings) for the encoder tenant.
+        "mixed": {
+            "tenants": mixed["tenants"],
+            "workload_classes": mixed["workload_classes"],
+            "decode_steps": mixed["decode_steps"],
+            "wall_s": mixed["wall_s"],
+            "per_class_throughput": mixed["per_class_throughput"],
+            "recompositions": mixed["recompositions"],
+            "recompose_reasons": [e["reason"] for e in mixed["events"]],
+            "recomposition_stall_s": {
+                "each": [round(s, 4) for s in _stalls(mixed)],
+                "max": round(max(_stalls(mixed), default=0.0), 4),
+            },
+        },
         # measured counterpart of the policy's analytical speedup: decode
         # tokens/s as the same tenant's sub-mesh grows
         "scaling_curve": {
@@ -116,6 +143,10 @@ def main() -> None:
         print(f"serve_fabric,{key},{record[key]}")
     for t, tps in record["tokens_per_s_per_tenant"].items():
         print(f"serve_fabric,tokens_per_s[{t}],{tps}")
+    for t, tp in record["mixed"]["per_class_throughput"].items():
+        print(f"serve_fabric,mixed_{tp['unit']}[{t}],{tp['value']}")
+    print(f"serve_fabric,mixed_recompositions,"
+          f"{record['mixed']['recompositions']}")
     for cus, tps in record["scaling_curve"]["tokens_per_s_by_cus"].items():
         print(f"serve_fabric,scaling_tokens_per_s[{cus}cu],{tps}")
     print(f"serve_fabric,scaling_monotone,"

@@ -10,7 +10,10 @@ The scenario (8 fake host devices, 8 CUs on the 'model' axis):
             untouched requests keep their devices until B is parked);
   phase 3 — a single large job arrives for A: the fabric unifies into the
             monolithic accelerator (paper's CHARM-1 operating point is one
-            composition of the same fabric).
+            composition of the same fabric);
+  phase 4 — a heterogeneous fleet: transformer decode + mamba SSM +
+            encoder embedding tenants share the fabric under class-aware
+            costing (each workload priced by its bound resource).
 
 Run (fakes 8 devices; ONLY examples/dry-run may do this):
   PYTHONPATH=src python examples/multi_tenant_serve.py
@@ -32,6 +35,55 @@ def run_phase(server, title, steps):
     sizes = server.sizes()
     print(f"{title}: composition={sizes} "
           f"pending={ {t: ld.pending_tokens for t, ld in server.loads().items()} }")
+
+
+def heterogeneous_fleet():
+    """One fabric, three workload classes (FILCO's diverse-workload claim):
+    a transformer decode tenant, a mamba SSM tenant (constant-size recurrent
+    state) and an encoder tenant (prefill-only embeddings) share 8 CUs under
+    the class-aware analytical policy — each priced by its bound resource
+    (weight bandwidth / state bandwidth / compute)."""
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    serve = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    server = ComposedServer(
+        mesh,
+        [TenantSpec("llm", "minitron-4b", serve=serve),
+         TenantSpec("mamba", "falcon-mamba-7b", seed=1, serve=serve),
+         TenantSpec("embed", "qwen2.5-32b", seed=2, serve=serve,
+                    workload="encoder")],
+        policy=AnalyticalPolicy(),
+        decide_every=3)
+    print(f"\nheterogeneous fleet: classes={server.classes} "
+          f"composition={server.sizes()}")
+    rng = np.random.default_rng(1)
+
+    def traffic(name, n, new):
+        vocab = server.cfgs[name].vocab_size
+        for _ in range(n):
+            server.submit(name, rng.integers(1, vocab, size=8),
+                          max_new_tokens=new)
+
+    # wave 1: decode + embedding traffic only — the idle mamba tenant is
+    # parked and its CUs go to the busy classes
+    traffic("llm", 2, 10)
+    traffic("embed", 4, 0)
+    for _ in range(8):
+        server.step()
+    # wave 2: a mamba burst — the policy admits it back, stealing CUs from
+    # the winding-down classes (a live recomposition between classes)
+    traffic("mamba", 3, 12)
+    out = server.drain(max_steps=200)
+    done = {t: len(d) for t, d in out.items()}
+    print(f"completed per tenant: {done}")
+    for e in server.events:
+        print(f"  step {e.step:3d} [{e.reason}] {e.sizes_before} -> "
+              f"{e.sizes_after}")
+    assert done == {"llm": 2, "mamba": 3, "embed": 4}
+    assert server.events, "expected the policy to recompose between classes"
+    # embeddings are real vectors, not token streams
+    emb = next(iter(server.engines["embed"].results().values()))
+    assert len(emb) == server.cfgs["embed"].d_model
+    print("heterogeneous fleet OK")
 
 
 def main():
@@ -82,6 +134,7 @@ def main():
                for e in server.events), "expected a unify step"
     print(f"\nstats: {server.stats()}")
     print("multi-tenant recomposition OK")
+    heterogeneous_fleet()
 
 
 if __name__ == "__main__":

@@ -196,6 +196,43 @@ def layer_latency(cfg: AccelConfig, platform: PlatformProfile,
                             cfg.num_fmus, cus)
 
 
+def ssm_step_latency(cfg: AccelConfig, platform: PlatformProfile,
+                     batch: int, d_model: int, d_inner: int, state_dim: int,
+                     conv_width: int, dt_rank: int, *,
+                     dtype_bytes: int = 4) -> float:
+    """Price ONE mamba-block decode step on a design point.
+
+    An SSM decode step is not a GEMM pipeline: the projections are batched
+    GEMVs against once-streamed weights, and the recurrence is an
+    elementwise update of the (batch, d_inner, N) hidden state that must be
+    read AND written every token.  The step is therefore bound by *state +
+    parameter bandwidth*, with compute far below the MM roofline — the
+    class-aware serving policy prices SSM tenants with this model instead of
+    the decode-GEMM model, which is exactly where heterogeneous composition
+    wins (a bandwidth-starved class and a compute-starved class happily
+    split one fabric).
+    """
+    b = max(batch, 1)
+    # weights streamed once per step (in/x/dt/out projections + conv taps)
+    param_elems = (2 * d_model * d_inner          # in_proj (x and z)
+                   + conv_width * d_inner          # depthwise conv
+                   + d_inner * (dt_rank + 2 * state_dim)   # x_proj
+                   + dt_rank * d_inner             # dt_proj
+                   + d_inner * d_model)            # out_proj
+    # recurrent state: h (d_inner, N) and the conv window, read + written
+    state_elems = 2 * b * (d_inner * state_dim + (conv_width - 1) * d_inner)
+    ddr_s = dtype_bytes * (param_elems + state_elems) \
+        / (max(cfg.num_cus, 1) * platform.hbm_bw)
+    # compute: one MAC per streamed weight per batch row (GEMVs) plus ~6
+    # elementwise ops per state element (exp, mul, add of the recurrence)
+    flops = 2.0 * b * param_elems + 6.0 * b * d_inner * state_dim
+    engine_flops_s = (platform.atom_flops * platform.compute_clock_hz
+                      / platform.atom_cycles)
+    compute_s = flops / (max(cfg.num_cus * cfg.aies_per_cu, 1)
+                         * engine_flops_s)
+    return max(compute_s, ddr_s) + LAUNCH_OVERHEAD_S
+
+
 # ---------------------------------------------------------------------------
 # design points: FILCO + the paper's baselines on VCK190
 # ---------------------------------------------------------------------------

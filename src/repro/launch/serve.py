@@ -16,6 +16,13 @@ first:
   PYTHONPATH=src python -m repro.launch.serve --fabric \
       --arch minitron-4b --arch qwen2.5-32b --reduced --requests 12
 
+Heterogeneous fleet (one tenant per workload class — transformer decode +
+mamba SSM + encoder embedding — with class-aware CU costing):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --fabric --scenario mixed \
+      --reduced --requests 6
+
 Tokens/s-vs-CU-count scaling curve (the measured counterpart of the
 policy's analytical speedup — run under fake devices as above):
 
@@ -46,6 +53,14 @@ from repro.serve import (AnalyticalPolicy, ComposedServer, ServeConfig,
                          ServeEngine, TenantSpec, serve_engine_rules)
 
 
+# the heterogeneous fleet --scenario mixed serves: one tenant per workload
+# class, so the class-aware policy splits the fabric across all three bound
+# resources (decode bandwidth / SSM state bandwidth / encoder compute)
+MIXED_FLEET = (("decode", "minitron-4b"),
+               ("ssm", "falcon-mamba-7b"),
+               ("encoder", "qwen2.5-32b"))
+
+
 def run_fabric(args) -> int:
     """Traffic-driven multi-tenant serving on one recomposable fabric."""
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
@@ -53,9 +68,14 @@ def run_fabric(args) -> int:
             jax.make_mesh((1, jax.device_count()), ("data", "model")))
     serve = ServeConfig(max_slots=args.max_slots, max_len=args.max_len,
                         eos_id=-1)
-    tenants = [TenantSpec(f"tenant{i}-{arch}", arch, reduced=args.reduced,
-                          serve=serve, seed=i)
-               for i, arch in enumerate(args.arch)]
+    if args.scenario == "mixed":
+        tenants = [TenantSpec(f"{w}-{arch}", arch, reduced=args.reduced,
+                              serve=serve, seed=i, workload=w)
+                   for i, (w, arch) in enumerate(MIXED_FLEET)]
+    else:
+        tenants = [TenantSpec(f"tenant{i}-{arch}", arch, reduced=args.reduced,
+                              serve=serve, seed=i)
+                   for i, arch in enumerate(args.arch)]
     server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
                             decide_every=args.decide_every,
                             tp=not args.no_tp, warm=not args.no_warm,
@@ -80,9 +100,19 @@ def run_fabric(args) -> int:
             break
     dt = time.monotonic() - t0
     stats = server.stats()
+    # per-class throughput: decode/ssm tenants emit tokens, encoder tenants
+    # emit completed sequences (embeddings)
+    throughput = {
+        t: {"class": server.classes[t],
+            "unit": ("seqs_per_s" if server.classes[t] == "encoder"
+                     else "tokens_per_s"),
+            "value": round(stats["tokens_emitted"][t] / dt, 2)}
+        for t in server.engines}
     print(json.dumps({
-        "tenants": [t.name for t in tenants], "decode_steps": steps,
+        "tenants": [t.name for t in tenants], "scenario": args.scenario,
+        "decode_steps": steps,
         "wall_s": round(dt, 2), **stats,
+        "per_class_throughput": throughput,
         "events": [{"step": e.step, "reason": e.reason,
                     "sizes": e.sizes_after,
                     "seconds": round(e.seconds, 4),
@@ -230,6 +260,11 @@ def main(argv=None) -> int:
                     help="repeat for multiple tenants with --fabric")
     ap.add_argument("--fabric", action="store_true",
                     help="multi-tenant ComposedServer with live recomposition")
+    ap.add_argument("--scenario", choices=["bursty", "mixed"],
+                    default="bursty",
+                    help="fabric traffic: 'bursty' serves the --arch tenants; "
+                         "'mixed' serves one tenant per workload class "
+                         "(transformer decode + mamba SSM + encoder)")
     ap.add_argument("--decide-every", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
@@ -265,8 +300,16 @@ def main(argv=None) -> int:
         return run_tp_smoke(args)
     if args.scaling_curve:
         return run_scaling(args)
+    if args.scenario == "mixed":
+        if not args.fabric:
+            ap.error("--scenario mixed requires --fabric")
+        if args.arch:
+            ap.error("--scenario mixed picks its own per-class fleet; "
+                     "drop --arch")
+        return run_fabric(args)
     if not args.arch:
-        ap.error("--arch is required (except with --tp-smoke/--scaling-curve)")
+        ap.error("--arch is required (except with "
+                 "--tp-smoke/--scaling-curve/--fabric --scenario mixed)")
     if args.fabric:
         return run_fabric(args)
     if len(args.arch) != 1:

@@ -161,6 +161,32 @@ class Model:
             out_cache["src_len"] = jnp.asarray(batch["frames"].shape[1], jnp.int32)
         return logits, out_cache
 
+    def encode(self, params, batch, *, attn_impl: str = "blockwise"):
+        """Full-sequence hidden states for prefill-only / embedding
+        workloads (no cache, no decode loop) -> (B, S, d).
+
+        Enc-dec archs run the bidirectional encoder stack (over ``frames``
+        when provided, else the token embeddings stand in for the
+        precomputed frame embeddings — the frontend is a STUB); decoder-only
+        archs (dense/MoE/SSM alike) run the causal decoder stack and return
+        the final-norm hidden states.  This is what the throughput-oriented
+        EncoderEngine batches: compute-bound full-sequence matmuls, priced
+        as such by the class-aware recomposition policy.
+        """
+        cfg = self.cfg
+        if cfg.is_encdec:
+            frames = batch.get("frames")
+            if frames is None:
+                frames = jnp.take(params["embed"], batch["tokens"], axis=0)
+            enc_out, _ = self._encode(params, frames, attn_impl)
+            return enc_out
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        x, _ = T.decoder_fwd(params["decoder"], cfg, x, pos,
+                             attn_impl=attn_impl)
+        return L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+
     def decode_step(self, params, cache, tokens, *, moe_dispatch: str = "einsum"):
         """tokens: (B, 1) -> (logits (B, V), cache)."""
         cfg = self.cfg

@@ -30,6 +30,14 @@ def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
     return d_inner, dt_rank, s.state_dim, s.conv_width
 
 
+def state_elems(cfg: ModelConfig) -> int:
+    """Per-slot recurrent-state elements of ONE mamba block: the conv window
+    plus the (d_inner, N) hidden state.  Constant in sequence length — the
+    reason SSM serving admits by slot count, not by prompt length."""
+    d_in, _, n, w = dims(cfg)
+    return (w - 1) * d_in + d_in * n
+
+
 def mamba_init(rng, cfg: ModelConfig):
     d = cfg.d_model
     d_in, dt_rank, n, w = dims(cfg)

@@ -1,14 +1,18 @@
 from repro.serve.compile_cache import ExecutableCache
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.engine import DecodeEngine, Request, ServeConfig, ServeEngine
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                 RecompositionEvent, TenantLoad, TenantSpec,
                                 serve_engine_rules)
+from repro.workloads import EncoderEngine, SSMEngine
 
 __all__ = [
     "ExecutableCache",
     "Request",
     "ServeConfig",
     "ServeEngine",
+    "DecodeEngine",
+    "SSMEngine",
+    "EncoderEngine",
     "AnalyticalPolicy",
     "ComposedServer",
     "RecompositionEvent",

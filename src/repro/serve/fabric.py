@@ -2,14 +2,16 @@
 "reconfigured in real-time and flexibly composed into a unified or multiple
 independent accelerators" (paper §1, §2.1).
 
-A :class:`ComposedServer` owns the full device mesh.  Each tenant runs one
-continuous-batching :class:`~repro.serve.engine.ServeEngine` on a
+A :class:`ComposedServer` owns the full device mesh.  Each tenant runs the
+engine of its *workload class* (transformer decode / SSM recurrent decode /
+encoder embedding — :mod:`repro.workloads`) on a
 :class:`~repro.core.composer.MeshComposer` sub-accelerator, tensor-parallel
 over its sub-mesh's model axis (``serve_engine_rules``), so a tenant's
-measured tokens/s actually tracks the CUs it holds.  Between decode steps
-the controller samples per-tenant load (queue depth, owed decode work, arena
+measured throughput actually tracks the CUs it holds.  Between decode steps
+the controller samples per-tenant load (queue depth, owed work, arena
 pressure) and asks a policy — by default the analytical model driving the
-DSE Stage-2 search — for a new CU split.  When the predicted gain clears the
+DSE Stage-2 search, pricing each tenant by its class's bound resource — for
+a new CU split.  When the predicted gain clears the
 hysteresis threshold it *live-recomposes*: the affected tenants' params and
 pooled decode caches are reshard (sharded→sharded device_put) onto their new
 sub-meshes while unaffected tenants keep their exact devices (delta
@@ -37,11 +39,13 @@ import numpy as np
 from repro.common.platform import TPU_V5E, PlatformProfile
 from repro.configs import get_config, get_reduced
 from repro.configs.base import ModelConfig
-from repro.core.analytical import AccelConfig, layer_latency
+from repro.core.analytical import AccelConfig, layer_latency, ssm_step_latency
 from repro.core.composer import MeshComposer
 from repro.distribution import partitioning as part
 from repro.models import build_model
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.models.ssm import dims as ssm_dims
+from repro.workloads import (DECODE, ENCODER, SSM, Engine, ExecutableCache,
+                             ServeConfig, build_engine, workload_class_of)
 
 
 def serve_engine_rules() -> part.ShardingRules:
@@ -69,6 +73,10 @@ class TenantSpec:
     reduced: bool = True
     serve: ServeConfig = ServeConfig()
     seed: int = 0
+    # workload class: "auto" derives from the arch (attention-free SSM ->
+    # "ssm", else "decode"); "encoder" is an explicit tenant choice — any
+    # arch can serve prefill-only/embedding traffic
+    workload: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,29 +116,72 @@ class RecompositionEvent:
 # policy: Stage-2-style split search on the analytical model
 # ---------------------------------------------------------------------------
 
+# tile of sequence tokens used to price encoder (full-sequence MM) work in
+# its compute-bound regime; the per-token cost is normalized back out
+ENC_COST_TILE = 128
+
+
+def _composed_total_s(lb, cus: int) -> float:
+    """Latency of an MM layer on a composed TPU sub-accelerator.
+
+    ``layer_latency`` models the board, where every CU shares one DDR — its
+    DDR/stream terms are flat in CU count.  On the TPU fabric each CU is a
+    mesh column with its own HBM and VMEM, so bandwidth scales with the
+    grant; all workload classes must be priced on that same assumption
+    (``ssm_step_latency`` already divides by CUs) or the split search
+    compares classes on inconsistent rooflines.  Compute is already divided
+    by CUs inside ``layer_latency``."""
+    c = max(cus, 1)
+    return max(lb.compute_s, lb.ddr_s / c, lb.stream_s / c) + lb.launch_s
+
+
 class AnalyticalPolicy:
-    """Chooses a CU split by pricing each tenant's decode step on candidate
+    """Chooses a CU split by pricing each tenant's step on candidate
     sub-accelerator design points with the analytical latency model (the same
     machinery DSE Stage 2 schedules with, §3.1) and minimizing the predicted
     makespan of the owed work.
 
+    Class-aware costing (the heterogeneous-workload point): each tenant is
+    priced by its workload class's actual bound resource —
+
+    * ``decode``  — bandwidth-bound batched GEMV per decode step (weights
+      streamed every token);
+    * ``ssm``     — state-bandwidth-bound recurrent update per step
+      (``ssm_step_latency``: params + read/write of the O(1) state);
+    * ``encoder`` — compute-bound full-sequence MMs per owed prompt token.
+
+    So a compute-starved encoder tenant and a bandwidth-starved decode
+    tenant are priced on different rooflines, and the split search allocates
+    CUs by where they actually buy throughput instead of a one-size
+    decode-GEMM model.
+
     Hysteresis: a new split is only worth a live recomposition when the
     predicted speedup clears ``min_gain`` — resharding has a real cost
-    (device_put + one warm compile per new composition).
+    (device_put + one warm compile per new composition).  After every
+    ``decide`` the policy exposes ``runner_up``: the best candidate split it
+    did NOT return (the hysteresis-rejected best, or the second-best when a
+    switch was returned) — the fabric speculatively prewarms it during idle
+    decide intervals.
     """
 
     def __init__(self, platform: PlatformProfile = TPU_V5E,
                  min_gain: float = 1.25):
         self.platform = platform
         self.min_gain = min_gain
-        self._cost_cache: Dict[Tuple[str, int, int], float] = {}
+        self._cost_cache: Dict[Tuple, float] = {}
+        self.runner_up: Optional[Dict[str, int]] = None
 
-    # -- per-tenant decode-step cost on a c-CU sub-accelerator -------------
-    def step_cost(self, cfg: ModelConfig, batch: int, cus: int) -> float:
+    # -- per-tenant per-step cost on a c-CU sub-accelerator ----------------
+    def step_cost(self, cfg: ModelConfig, batch: int, cus: int,
+                  wclass: str = DECODE) -> float:
         if cus <= 0:
             return float("inf")
-        # full and reduced configs share a name: key on the priced dims too
-        key = (cfg.name, cfg.num_layers, cfg.d_model, max(batch, 1), cus)
+        # the key carries the workload class: an SSM/encoder tenant sharing
+        # a cfg.name with a transformer tenant must never read a stale
+        # decode-GEMM price (and full/reduced configs share a name: key on
+        # the priced dims too)
+        key = (wclass, cfg.name, cfg.num_layers, cfg.d_model,
+               max(batch, 1), cus)
         if key not in self._cost_cache:
             accel = AccelConfig(
                 name=f"tpu-sub{cus}", num_cus=cus,
@@ -138,52 +189,97 @@ class AnalyticalPolicy:
                 onchip_elems=cus * (self.platform.onchip_bytes // 4),
                 num_fmus=max(cus, 1), fp=True, fmv=True, fmf=True)
             d = cfg.d_model
-            # dominant decode GEMMs per layer: attention out/in (d x d) and
-            # the MLP pair (d x d_ff), batched over live slots
-            lb_attn = layer_latency(accel, self.platform,
-                                    max(batch, 1), d, d)
-            lb_mlp = layer_latency(accel, self.platform,
-                                   max(batch, 1), d, cfg.d_ff or 4 * d)
-            self._cost_cache[key] = cfg.num_layers * (
-                2 * lb_attn.total_s + 2 * lb_mlp.total_s)
+            if wclass == SSM and cfg.ssm is not None:
+                # recurrent decode: state + parameter bandwidth per step
+                d_in, dt_rank, n, w = ssm_dims(cfg)
+                cost = cfg.num_layers * ssm_step_latency(
+                    accel, self.platform, max(batch, 1), d, d_in, n, w,
+                    dt_rank)
+            elif wclass == ENCODER:
+                # prefill-only: compute-bound full-sequence MMs, priced per
+                # owed prompt token (demand for encoder tenants is queued
+                # prompt tokens, not decode steps)
+                layers = cfg.encoder_layers or cfg.num_layers
+                lb_attn = layer_latency(accel, self.platform,
+                                        ENC_COST_TILE, d, d)
+                lb_mlp = layer_latency(accel, self.platform,
+                                       ENC_COST_TILE, d, cfg.d_ff or 4 * d)
+                cost = layers * (2 * _composed_total_s(lb_attn, cus)
+                                 + 2 * _composed_total_s(lb_mlp, cus)) \
+                    / ENC_COST_TILE
+            else:
+                # dominant decode GEMMs per layer: attention out/in (d x d)
+                # and the MLP pair (d x d_ff), batched over live slots
+                lb_attn = layer_latency(accel, self.platform,
+                                        max(batch, 1), d, d)
+                lb_mlp = layer_latency(accel, self.platform,
+                                       max(batch, 1), d, cfg.d_ff or 4 * d)
+                cost = cfg.num_layers * (
+                    2 * _composed_total_s(lb_attn, cus)
+                    + 2 * _composed_total_s(lb_mlp, cus))
+            self._cost_cache[key] = cost
         return self._cost_cache[key]
 
     # -- split search ------------------------------------------------------
     def decide(self, loads: Mapping[str, TenantLoad],
                cfgs: Mapping[str, ModelConfig],
                current: Mapping[str, int],
-               num_cus: int) -> Tuple[Dict[str, int], str]:
+               num_cus: int,
+               classes: Optional[Mapping[str, str]] = None,
+               ) -> Tuple[Dict[str, int], str]:
         """Return (target sizes, reason).  Tenants with no load are parked
-        (size 0); returning ``current`` means "leave the fabric alone"."""
+        (size 0); returning ``current`` means "leave the fabric alone".
+        ``classes`` maps tenant -> workload class; omitted tenants derive
+        from their config (encoder tenancy can't be derived, so mixed
+        fabrics pass it explicitly)."""
+        classes = dict(classes or {})
+        for t in cfgs:
+            classes.setdefault(t, workload_class_of(cfgs[t]))
         # arena pressure inflates demand: a hot arena means queued work the
         # pending-token count can't see yet
         demand = {t: ld.pending_tokens * (1.0 + ld.arena_utilization)
                   for t, ld in loads.items()}
         busy = [t for t, d in demand.items() if d > 0]
         if not busy:
+            self.runner_up = None
             return dict(current), "idle"
 
         def makespan(sizes: Mapping[str, int]) -> float:
             return max(demand[t] * self.step_cost(
-                cfgs[t], loads[t].active or 1, sizes.get(t, 0))
+                cfgs[t], loads[t].active or 1, sizes.get(t, 0), classes[t])
                 for t in busy)
 
         best_sizes, best_cost = None, float("inf")
+        second_sizes, second_cost = None, float("inf")
         for split in _candidate_splits(num_cus, busy, demand):
             sizes = dict(zip(busy, split))
             cost = makespan(sizes)
             if cost < best_cost:
+                second_sizes, second_cost = best_sizes, best_cost
                 best_sizes, best_cost = sizes, cost
+            elif cost < second_cost:
+                second_sizes, second_cost = sizes, cost
         assert best_sizes is not None
 
         cur_cost = makespan(current)
         if cur_cost == float("inf"):
+            self.runner_up = second_sizes
             return best_sizes, "admit"          # a parked tenant got work
         if cur_cost / max(best_cost, 1e-12) >= self.min_gain:
+            self.runner_up = second_sizes
             if len(busy) == 1:
                 return best_sizes, "unify"
             return best_sizes, "rebalance"
+        # staying put: the best candidate is what we'd switch to next —
+        # that's the split worth prewarming while the fabric idles
+        self.runner_up = (best_sizes
+                          if best_sizes != self._normalized(current) else
+                          second_sizes)
         return dict(current), "hysteresis"
+
+    @staticmethod
+    def _normalized(sizes: Mapping[str, int]) -> Dict[str, int]:
+        return {t: s for t, s in sizes.items() if s > 0}
 
 
 def _compositions(total: int, parts: int):
@@ -234,14 +330,24 @@ class ComposedServer:
     """Multi-tenant serving on one composable fabric with live, delta
     recomposition between decode steps.
 
-    tp: shard each tenant's engine (params + pooled KV cache) over its
+    Tenants are a *mixed fleet*: each runs the engine of its workload class
+    (transformer decode / SSM recurrent decode / encoder embedding — see
+    ``repro.workloads``), and the policy prices each class by its bound
+    resource.  All engines share one fabric-level AOT executable cache
+    keyed by (config fingerprint, mesh fingerprint, shapes), so same-config
+    tenants reuse each other's warm programs instead of compiling per
+    engine.
+
+    tp: shard each tenant's engine (params + pooled state) over its
         sub-mesh with ``serve_engine_rules`` so granted CUs buy measured
         tokens/s; off -> replicated engines (bit-identical resharding).
     warm: pre-compile a target composition's executables before committing
         a recomposition, so the first post-move step skips the XLA stall.
     prewarm_async: compile candidate compositions in a background thread
         while the old composition keeps serving; the switch commits on a
-        later autoscale tick once the executables are ready.
+        later autoscale tick once the executables are ready.  Idle decide
+        intervals additionally prewarm the policy's runner-up split
+        speculatively, so the *next* plausible recomposition is warm too.
     """
 
     def __init__(self, mesh, tenants: Sequence[TenantSpec], *,
@@ -263,6 +369,10 @@ class ComposedServer:
         self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
         self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self._pending_prewarm: Optional[Tuple[Dict[str, int], str, list]] = None
+        # speculative runner-up prewarm bookkeeping
+        self.speculative_prewarms = 0
+        self._spec_warmed: set = set()
+        self._spec_futures: List[concurrent.futures.Future] = []
 
         # initial composition: equal shares, remainder to the first tenants
         n = len(tenants)
@@ -276,17 +386,24 @@ class ComposedServer:
                  for i, t in enumerate(tenants)}
         self.subs, _ = self.composer.recompose({}, sizes)
 
+        # fabric-level executable cache: shared across every tenant engine
+        self.exec_cache = ExecutableCache(capacity=128)
         self.cfgs: Dict[str, ModelConfig] = {}
-        self.engines: Dict[str, ServeEngine] = {}
+        self.classes: Dict[str, str] = {}
+        self.engines: Dict[str, Engine] = {}
         for spec in tenants:
             cfg = (get_reduced(spec.arch) if spec.reduced
                    else get_config(spec.arch))
             model = build_model(cfg)
             params = model.init(jax.random.key(spec.seed))  # annotated: TP
+            wclass = (workload_class_of(cfg) if spec.workload == "auto"
+                      else spec.workload)
             self.cfgs[spec.name] = cfg
-            self.engines[spec.name] = ServeEngine(
-                model, params, spec.serve, mesh=self.subs[spec.name],
-                rules=self.rules)
+            self.classes[spec.name] = wclass
+            self.engines[spec.name] = build_engine(
+                wclass, model, params, spec.serve,
+                mesh=self.subs[spec.name], rules=self.rules,
+                exec_cache=self.exec_cache)
 
     # ------------------------------------------------------------------
     def submit(self, tenant: str, tokens, max_new_tokens: int = 16) -> int:
@@ -298,7 +415,7 @@ class ComposedServer:
 
     def loads(self) -> Dict[str, TenantLoad]:
         return {t: TenantLoad(eng.pending_tokens(), eng.queue_depth,
-                              eng.active_count, eng.arena.utilization())
+                              eng.active_count, eng.arena_utilization())
                 for t, eng in self.engines.items()}
 
     # ------------------------------------------------------------------
@@ -318,7 +435,7 @@ class ComposedServer:
                 # pipelined dispatch returns before the step executes; the
                 # probed post-move step must cover the whole step (compile
                 # when cold + execution), not just the async dispatch
-                jax.block_until_ready(eng.cache)
+                eng.sync()
             dt = time.monotonic() - t0
             if probe is not None:
                 probe.post_step_seconds[t] = dt
@@ -357,9 +474,14 @@ class ComposedServer:
             return self.recompose(target, reason=reason, overlapped=True)
 
         target, reason = self.policy.decide(
-            self.loads(), self.cfgs, self.sizes(), self.composer.num_cus)
+            self.loads(), self.cfgs, self.sizes(), self.composer.num_cus,
+            classes=self.classes)
         target = {t: s for t, s in target.items() if s > 0}
         if target == self._normalized(self.sizes()):
+            # idle decide interval: nothing committed — speculatively warm
+            # the policy's runner-up split so the *next* plausible switch is
+            # already compiled when its gain clears hysteresis
+            self._speculative_prewarm()
             return None
         if self.warm and self.prewarm_async:
             new_subs, delta = self.composer.recompose(self.subs, target)
@@ -369,6 +491,44 @@ class ComposedServer:
             self._pending_prewarm = (target, reason, futures)
             return None
         return self.recompose(target, reason=reason)
+
+    def _speculative_prewarm(self) -> None:
+        """Warm the runner-up candidate split in the background.
+
+        Reuses the ``prewarm_async`` machinery (same single-worker pool, so
+        speculative compiles never contend with a committed prewarm) and is
+        gated on it: synchronous fabrics shouldn't burn serving time on
+        compositions that may never commit.  Each distinct runner-up is
+        warmed once; ``warm_compile`` itself is idempotent on the shared
+        executable cache."""
+        # surface errors from (and drop) finished speculative compiles
+        pending = []
+        for f in self._spec_futures:
+            if f.done():
+                f.result()
+            else:
+                pending.append(f)
+        self._spec_futures = pending
+        ru = self.policy.runner_up if self.policy is not None else None
+        if not (self.warm and self.prewarm_async and ru):
+            return
+        ru = self._normalized(ru)
+        if not ru or ru == self._normalized(self.sizes()):
+            return
+        key = tuple(sorted(ru.items()))
+        if key in self._spec_warmed:
+            return
+        if len(self._spec_warmed) > 64:      # long-lived fabric: re-warm ok
+            self._spec_warmed.clear()
+        new_subs, delta = self.composer.recompose(self.subs, ru)
+        touched = delta.moved + delta.admitted
+        if not touched:
+            return
+        self._spec_warmed.add(key)
+        self.speculative_prewarms += 1
+        self._spec_futures.extend(
+            self._pool().submit(self.engines[t].warm_compile, new_subs[t])
+            for t in touched)
 
     @staticmethod
     def _normalized(sizes: Mapping[str, int]) -> Dict[str, int]:
@@ -400,8 +560,12 @@ class ComposedServer:
         for t in touched:
             eng = self.engines[t]
             eng.reshard_to(new_subs[t])
-            jax.block_until_ready((eng.params, eng.cache))
+            eng.sync()
         self.subs = new_subs
+        # the committed move changes device assignments, so a previously
+        # prewarmed runner-up size-split now maps to different sub-meshes
+        # (different mesh fingerprints): let it be warmed again
+        self._spec_warmed.clear()
         seconds = time.monotonic() - t0
         event = RecompositionEvent(
             step=self._step_no, sizes_before=before, sizes_after=self.sizes(),
@@ -456,6 +620,9 @@ class ComposedServer:
     def stats(self) -> Dict[str, object]:
         return {
             "steps": self._step_no,
+            "workload_classes": dict(self.classes),
+            # per-tenant emitted units: tokens for decode/ssm tenants,
+            # completed sequences (embeddings) for encoder tenants
             "tokens_emitted": dict(self._tokens_emitted),
             "recompositions": len(self.events),
             "recompose_seconds": [round(e.seconds, 4) for e in self.events],
@@ -465,6 +632,9 @@ class ComposedServer:
                                     for t, eng in self.engines.items()},
             "compile_builds": {t: eng.compile_builds
                                for t, eng in self.engines.items()},
+            "shared_exec_cache": {"builds": self.exec_cache.builds,
+                                  "hits": self.exec_cache.hits},
+            "speculative_prewarms": self.speculative_prewarms,
             "decode_step_ms": self.decode_step_ms(),
             "composition": {t: list(self.subs[t].cu_ids)
                             for t in self.subs},

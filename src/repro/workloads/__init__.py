@@ -1,0 +1,20 @@
+"""Workload-class subsystem: heterogeneous tenant engines for the composed
+serving fabric (transformer decode / SSM recurrent decode / encoder
+embedding), behind one :class:`Engine` protocol.  See ``base.py`` for the
+workload taxonomy and ``repro.serve.fabric`` for the fabric that mixes them.
+"""
+from repro.workloads.base import (DECODE, ENCODER, SSM, WORKLOAD_CLASSES,
+                                  Engine, build_engine, workload_class_of)
+from repro.workloads.compile_cache import ExecutableCache
+from repro.workloads.decode import DecodeEngine, Request, ServeConfig
+from repro.workloads.encoder import EncodeJob, EncoderEngine
+from repro.workloads.ssm import SSMEngine
+
+__all__ = [
+    "DECODE", "ENCODER", "SSM", "WORKLOAD_CLASSES",
+    "Engine", "build_engine", "workload_class_of",
+    "DecodeEngine", "Request", "ServeConfig",
+    "EncodeJob", "EncoderEngine",
+    "ExecutableCache",
+    "SSMEngine",
+]

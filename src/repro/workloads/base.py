@@ -1,0 +1,137 @@
+"""Workload classes: the contract every tenant engine on the composed fabric
+satisfies, and the registry mapping a tenant's architecture to its engine.
+
+FILCO's headline claim is matching *diverse* workloads to composed
+accelerators (paper §1): the win from reconfigurability comes from scheduling
+heterogeneous DNNs whose bound resource differs.  The serving-side
+counterpart is that one :class:`~repro.serve.fabric.ComposedServer` runs a
+mixed fleet where each tenant's engine is chosen by workload class:
+
+* ``decode``  — autoregressive transformer decode: bandwidth-bound batched
+  GEMV against streamed weights, KV cache grows with sequence length
+  (:class:`~repro.workloads.decode.DecodeEngine`);
+* ``ssm``     — mamba-style recurrent decode: constant-size state per slot,
+  bound by state + parameter bandwidth, O(1) per token
+  (:class:`~repro.workloads.ssm.SSMEngine`);
+* ``encoder`` — prefill-only / embedding workloads: compute-bound
+  full-sequence matmuls, no decode loop
+  (:class:`~repro.workloads.encoder.EncoderEngine`).
+
+The :class:`Engine` protocol is what the fabric and the recomposition policy
+program against; the concrete engines share no inheritance requirement with
+it — any object with these methods can be a tenant.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Protocol, Tuple, runtime_checkable
+
+from repro.configs.base import ModelConfig
+
+# canonical workload-class ids
+DECODE = "decode"
+SSM = "ssm"
+ENCODER = "encoder"
+WORKLOAD_CLASSES: Tuple[str, ...] = (DECODE, SSM, ENCODER)
+
+
+def workload_class_of(cfg: ModelConfig) -> str:
+    """Default workload class for an architecture.
+
+    Attention-free SSM archs decode from recurrent state (``ssm``); anything
+    with a decode loop defaults to ``decode``.  ``encoder`` is never inferred:
+    any arch can serve embedding traffic, so it is an explicit tenant choice
+    (``TenantSpec(workload="encoder")``), not a property of the config.
+    """
+    if cfg.ssm is not None and cfg.attention_free:
+        return SSM
+    return DECODE
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What the fabric requires of a tenant engine.
+
+    Extracted from the PR-1/2 ``ServeEngine`` (now the transformer
+    :class:`DecodeEngine`): submit work, advance one batched step, expose the
+    load signals the recomposition policy decides on, migrate onto a new
+    composed sub-accelerator, and pre-compile for a candidate one.
+    """
+
+    workload_class: str
+
+    # -- work ingestion / progress --------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 16) -> int: ...
+    def step(self) -> List[Tuple[int, Any]]: ...
+    def results(self) -> Dict[int, Any]: ...
+    def snapshot(self) -> Dict[int, Any]: ...
+
+    # -- load signals (recomposition policy inputs) ---------------------
+    @property
+    def queue_depth(self) -> int: ...
+    @property
+    def active_count(self) -> int: ...
+    @property
+    def has_work(self) -> bool: ...
+    def pending_tokens(self) -> int: ...
+    def arena_utilization(self) -> float: ...
+
+    # -- real-time recomposition ----------------------------------------
+    def reshard_to(self, sub) -> None: ...
+    def warm_compile(self, sub) -> int: ...
+    def sync(self) -> None: ...
+
+    # -- telemetry (ComposedServer.stats reads these per tenant) --------
+    reshard_count: int
+
+    @property
+    def compile_builds(self) -> int: ...
+    def stats(self) -> Dict[str, Any]: ...
+
+
+class EngineTelemetry:
+    """Shared plumbing for concrete engines: per-engine cold-build counting
+    against the (possibly fabric-shared) executable cache, and bounded
+    finished-request retention.  Expects ``self._exec``, ``self._own_builds``,
+    ``self._finished`` and ``self.finished_cap`` set by the constructor."""
+
+    @property
+    def compile_builds(self) -> int:
+        """Cold executable compiles this engine performed (warm-path
+        telemetry).  With a fabric-shared cache this counts builds done
+        *through this engine*, not cache-wide builds — a hit on another
+        same-config tenant's program is exactly the savings we measure."""
+        return self._own_builds
+
+    def _counted(self, builder):
+        """Wrap a cold-build closure so per-engine telemetry sees it."""
+        def run():
+            self._own_builds += 1
+            return builder()
+        return run
+
+    def _evict_finished(self) -> None:
+        """Bound host memory: a long-running engine must not grow with
+        every request ever served (oldest finished records drop first)."""
+        while len(self._finished) > self.finished_cap:
+            self._finished.pop(next(iter(self._finished)))
+
+
+def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,
+                 rules=None, exec_cache=None):
+    """Construct the engine serving ``wclass`` traffic for ``model``.
+
+    ``exec_cache`` is the fabric-level shared AOT executable cache: engines
+    key their programs by (config fingerprint, mesh fingerprint, shapes), so
+    same-config tenants share warm executables instead of each compiling its
+    own copy.
+    """
+    from repro.workloads.decode import DecodeEngine
+    from repro.workloads.encoder import EncoderEngine
+    from repro.workloads.ssm import SSMEngine
+
+    classes = {DECODE: DecodeEngine, SSM: SSMEngine, ENCODER: EncoderEngine}
+    if wclass not in classes:
+        raise KeyError(f"unknown workload class {wclass!r}; "
+                       f"known: {WORKLOAD_CLASSES}")
+    return classes[wclass](model, params, serve_cfg, mesh=mesh, rules=rules,
+                           exec_cache=exec_cache)

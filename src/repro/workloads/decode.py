@@ -1,0 +1,552 @@
+"""Transformer decode engine: batched serving with continuous batching and a
+FlexArena-backed slot allocator (the PR-1/2 ``ServeEngine``, now one workload
+class among several — see ``repro.workloads.base``).
+
+The FILCO connection: serving-time KV/workspace memory is exactly the
+diverse-workload storage problem the FMU solves — requests of wildly
+different prompt lengths share one flat arena through runtime views instead
+of per-request padded buffers.  The engine tracks per-request views in a
+host-side FlexArena whose capacity mirrors the device cache pool, so
+admission control (can this prompt fit?) is the paper's Fig. 5(b) check.
+
+Decode state on device is a fixed pool of batch slots (functional pytree);
+prefill fills a slot, decode steps advance all live slots in lock-step
+(continuous batching: slots join/leave between steps).
+
+Three properties make the engine a real-time-recomposable accelerator
+(paper §1/§2.1) rather than just a batcher:
+
+* **Tensor parallelism per composition.**  Given ``rules`` (normally
+  ``serve_rules()``), params and the pooled KV cache shard over the
+  sub-mesh's model axis — more CUs mean less per-device work, so the
+  recomposition policy's predicted gains are measured gains.  Leaves whose
+  dims don't divide the mesh fall back to replication per-leaf (never an
+  error).  ``reshard_to`` is then a sharded→sharded ``device_put``.
+* **AOT-warmable executables.**  Decode and prefill run from explicitly
+  managed compiled executables keyed by (config fingerprint, mesh
+  fingerprint, shapes), so the fabric can pre-compile a candidate
+  composition before committing a switch (``warm_compile``) and the
+  post-move step skips the XLA recompile stall.  The cache may be shared
+  fabric-wide: same-config tenants then reuse each other's programs.
+* **Pipelined decode dispatch.**  When termination is length-based
+  (``eos_id < 0``), step *k*'s decode is dispatched from device-resident
+  step *k-1* tokens before the host reads them, so per-step host
+  bookkeeping overlaps device execution instead of serializing on
+  ``device_get``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.arena import AllocationError, FlexArena, ROLE_ACT
+from repro.core.composer import mesh_fingerprint
+from repro.distribution import partitioning as part
+from repro.models.model import Model
+from repro.workloads.base import EngineTelemetry
+from repro.workloads.compile_cache import ExecutableCache
+
+PyTree = Any
+
+
+def _mesh_of(sub) -> Optional[Mesh]:
+    """Accept a Mesh, a composer SubAccelerator, or None."""
+    if sub is None or isinstance(sub, Mesh):
+        return sub
+    return sub.mesh
+
+
+def _rules_fp(rules: Optional[part.ShardingRules]):
+    """Hashable identity of a rule set for executable-cache keys: two
+    same-config engines under different rules (replicated vs TP) lower
+    different programs and must never share a compiled executable."""
+    if rules is None:
+        return None
+    return tuple(sorted(rules.rules.items()))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # prompt
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    view: Any = None                    # arena view (admission accounting)
+    done: bool = False
+    # tokens scheduled for emission (prefill first token + dispatched decode
+    # steps).  Runs ahead of len(out_tokens) by the in-flight step under
+    # pipelined decode; equal to it otherwise.
+    scheduled: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4                 # concurrent decode slots
+    max_len: int = 128                 # per-slot cache capacity
+    eos_id: int = 0
+    greedy: bool = True
+    prefill_bucket: int = 32           # prompts padded up to this length
+    # overlap decode dispatch with host bookkeeping (applies when eos_id < 0,
+    # i.e. termination is length-based and known at dispatch time)
+    pipeline_decode: bool = True
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched decode step whose tokens the host hasn't read yet."""
+
+    nxt: Any                            # device (B,) int32
+    entries: List[Tuple[int, Request, bool]]   # (slot, request, finishing)
+    pipelined: bool
+
+
+class DecodeEngine(EngineTelemetry):
+    workload_class = "decode"
+
+    def __init__(self, model: Model, params: PyTree, cfg: ServeConfig,
+                 mesh=None, rules: Optional[part.ShardingRules] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
+        self.model = model
+        self.cfg = cfg
+        self.rules = rules
+        self._rules_eff = rules or part.ShardingRules(rules={})
+        self.reshard_count = 0
+        self._per_token_elems = self._per_token_cache_elems()
+        self.arena = FlexArena(self._arena_capacity())
+        self._queue: List[Request] = []
+        self._active: Dict[int, Request] = {}
+        # finished rid -> emitted tokens; bounded so a long-running engine
+        # doesn't grow host memory with every request ever served
+        self._finished: Dict[int, List[int]] = {}
+        self.finished_cap = 10_000
+        self._next_rid = 0
+        self._free_slots = list(range(cfg.max_slots))
+
+        # sharding plans: treedef + per-leaf (shape, dtype, logical spec),
+        # captured before strip() so any composed sub-mesh's shardings and
+        # lowering avals can be derived without re-annotating live state
+        self._param_plan = part.ShardingPlan.of(params)
+        self.params = part.strip(params)
+        if rules is not None and not self._param_plan.annotated:
+            raise ValueError(
+                "tensor-parallel serving needs annotated params: pass "
+                "model.init(...) without strip() when rules are given")
+        cache_ann = model.init_cache(cfg.max_slots, cfg.max_len)
+        self._cache_plan = part.ShardingPlan.of(cache_ann)
+        self.cache = part.strip(cache_ann)
+        # one reusable single-slot prefill cache: prefill is functional, so
+        # the prototype is never mutated — no init_cache(1, ...) per request
+        single_ann = model.init_cache(1, cfg.max_len)
+        self._single_plan = part.ShardingPlan.of(single_ann)
+        self._single = part.strip(single_ann)
+        self._slot_axes = model.cache_slot_axes(self.cache)
+
+        # AOT executables per (kind, config fp, mesh fp, shape).  The cache
+        # may be fabric-shared (same-config tenants reuse programs), so every
+        # key carries this engine's config fingerprint — model config plus
+        # the serve dims that shape the compiled program.
+        self._exec = exec_cache if exec_cache is not None else ExecutableCache()
+        self._own_builds = 0
+        self._cfg_key = (self.workload_class, model.cfg,
+                         cfg.max_slots, cfg.max_len, _rules_fp(rules))
+        # seed the bucketed prompt length only for archs that actually pad
+        # to it; SSM/hybrid archs prefill at exact lengths (see
+        # _prefill_into_slot), and warm_compile must not burn seconds per
+        # candidate composition on a program that never dispatches
+        self._prefill_lens = ({self._bucketed(cfg.prefill_bucket)}
+                              if model.cfg.ssm is None else set())
+
+        self._inflight: Optional[_Inflight] = None
+        self._inject: Dict[int, int] = {}   # slot -> first token since last dispatch
+        self._emit_buf: List[Tuple[int, int]] = []
+
+        self.mesh: Optional[Mesh] = None
+        self.reshard_to(mesh)          # commit params+cache to the sub-mesh
+        self.reshard_count = 0         # construction placement isn't a move
+
+    # ------------------------------------------------------------------
+    # admission-accounting hooks (overridden by the SSM engine, whose
+    # per-slot state is constant-size rather than length-proportional)
+    # ------------------------------------------------------------------
+    def _per_token_cache_elems(self) -> int:
+        """Per-layer per-token KV elements (admission accounting)."""
+        mc = self.model.cfg
+        if mc.mla is not None:
+            per_tok = mc.mla.kv_lora_rank + mc.mla.qk_rope_head_dim
+        elif mc.attention_free:
+            per_tok = 0
+        else:
+            per_tok = 2 * mc.num_kv_heads * mc.resolved_head_dim
+        return max(per_tok, 1) * mc.num_layers
+
+    def _arena_capacity(self) -> int:
+        return self.cfg.max_slots * self.cfg.max_len * self._per_token_elems
+
+    def _slot_rows(self, req: Request) -> int:
+        """Arena rows a request occupies while holding a slot."""
+        return len(req.tokens) + req.max_new_tokens
+
+    def _oversized(self, req: Request) -> bool:
+        """True when the request could never fit a slot (hard reject)."""
+        return self._slot_rows(req) > self.cfg.max_len
+
+    # ------------------------------------------------------------------
+    def reshard_to(self, sub) -> None:
+        """Migrate this engine — params AND live decode state — onto a new
+        sub-accelerator (FILCO real-time recomposition, §1/§2.1).
+
+        The engine is purely functional on device: everything it owns is the
+        params pytree and the two cache pytrees, so growing, shrinking or
+        moving its composition is one sharded→sharded device_put of each,
+        with every leaf's sharding refit to the target mesh under the
+        engine's rules.  Host-side state (queues, slots, arena views) is
+        untouched.  Token streams are preserved across any grow/shrink/unify
+        sequence: replicated engines are bit-identical, tensor-parallel ones
+        greedy-decode the same tokens (the property tests/test_fabric.py
+        pins across 1/2/4-way TP).
+        """
+        self._harvest()                 # inflight tokens live on the old mesh
+        mesh = _mesh_of(sub)
+        self.mesh = mesh
+        # hot-path executable-cache key: recomputing the device-id tuple per
+        # dispatch is a per-step O(devices) Python loop on a pod-scale mesh
+        self._mesh_fp = mesh_fingerprint(mesh)
+        if mesh is not None:
+            rules = self._rules_eff
+            self.params = jax.device_put(
+                self.params, self._param_plan.shardings(mesh, rules))
+            self.cache = jax.device_put(
+                self.cache, self._cache_plan.shardings(mesh, rules))
+            self._single = jax.device_put(
+                self._single, self._single_plan.shardings(mesh, rules))
+        self.reshard_count += 1
+
+    def sync(self) -> None:
+        """Block until this engine's device state (params + pooled cache) is
+        ready — recomposition migration timing and post-move stall probing."""
+        jax.block_until_ready((self.params, self.cache))
+
+    # ------------------------------------------------------------------
+    # compiled executables (build counting: EngineTelemetry)
+    # ------------------------------------------------------------------
+    def _vec_aval(self, mesh, dtype, shape):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, P()))
+
+    def _decode_fn(self, params, cache, prev_tokens, inject_vals,
+                   inject_mask, live_mask):
+        # next input token per slot: host-injected (fresh prefill / sync
+        # mode) or the previous step's device-resident output (pipelined)
+        toks = jnp.where(inject_mask, inject_vals, prev_tokens)[:, None]
+        logits, cache = self.model.decode_step(params, cache, toks)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(live_mask, nxt, 0)
+        return nxt, cache
+
+    def _prefill_fn(self, params, pool_cache, single, tokens, true_len, slot):
+        """Prefill one prompt into the reusable single-slot cache and write
+        it into the pool at `slot` — one fused dispatch per admission."""
+        logits, filled = self.model.prefill(params, {"tokens": tokens},
+                                            single, true_len=true_len)
+        pool = _write_slot(pool_cache, filled, slot, self._slot_axes)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return first, pool
+
+    def _build_decode(self, mesh):
+        B = self.cfg.max_slots
+        rules = self._rules_eff
+        kwargs = {}
+        if mesh is not None:
+            kwargs["out_shardings"] = (
+                NamedSharding(mesh, P()),
+                self._cache_plan.shardings(mesh, rules))
+        fn = jax.jit(self._decode_fn, donate_argnums=(1,), **kwargs)
+        return fn.lower(
+            self._param_plan.avals(mesh, rules),
+            self._cache_plan.avals(mesh, rules),
+            self._vec_aval(mesh, jnp.int32, (B,)),
+            self._vec_aval(mesh, jnp.int32, (B,)),
+            self._vec_aval(mesh, jnp.bool_, (B,)),
+            self._vec_aval(mesh, jnp.bool_, (B,)),
+        ).compile()
+
+    def _build_prefill(self, mesh, nb: int):
+        rules = self._rules_eff
+        kwargs = {}
+        if mesh is not None:
+            kwargs["out_shardings"] = (
+                NamedSharding(mesh, P()),
+                self._cache_plan.shardings(mesh, rules))
+        fn = jax.jit(self._prefill_fn, donate_argnums=(1,), **kwargs)
+        return fn.lower(
+            self._param_plan.avals(mesh, rules),
+            self._cache_plan.avals(mesh, rules),
+            self._single_plan.avals(mesh, rules),
+            self._vec_aval(mesh, jnp.int32, (1, nb)),
+            self._vec_aval(mesh, jnp.int32, ()),
+            self._vec_aval(mesh, jnp.int32, ()),
+        ).compile()
+
+    def _decode_exec(self, mesh):
+        key = ("decode", self._cfg_key, self._mesh_fp)
+        return self._exec.get_or_build(
+            key, self._counted(lambda: self._build_decode(mesh)))
+
+    def _prefill_exec(self, mesh, nb: int):
+        key = ("prefill", self._cfg_key, self._mesh_fp, nb)
+        self._prefill_lens.add(nb)
+        return self._exec.get_or_build(
+            key, self._counted(lambda: self._build_prefill(mesh, nb)))
+
+    def warm_compile(self, sub) -> int:
+        """Pre-compile this engine's decode + known prefill executables for
+        a *candidate* sub-accelerator, without moving any state.  Called by
+        the fabric before committing a recomposition (possibly from a
+        background thread) so the first step on the new composition hits a
+        warm executable.  Returns the number of cold builds performed."""
+        mesh = _mesh_of(sub)
+        fp = mesh_fingerprint(mesh)
+        built = self._exec.ensure(("decode", self._cfg_key, fp),
+                                  self._counted(lambda: self._build_decode(mesh)))
+        # snapshot: the serving thread appends new prefill lengths while a
+        # background prewarm iterates
+        for nb in sorted(tuple(self._prefill_lens)):
+            built += self._exec.ensure(
+                ("prefill", self._cfg_key, fp, nb),
+                self._counted(lambda nb=nb: self._build_prefill(mesh, nb)))
+        return built
+
+    # ------------------------------------------------------------------
+    # load metrics consumed by the recomposition policy
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_count(self) -> int:
+        return len(self._active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active or self._inflight)
+
+    def pending_tokens(self) -> int:
+        """Decode steps of work still owed: remaining tokens of active
+        requests plus full budgets of queued ones."""
+        owed = sum(req.max_new_tokens - req.scheduled
+                   for req in self._active.values())
+        owed += sum(req.max_new_tokens + len(req.tokens)
+                    for req in self._queue)
+        return max(owed, 0)
+
+    def arena_utilization(self) -> float:
+        return self.arena.utilization()
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "workload_class": self.workload_class,
+            "queue_depth": self.queue_depth,
+            "active": self.active_count,
+            "pending_tokens": self.pending_tokens(),
+            "arena_utilization": round(self.arena_utilization(), 4),
+            "reshard_count": self.reshard_count,
+            "compile_builds": self.compile_builds,
+        }
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(tokens, np.int32),
+                                   max_new_tokens))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        while self._queue and self._free_slots:
+            req = self._queue[0]
+            if self._oversized(req):
+                # rejected (would never fit a slot): still recorded, with
+                # whatever was emitted (nothing) — requests never vanish
+                req.done = True
+                self._queue.pop(0)
+                self._record_finished(req)
+                continue
+            try:
+                view = self.arena.alloc(self._slot_rows(req),
+                                        self._per_token_elems, ROLE_ACT)
+            except AllocationError:
+                break  # arena full: stay queued (admission control);
+                # anything else (bad sizes, dtype bugs) propagates
+            self._queue.pop(0)
+            req.view = view
+            req.slot = self._free_slots.pop(0)
+            self._active[req.slot] = req
+            self._prefill_into_slot(req)
+
+    def _bucketed(self, length: int) -> int:
+        bucket = max(self.cfg.prefill_bucket, 8)
+        return -(-length // bucket) * bucket
+
+    def _prefill_into_slot(self, req: Request) -> None:
+        """Prefill one request into its slot.
+
+        Attention archs: pad to the bucket and pass true_len (garbage KV
+        beyond true_len is masked by per-row cache pos and overwritten by
+        subsequent decodes).  SSM/hybrid archs carry recurrent state that
+        padding would corrupt, so they prefill at the exact prompt length
+        (bounded recompiles: one per distinct length)."""
+        L = len(req.tokens)
+        nb = self._bucketed(L) if self.model.cfg.ssm is None else L
+        toks = np.zeros((1, nb), np.int32)
+        toks[0, :L] = req.tokens
+        exe = self._prefill_exec(self.mesh, nb)
+        first_dev, self.cache = exe(self.params, self.cache, self._single,
+                                    toks, np.int32(L), np.int32(req.slot))
+        first = int(jax.device_get(first_dev))
+        req.out_tokens.append(first)
+        req.scheduled = 1
+        self._inject[req.slot] = first
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration: admit -> dispatch decode -> harvest.
+        Returns [(rid, token)] newly observed on the host — under pipelined
+        decode these are the *previous* dispatch's tokens (the current one
+        is still on device); totals and per-request streams are identical.
+        """
+        self._admit()
+        if not self._active:
+            self._harvest()
+            return self._drain_emitted()
+        B = self.cfg.max_slots
+        pipelined = self.cfg.pipeline_decode and self.cfg.eos_id < 0
+        inject_vals = np.zeros((B,), np.int32)
+        inject_mask = np.zeros((B,), bool)
+        live = np.zeros((B,), bool)
+        for slot, req in self._active.items():
+            live[slot] = True
+            if not pipelined:
+                inject_mask[slot] = True
+                inject_vals[slot] = req.out_tokens[-1]
+            elif slot in self._inject:
+                inject_mask[slot] = True
+                inject_vals[slot] = self._inject[slot]
+        prev = (self._inflight.nxt if self._inflight is not None
+                else np.zeros((B,), np.int32))
+        exe = self._decode_exec(self.mesh)
+        nxt, self.cache = exe(self.params, self.cache, prev,
+                              inject_vals, inject_mask, live)
+        self._inject.clear()
+
+        entries = []
+        for slot in list(self._active):
+            req = self._active[slot]
+            req.scheduled += 1
+            finishing = req.scheduled >= req.max_new_tokens
+            entries.append((slot, req, finishing))
+            if pipelined and finishing:
+                # length-based completion is known at dispatch time: release
+                # the slot now so the next admit can reuse it; the token
+                # value lands at harvest
+                req.done = True
+                self.arena.free_view(req.view)
+                self._free_slots.append(slot)
+                del self._active[slot]
+
+        # harvest the PREVIOUS dispatch (its compute is done or in flight):
+        # host bookkeeping below overlaps the step dispatched above.  Its
+        # continuing slots are fed by the dispatch just made, so their
+        # tokens must NOT be re-injected next step (they'd be stale).
+        self._harvest(register_inject=False)
+        self._inflight = _Inflight(nxt, entries, pipelined)
+        if not pipelined or not self._active:
+            # sync mode consumes immediately (eos handling needs the value);
+            # a draining engine flushes so callers see complete streams as
+            # soon as queue+active are empty
+            self._harvest()
+        return self._drain_emitted()
+
+    def _harvest(self, register_inject: bool = True) -> None:
+        """Read one in-flight dispatch's tokens back to the host.
+
+        register_inject: when harvesting with no newer dispatch outstanding
+        (snapshot/results/reshard), a continuing slot's next input token is
+        no longer device-resident — record it for host injection."""
+        inf = self._inflight
+        if inf is None:
+            return
+        self._inflight = None
+        nxt = np.asarray(jax.device_get(inf.nxt))
+        for slot, req, finishing in inf.entries:
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self._emit_buf.append((req.rid, tok))
+            if inf.pipelined:
+                if finishing:
+                    self._record_finished(req)
+                elif register_inject:
+                    self._inject[slot] = tok
+            elif tok == self.cfg.eos_id or \
+                    len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.arena.free_view(req.view)
+                self._free_slots.append(slot)
+                self._record_finished(req)
+                del self._active[slot]
+
+    def _drain_emitted(self) -> List[Tuple[int, int]]:
+        out, self._emit_buf = self._emit_buf, []
+        return out
+
+    def _record_finished(self, req: Request) -> None:
+        self._finished[req.rid] = list(req.out_tokens)
+        self._evict_finished()
+
+    def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            if not self.has_work:
+                break
+            self.step()
+        return self.snapshot()
+
+    def results(self) -> Dict[int, List[int]]:
+        """Completed (or rejected) requests' emitted tokens."""
+        self._harvest()
+        return {rid: list(toks) for rid, toks in self._finished.items()}
+
+    def snapshot(self) -> Dict[int, List[int]]:
+        """Every request seen so far -> tokens emitted (in-flight, queued
+        and finished)."""
+        self._harvest()
+        out = {req.rid: list(req.out_tokens)
+               for req in list(self._active.values()) + self._queue}
+        out.update({rid: list(toks) for rid, toks in self._finished.items()})
+        return out
+
+
+def _write_slot(pool_cache: PyTree, single_cache: PyTree, slot,
+                slot_axes: PyTree) -> PyTree:
+    """Copy a 1-batch cache into slot `slot` of the pooled cache.
+
+    `slot_axes` names each leaf's slot-axis position explicitly
+    (Model.cache_slot_axes): scanned stacks are (layers, slots, ...), all
+    other leaves are slot-leading, -1 means no slot axis.  Positional, never
+    inferred from shape mismatch — a max_slots == 1 pool updates exactly
+    like any other."""
+    def write(ax, pool, one):
+        if ax < 0:
+            return pool
+        start = (0,) * ax + (slot,) + (0,) * (pool.ndim - ax - 1)
+        return jax.lax.dynamic_update_slice(pool, one.astype(pool.dtype),
+                                            start)
+
+    return jax.tree.map(write, slot_axes, pool_cache, single_cache)

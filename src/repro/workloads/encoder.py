@@ -1,0 +1,250 @@
+"""Encoder engine: prefill-only / embedding workloads on the composed fabric.
+
+The third workload class (FILCO's diverse-workload story): encoder jobs are
+**compute-bound full-sequence matmuls** — no decode loop, no growing cache,
+no per-token host round-trips.  A tenant serving embedding traffic therefore
+wants CUs for raw FLOP/s, while a decode tenant wants them for weight/KV
+bandwidth and an SSM tenant for state bandwidth; the class-aware policy
+prices each accordingly, and the split search allocates the fabric by each
+class's actual bound resource.
+
+Design (throughput-oriented):
+
+* jobs queue on the host; each ``step()`` runs ONE batched encoder forward
+  over up to ``max_slots`` jobs and completes them — there is no in-flight
+  device state between steps, so ``reshard_to`` only moves params;
+* the batch is a fixed compiled shape ``(max_slots, max_len)`` — one AOT
+  program per composed mesh, so ``warm_compile`` fully covers a candidate
+  composition and a job's embedding never depends on what it was co-batched
+  with (padding is per-row; attention mixes positions, never batch rows);
+* each job's output is the masked mean over its valid positions of
+  :meth:`Model.encode` hidden states, in fp32 — a (d_model,) embedding.
+  Causal stacks are padding-proof by construction; bidirectional encoder
+  stacks see their own right-padding only, deterministically.
+
+Jobs longer than ``max_len`` are rejected-but-recorded (empty embedding),
+mirroring the decode engine's contract that requests never vanish.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.composer import mesh_fingerprint
+from repro.distribution import partitioning as part
+from repro.models.model import Model
+from repro.workloads.base import EngineTelemetry
+from repro.workloads.compile_cache import ExecutableCache
+from repro.workloads.decode import ServeConfig, _mesh_of, _rules_fp
+
+
+@dataclasses.dataclass
+class EncodeJob:
+    rid: int
+    tokens: np.ndarray
+    embedding: Optional[List[float]] = None
+    done: bool = False
+
+
+class EncoderEngine(EngineTelemetry):
+    workload_class = "encoder"
+
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 mesh=None, rules: Optional[part.ShardingRules] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
+        self.model = model
+        self.cfg = cfg
+        self.rules = rules
+        self._rules_eff = rules or part.ShardingRules(rules={})
+        self.reshard_count = 0
+        self._param_plan = part.ShardingPlan.of(params)
+        self.params = part.strip(params)
+        if rules is not None and not self._param_plan.annotated:
+            raise ValueError(
+                "tensor-parallel serving needs annotated params: pass "
+                "model.init(...) without strip() when rules are given")
+        self._exec = exec_cache if exec_cache is not None else ExecutableCache()
+        self._own_builds = 0
+        self._cfg_key = (self.workload_class, model.cfg,
+                         cfg.max_slots, cfg.max_len, _rules_fp(rules))
+        self._queue: List[EncodeJob] = []
+        self._finished: Dict[int, List[float]] = {}
+        self.finished_cap = 10_000
+        self._next_rid = 0
+        self._seqs_done = 0
+        self.mesh: Optional[Mesh] = None
+        self.reshard_to(mesh)
+        self.reshard_count = 0         # construction placement isn't a move
+
+    # ------------------------------------------------------------------
+    def reshard_to(self, sub) -> None:
+        """Move the engine onto a new composed sub-accelerator.  Encoder
+        jobs complete within the step that runs them, so the only device
+        state is the params pytree — one sharded→sharded device_put."""
+        mesh = _mesh_of(sub)
+        self.mesh = mesh
+        self._mesh_fp = mesh_fingerprint(mesh)
+        if mesh is not None:
+            self.params = jax.device_put(
+                self.params, self._param_plan.shardings(mesh, self._rules_eff))
+        self.reshard_count += 1
+
+    def sync(self) -> None:
+        """No in-flight device state: step() already syncs on device_get."""
+        jax.block_until_ready(self.params)
+
+    # ------------------------------------------------------------------
+    # compiled executable: one fixed-shape batched encode per mesh
+    # (build counting: EngineTelemetry)
+    # ------------------------------------------------------------------
+    def _encode_fn(self, params, tokens, lens):
+        """(B, S) padded tokens + (B,) valid lengths -> (B, d) fp32 masked
+        mean-pooled embeddings."""
+        x = self.model.encode(params, {"tokens": tokens})
+        S = x.shape[1]
+        mask = (jnp.arange(S)[None, :] < lens[:, None]).astype(jnp.float32)
+        pooled = jnp.einsum("bsd,bs->bd", x.astype(jnp.float32), mask)
+        return pooled / jnp.maximum(lens, 1).astype(jnp.float32)[:, None]
+
+    def _build_encode(self, mesh):
+        B, S = self.cfg.max_slots, self.cfg.max_len
+        kwargs = {}
+        if mesh is not None:
+            kwargs["out_shardings"] = NamedSharding(mesh, P())
+        fn = jax.jit(self._encode_fn, **kwargs)
+
+        def aval(dtype, shape):
+            if mesh is None:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jax.ShapeDtypeStruct(shape, dtype,
+                                        sharding=NamedSharding(mesh, P()))
+
+        return fn.lower(
+            self._param_plan.avals(mesh, self._rules_eff),
+            aval(jnp.int32, (B, S)),
+            aval(jnp.int32, (B,)),
+        ).compile()
+
+    def _encode_exec(self, mesh):
+        key = ("encode", self._cfg_key, self._mesh_fp)
+        return self._exec.get_or_build(
+            key, self._counted(lambda: self._build_encode(mesh)))
+
+    def warm_compile(self, sub) -> int:
+        """Pre-compile the batched encode program for a candidate
+        sub-accelerator.  The fixed (max_slots, max_len) batch shape means
+        one program fully covers the composition."""
+        mesh = _mesh_of(sub)
+        return self._exec.ensure(
+            ("encode", self._cfg_key, mesh_fingerprint(mesh)),
+            self._counted(lambda: self._build_encode(mesh)))
+
+    # ------------------------------------------------------------------
+    # load signals
+    # ------------------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_count(self) -> int:
+        return 0                       # jobs complete within their step
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue)
+
+    def pending_tokens(self) -> int:
+        """Prefill tokens of work owed: encoder demand is full-sequence
+        compute, so the signal is prompt tokens, not decode steps."""
+        return sum(len(j.tokens) for j in self._queue)
+
+    def arena_utilization(self) -> float:
+        """Batch-fill pressure: how far the queue over-subscribes one step's
+        batch (the encoder has no growing per-request device state)."""
+        return min(1.0, len(self._queue) / max(self.cfg.max_slots, 1))
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "workload_class": self.workload_class,
+            "queue_depth": self.queue_depth,
+            "active": self.active_count,
+            "pending_tokens": self.pending_tokens(),
+            "arena_utilization": round(self.arena_utilization(), 4),
+            "reshard_count": self.reshard_count,
+            "compile_builds": self.compile_builds,
+            "seqs_done": self._seqs_done,
+        }
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 0) -> int:
+        """Queue one embedding job.  ``max_new_tokens`` is accepted for
+        Engine-protocol compatibility and ignored (nothing is generated)."""
+        del max_new_tokens
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(EncodeJob(rid, np.asarray(tokens, np.int32)))
+        return rid
+
+    def step(self) -> List[Tuple[int, List[float]]]:
+        """One engine iteration: batch up to max_slots queued jobs through
+        one compiled encode and complete them.  Returns [(rid, embedding)]."""
+        emitted: List[Tuple[int, List[float]]] = []
+        batch: List[EncodeJob] = []
+        while self._queue and len(batch) < self.cfg.max_slots:
+            job = self._queue.pop(0)
+            if len(job.tokens) > self.cfg.max_len:
+                # rejected-but-recorded (empty embedding), like the decode
+                # engine's oversized requests — and like them NOT emitted:
+                # emitted entries are completed sequences and feed the
+                # fabric's per-class throughput accounting
+                job.done = True
+                job.embedding = []
+                self._record_finished(job)
+                continue
+            batch.append(job)
+        if not batch:
+            return emitted
+        B, S = self.cfg.max_slots, self.cfg.max_len
+        toks = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, job in enumerate(batch):
+            toks[i, :len(job.tokens)] = job.tokens
+            lens[i] = len(job.tokens)
+        exe = self._encode_exec(self.mesh)
+        emb = np.asarray(jax.device_get(exe(self.params, toks, lens)))
+        for i, job in enumerate(batch):
+            job.embedding = [float(v) for v in emb[i]]
+            job.done = True
+            self._record_finished(job)
+            emitted.append((job.rid, job.embedding))
+        self._seqs_done += len(batch)
+        return emitted
+
+    def _record_finished(self, job: EncodeJob) -> None:
+        # copy: the job's list is handed to callers via step()'s emitted
+        # pairs — a caller mutating it must not corrupt the engine's record
+        self._finished[job.rid] = list(job.embedding)
+        self._evict_finished()
+
+    def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[float]]:
+        for _ in range(max_steps):
+            if not self.has_work:
+                break
+            self.step()
+        return self.snapshot()
+
+    def results(self) -> Dict[int, List[float]]:
+        """Completed (or rejected) jobs' embeddings (copies, like the
+        decode engine's token streams)."""
+        return {rid: list(e) for rid, e in self._finished.items()}
+
+    def snapshot(self) -> Dict[int, List[float]]:
+        out: Dict[int, List[float]] = {j.rid: [] for j in self._queue}
+        out.update(self.results())
+        return out

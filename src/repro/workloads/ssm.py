@@ -1,0 +1,77 @@
+"""SSM (mamba) serving engine: recurrent decode from a constant-size state
+slot pool.
+
+The workload-class contrast that makes heterogeneous composition worthwhile
+(FILCO §1; Herald/COAC): a transformer decode tenant's per-slot cost grows
+with sequence length (KV reads) and its admission is length-budgeted, while
+a mamba tenant carries **O(1) state per slot** — a conv window plus the
+(d_inner, N) recurrent state per layer — so:
+
+* admission is slot-bound, never length-bound: any prompt length and any
+  generation budget occupy exactly one constant-size state slot
+  (``mamba_prefill`` folds the whole prompt into the state);
+* per-token decode cost is flat in sequence length and bound by *state +
+  parameter bandwidth*, not by a growing KV stream — which is why the
+  class-aware policy prices SSM steps with a state-bandwidth model instead
+  of the decode-GEMV model;
+* the whole device state (params + pooled conv/h states) reshards in one
+  ``device_put``, exactly like the transformer engine, with TP over the
+  sub-mesh's model axis via the same ``ShardingPlan`` machinery
+  (``ssm_inner`` shards; token streams are invariant across TP degree and
+  live recomposition — pinned in tests/test_workloads.py).
+
+Implementation: the continuous-batching machinery (slots, pipelined decode
+dispatch, AOT executables, resharding) is the shared engine substrate from
+:mod:`repro.workloads.decode`; this class swaps the admission accounting for
+the constant-size state pool.  ``Model.prefill``/``Model.decode_step`` on an
+attention-free config bottom out in ``mamba_prefill``/``mamba_step`` per
+layer, and the engine prefills at the exact prompt length (padding would
+corrupt recurrent state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.distribution import partitioning as part
+from repro.models import ssm as S
+from repro.models.model import Model
+from repro.workloads.compile_cache import ExecutableCache
+from repro.workloads.decode import DecodeEngine, Request, ServeConfig
+
+
+class SSMEngine(DecodeEngine):
+    workload_class = "ssm"
+
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 mesh=None, rules: Optional[part.ShardingRules] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
+        mc = model.cfg
+        if mc.ssm is None or not mc.attention_free:
+            raise ValueError(
+                f"SSMEngine serves attention-free SSM archs; {mc.name!r} is "
+                f"family={mc.family!r} (use DecodeEngine for archs with a "
+                "KV cache, including hybrids)")
+        super().__init__(model, params, cfg, mesh=mesh, rules=rules,
+                         exec_cache=exec_cache)
+
+    # ------------------------------------------------------------------
+    # constant-size state pool: admission accounting hooks
+    # ------------------------------------------------------------------
+    def _per_token_cache_elems(self) -> int:
+        """Per-SLOT (not per-token) recurrent-state elements: conv window +
+        (d_inner, N) hidden state, per layer.  Named for the hook it fills;
+        ``_slot_rows`` is 1, so arena views are (1, state_elems)."""
+        return S.state_elems(self.model.cfg) * self.model.cfg.num_layers
+
+    def _arena_capacity(self) -> int:
+        # one constant-size state slot per decode slot — max_len plays no
+        # part: SSM state does not grow with the sequence
+        return self.cfg.max_slots * self._per_token_elems
+
+    def _slot_rows(self, req: Request) -> int:
+        return 1
+
+    def _oversized(self, req: Request) -> bool:
+        # O(1) state: no prompt length or generation budget can overflow a
+        # slot.  Backpressure is purely slot availability.
+        return False

@@ -1,0 +1,459 @@
+"""Heterogeneous workload subsystem: SSM serving numerics (chunked-scan
+prefill == step-by-step decode state; streams invariant across TP degree and
+live recomposition), encoder embedding invariance, class-aware policy
+costing, and the mixed-fleet end-to-end acceptance (one fabric, three
+workload classes, outputs bit-identical across a live move between classes).
+
+Device-touching scenarios run in an 8-host-device subprocess (device count
+is fixed at first jax init), mirroring tests/test_fabric.py."""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models import build_model, ssm as S
+from repro.distribution import strip
+from repro.serve.fabric import AnalyticalPolicy, TenantLoad
+from repro.workloads import (DECODE, ENCODER, SSM, DecodeEngine,
+                             EncoderEngine, Engine, ExecutableCache,
+                             SSMEngine, ServeConfig, workload_class_of)
+
+
+def _fm_cfg():
+    return dataclasses.replace(get_reduced("falcon-mamba-7b"),
+                               dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    cfg = _fm_cfg()
+    model = build_model(cfg)
+    params = strip(model.init(jax.random.key(0)))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# SSM numerics: the chunked-scan prefill must land the exact state the
+# step-by-step recurrence would (admission via mamba_prefill is only sound
+# if subsequent mamba_step decodes continue from an equivalent state)
+# ---------------------------------------------------------------------------
+
+def test_mamba_prefill_state_matches_stepwise():
+    cfg = _fm_cfg()
+    block = S.mamba_init(jax.random.key(0), cfg)
+    block = strip(block)
+    B, Sq = 2, 11                      # odd length: exercises scan padding
+    x = np.asarray(jax.random.normal(jax.random.key(1),
+                                     (B, Sq, cfg.d_model)), np.float32)
+    cache0 = strip(S.mamba_cache_init(cfg, B, np.float32))
+
+    out_p, cache_p = S.mamba_prefill(block, cfg, x, cache0, chunk=4)
+
+    cache_s = cache0
+    outs = []
+    for t in range(Sq):
+        y, cache_s = S.mamba_step(block, cfg, x[:, t:t + 1], cache_s)
+        outs.append(y)
+    out_s = np.concatenate([np.asarray(o) for o in outs], axis=1)
+
+    np.testing.assert_allclose(np.asarray(cache_p["h"]),
+                               np.asarray(cache_s["h"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache_p["conv"]),
+                               np.asarray(cache_s["conv"]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_p), out_s,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# constant-size state pool: admission is slot-bound, never length-bound
+# ---------------------------------------------------------------------------
+
+def test_ssm_engine_admits_beyond_max_len(mamba):
+    """An SSM request whose prompt + budget exceeds max_len still serves:
+    the recurrent state is O(1) per slot.  The same request on a transformer
+    DecodeEngine is rejected (KV would overflow the slot)."""
+    cfg, model, params = mamba
+    sc = ServeConfig(max_slots=2, max_len=16, eos_id=-1)
+    prompt = np.arange(1, 40) % cfg.vocab_size       # 39 tokens >> max_len
+
+    eng = SSMEngine(model, params, sc)
+    rid = eng.submit(prompt, max_new_tokens=5)
+    out = eng.run_to_completion(100)
+    assert len(out[rid]) == 5
+
+    dec = DecodeEngine(model, params, sc)
+    rid2 = dec.submit(prompt, max_new_tokens=5)
+    out2 = dec.run_to_completion(100)
+    assert out2[rid2] == []            # rejected-but-recorded
+
+
+def test_ssm_engine_arena_is_slot_bound(mamba):
+    """Arena capacity reflects slots x constant state, independent of
+    max_len; a full slot pool backpressures, a free one admits."""
+    cfg, model, params = mamba
+    a = SSMEngine(model, params, ServeConfig(max_slots=2, max_len=16,
+                                             eos_id=-1))
+    b = SSMEngine(model, params, ServeConfig(max_slots=2, max_len=4096,
+                                             eos_id=-1))
+    assert a.arena.capacity == b.arena.capacity
+    assert a.arena.capacity == 2 * S.state_elems(cfg) * cfg.num_layers
+
+
+def test_ssm_engine_rejects_kv_archs(mamba):
+    cfg, model, params = mamba
+    qcfg = get_reduced("qwen2.5-32b")
+    qmodel = build_model(qcfg)
+    qparams = strip(qmodel.init(jax.random.key(0)))
+    with pytest.raises(ValueError):
+        SSMEngine(qmodel, qparams, ServeConfig())
+
+
+def test_workload_class_derivation():
+    assert workload_class_of(_fm_cfg()) == SSM
+    assert workload_class_of(get_reduced("qwen2.5-32b")) == DECODE
+    assert workload_class_of(get_reduced("hymba-1.5b")) == DECODE  # hybrid: KV
+
+
+def test_engines_satisfy_protocol(mamba):
+    cfg, model, params = mamba
+    eng = SSMEngine(model, params, ServeConfig(max_slots=1, eos_id=-1))
+    enc = EncoderEngine(model, params, ServeConfig(max_slots=1, max_len=16))
+    assert isinstance(eng, Engine) and isinstance(enc, Engine)
+
+
+# ---------------------------------------------------------------------------
+# shared executable cache: same-config engines reuse programs
+# ---------------------------------------------------------------------------
+
+def test_same_config_engines_share_executables(mamba):
+    cfg, model, params = mamba
+    shared = ExecutableCache(capacity=32)
+    sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
+    a = SSMEngine(model, params, sc, exec_cache=shared)
+    b = SSMEngine(model, params, sc, exec_cache=shared)
+    prompt = np.arange(1, 9)
+    a.submit(prompt, max_new_tokens=3)
+    a.run_to_completion(50)
+    assert a.compile_builds > 0
+    b.submit(prompt, max_new_tokens=3)
+    b.run_to_completion(50)
+    assert b.compile_builds == 0, \
+        "same-config tenant should hit the shared fabric cache"
+    # different serve dims -> different program: no false sharing
+    c = SSMEngine(model, params, ServeConfig(max_slots=3, max_len=32,
+                                             eos_id=-1), exec_cache=shared)
+    c.submit(prompt, max_new_tokens=3)
+    c.run_to_completion(50)
+    assert c.compile_builds > 0
+    # different sharding rules -> different program: a replicated and a TP
+    # engine of the same config must never share a compiled executable
+    from repro.serve import serve_engine_rules
+    ann = model.init(jax.random.key(0))     # annotated params (rules need them)
+    d = SSMEngine(model, ann, sc, rules=serve_engine_rules(),
+                  exec_cache=shared)
+    d.submit(prompt, max_new_tokens=3)
+    d.run_to_completion(50)
+    assert d.compile_builds > 0
+
+
+def test_encoder_rejections_not_counted_as_throughput(mamba):
+    """Oversized embedding jobs are rejected-but-recorded, and — like the
+    decode engine's rejects — never emitted: emitted entries feed the
+    fabric's per-class throughput accounting."""
+    cfg, model, params = mamba
+    enc = EncoderEngine(model, params, ServeConfig(max_slots=2, max_len=8))
+    ok = enc.submit(np.arange(1, 6))
+    bad = enc.submit(np.arange(1, 30))          # 29 tokens > max_len
+    emitted = []
+    while enc.has_work:
+        emitted.extend(enc.step())
+    assert [r for r, _ in emitted] == [ok]
+    assert enc.results()[bad] == []             # recorded, empty
+    assert len(enc.results()[ok]) == cfg.d_model
+    assert enc.stats()["seqs_done"] == 1
+
+
+# ---------------------------------------------------------------------------
+# class-aware policy costing
+# ---------------------------------------------------------------------------
+
+def test_step_cost_cache_key_includes_workload_class():
+    """Satellite regression: an SSM/encoder tenant sharing a cfg.name with a
+    transformer tenant must not read a stale decode-GEMM price."""
+    pol = AnalyticalPolicy()
+    cfg = _fm_cfg()
+    dec = pol.step_cost(cfg, 2, 4)                   # caches under DECODE
+    ssm = pol.step_cost(cfg, 2, 4, SSM)
+    enc = pol.step_cost(cfg, 2, 4, ENCODER)
+    assert dec != ssm and dec != enc and ssm != enc
+    # and the decode price is unchanged by the later class-keyed entries
+    assert pol.step_cost(cfg, 2, 4) == dec
+
+
+def test_step_cost_scales_down_with_cus_per_class():
+    pol = AnalyticalPolicy()
+    cfg = _fm_cfg()
+    qcfg = get_reduced("qwen2.5-32b")
+    for c, wc in ((cfg, SSM), (qcfg, ENCODER), (qcfg, DECODE)):
+        assert pol.step_cost(c, 2, 4, wc) < pol.step_cost(c, 2, 1, wc)
+
+
+def _load(pending, active=1, util=0.0):
+    return TenantLoad(pending_tokens=pending, queue_depth=0,
+                      active=active, arena_utilization=util)
+
+
+def test_mixed_fleet_split_shifts_toward_owed_class():
+    """The split search allocates CUs toward the class with owed work,
+    under each class's own cost model."""
+    cfgs = {"dec": get_reduced("minitron-4b"), "ssm": _fm_cfg(),
+            "enc": get_reduced("qwen2.5-32b")}
+    classes = {"dec": DECODE, "ssm": SSM, "enc": ENCODER}
+    pol = AnalyticalPolicy()
+    # the encoder tenant owes a large prefill backlog; others trickle
+    sizes, reason = pol.decide(
+        {"dec": _load(5), "ssm": _load(5), "enc": _load(5000)},
+        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+    assert reason in ("rebalance", "admit")
+    assert sizes["enc"] > 2, f"expected encoder to gain CUs, got {sizes}"
+    assert sizes["enc"] > sizes["dec"] and sizes["enc"] > sizes["ssm"]
+    # now the SSM tenant owes the work
+    sizes2, reason2 = pol.decide(
+        {"dec": _load(5), "ssm": _load(5000), "enc": _load(5)},
+        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+    assert sizes2["ssm"] >= sizes2["dec"] and sizes2["ssm"] >= sizes2["enc"]
+    assert sizes2["ssm"] > 3 or reason2 == "hysteresis"
+
+
+def test_policy_exposes_runner_up():
+    cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
+    pol = AnalyticalPolicy()
+    sizes, reason = pol.decide({"a": _load(50), "b": _load(50)},
+                               cfgs, {"a": 4, "b": 4}, 8)
+    assert reason == "hysteresis"
+    # staying put: the runner-up is the best alternative split, the one the
+    # fabric speculatively prewarms during idle decide intervals
+    assert pol.runner_up is not None
+    assert sum(pol.runner_up.values()) == 8
+    pol.decide({"a": _load(0), "b": _load(0)}, cfgs, {"a": 4, "b": 4}, 8)
+    assert pol.runner_up is None       # idle fabric: nothing worth warming
+
+
+# ---------------------------------------------------------------------------
+# device scenarios (8 fake host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import dataclasses
+import json
+import jax
+import numpy as np
+"""
+
+
+def _run(body: str, timeout=900):
+    out = subprocess.run([sys.executable, "-c",
+                          _PRELUDE + textwrap.dedent(body)],
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_ssm_tp_and_recomposition_stream_invariance():
+    """SSM serving mirrors the transformer pins: token streams across 1-way
+    (replicated) and 2-way TP sub-meshes are identical, including across a
+    mid-stream recomposition that changes the TP degree."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.models import build_model
+    from repro.serve import serve_engine_rules
+    from repro.workloads import SSMEngine, ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    cfg = dataclasses.replace(get_reduced("falcon-mamba-7b"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=L)
+               for L in (5, 9, 7)]              # few distinct exact lengths
+
+    def run(tp, rules, script=None):
+        eng = SSMEngine(model, params, sc,
+                        mesh=comp.submesh(range(tp), f"tp{tp}"),
+                        rules=rules)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=10)
+        step = 0
+        while eng.has_work:
+            if script and step in script:
+                eng.reshard_to(comp.submesh(range(script[step]), "re"))
+            eng.step()
+            step += 1
+            assert step < 200
+        return {str(r): t for r, t in eng.results().items()}
+
+    rules = serve_engine_rules()
+    ref = run(1, None)                          # replicated baseline
+    tp2 = run(2, rules)
+    dyn = run(2, rules, {3: 1, 7: 4, 11: 2})    # shrink -> grow -> back
+    print(json.dumps({"n": len(ref), "tp2": tp2 == ref, "dyn": dyn == ref}))
+    """)
+    assert res["n"] == 3
+    assert res["tp2"], "TP SSM decode diverged from replicated"
+    assert res["dyn"], "mid-stream recomposition altered the SSM stream"
+
+
+def test_encoder_embeddings_invariant_across_moves():
+    """Embedding outputs are bit-identical when the engine migrates between
+    sub-accelerators (replicated), and equal across 1-way vs 2-way TP."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.models import build_model
+    from repro.serve import serve_engine_rules
+    from repro.workloads import EncoderEngine, ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    cfg = dataclasses.replace(get_reduced("qwen2.5-32b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=2, max_len=32)
+    rng = np.random.default_rng(0)
+    jobs = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 20)))
+            for _ in range(5)]
+
+    def run(ids, rules, move=None):
+        eng = EncoderEngine(model, params, sc,
+                            mesh=comp.submesh(ids, "enc"), rules=rules)
+        out = {}
+        for i, j in enumerate(jobs):
+            eng.submit(j)
+            if move is not None and i == 2:
+                eng.reshard_to(comp.submesh(move, "moved"))
+            eng.step()
+        return eng.results()
+
+    ref = run(range(2), None)
+    moved = run(range(2), None, move=[4, 5])     # same size, other devices
+    tp2 = run(range(2), serve_engine_rules())
+    exact = all(ref[r] == moved[r] for r in ref)
+    close = all(np.allclose(ref[r], tp2[r], rtol=1e-5, atol=1e-6)
+                for r in ref)
+    print(json.dumps({"n": len(ref), "exact_across_move": exact,
+                      "tp_close": close}))
+    """)
+    assert res["n"] == 5
+    assert res["exact_across_move"], \
+        "moving the encoder between same-size compositions changed outputs"
+    assert res["tp_close"], "TP encoder diverged from replicated"
+
+
+def test_mixed_fleet_end_to_end_with_live_class_moves():
+    """Acceptance: a mixed fleet (transformer decode + mamba + encoder) runs
+    end-to-end through ComposedServer with >=1 live recomposition between
+    classes, and SSM token streams / encoder embeddings are bit-identical to
+    a never-recomposed run of the same fleet."""
+    res = _run("""
+    from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
+                                    TenantSpec)
+    from repro.workloads import ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    tenants = [
+        TenantSpec("llm", "minitron-4b", serve=sc),
+        TenantSpec("mamba", "falcon-mamba-7b", seed=1, serve=sc),
+        TenantSpec("embed", "qwen2.5-32b", seed=2, serve=sc,
+                   workload="encoder"),
+    ]
+
+    def run(policy):
+        srv = ComposedServer(mesh, tenants, policy=policy, decide_every=3,
+                             tp=False)       # replicated: bit-exact moves
+        rng = np.random.default_rng(0)
+        def traffic(name, n, new):
+            vocab = srv.cfgs[name].vocab_size
+            for _ in range(n):
+                srv.submit(name, rng.integers(1, vocab, size=8),
+                           max_new_tokens=new)
+        traffic("llm", 2, 8)
+        traffic("embed", 3, 0)
+        for _ in range(8):
+            srv.step()
+        traffic("mamba", 3, 10)              # burst: forces a class move
+        out = srv.drain(max_steps=300)
+        return srv, out
+
+    srv, out = run(AnalyticalPolicy())
+    ref_srv, ref = run(None)                  # static composition baseline
+    moved_classes = {srv.classes[t] for e in srv.events for t in e.moved}
+    print(json.dumps({
+        "recomps": len(srv.events),
+        "classes": srv.classes,
+        "moved_classes": sorted(moved_classes),
+        "ssm_match": out["mamba"] == ref["mamba"],
+        "enc_match": out["embed"] == ref["embed"],
+        "llm_match": out["llm"] == ref["llm"],
+        "done": {t: len(d) for t, d in out.items()},
+    }))
+    """)
+    assert res["recomps"] >= 1, "expected a live recomposition"
+    assert len(res["moved_classes"]) >= 2, \
+        f"expected moves across classes, got {res['moved_classes']}"
+    assert res["ssm_match"], "SSM streams changed across the live move"
+    assert res["enc_match"], "encoder embeddings changed across the live move"
+    assert res["llm_match"]
+    assert res["done"] == {"llm": 2, "mamba": 3, "embed": 3}
+
+
+def test_speculative_runner_up_prewarm():
+    """Idle decide intervals warm the policy's runner-up split in the
+    background: the fabric records speculative prewarms and the runner-up
+    composition's executables are already cached when it later commits."""
+    res = _run("""
+    import time
+    from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
+                                    TenantSpec)
+    from repro.workloads import ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
+    srv = ComposedServer(mesh, [
+        TenantSpec("a", "minitron-4b", serve=sc),
+        TenantSpec("b", "minitron-4b", seed=1, serve=sc),
+    ], policy=AnalyticalPolicy(), decide_every=2, prewarm_async=True)
+    rng = np.random.default_rng(0)
+    vocab = srv.cfgs["a"].vocab_size
+    # balanced load: the policy stays put (hysteresis) but exposes a
+    # runner-up, which the idle ticks compile in the background
+    for t in ("a", "b"):
+        srv.submit(t, rng.integers(1, vocab, size=8), max_new_tokens=20)
+    steps = 0
+    while srv.speculative_prewarms == 0 and steps < 100:
+        srv.step()
+        steps += 1
+    for f in srv._spec_futures:
+        f.result()                     # block: surface background errors
+    print(json.dumps({"speculative": srv.speculative_prewarms,
+                      "events": len(srv.events)}))
+    """)
+    assert res["speculative"] >= 1, \
+        "balanced fleet never speculatively prewarmed its runner-up split"
