@@ -15,9 +15,9 @@ the serving path makes:
   the target composition's executables pre-compiled vs with a cold cache
   (where the XLA recompile lands);
 * the ``mixed`` heterogeneous scenario: transformer decode + mamba SSM +
-  encoder tenants on one fabric under class-aware CU costing, with
-  per-class throughput (tokens/s, or seqs/s for the encoder) and
-  recomposition stalls.
+  encoder + seamless enc-dec tenants on one fabric under class-aware CU
+  costing, with per-class throughput (tokens/s — including enc-dec decode
+  tokens/s — or seqs/s for the encoder) and recomposition stalls.
 
 Each scenario is the launcher itself (``repro.launch.serve``) run in a
 subprocess because it fakes 8 host devices and the device count is locked
@@ -40,7 +40,8 @@ _FABRIC = [sys.executable, "-m", "repro.launch.serve", "--fabric",
            "--reduced", "--requests", "4", "--max-new-tokens", "12",
            "--seed", "0"]
 # heterogeneous fleet: one tenant per workload class (transformer decode +
-# mamba SSM + encoder embedding) under class-aware CU costing
+# mamba SSM + encoder embedding + seamless enc-dec) under class-aware CU
+# costing
 _MIXED = [sys.executable, "-m", "repro.launch.serve", "--fabric",
           "--scenario", "mixed", "--reduced", "--requests", "4",
           "--max-new-tokens", "12", "--seed", "0"]

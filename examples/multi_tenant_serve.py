@@ -12,8 +12,9 @@ The scenario (8 fake host devices, 8 CUs on the 'model' axis):
             monolithic accelerator (paper's CHARM-1 operating point is one
             composition of the same fabric);
   phase 4 — a heterogeneous fleet: transformer decode + mamba SSM +
-            encoder embedding tenants share the fabric under class-aware
-            costing (each workload priced by its bound resource).
+            encoder embedding + seamless enc-dec tenants share the fabric
+            under class-aware costing (each workload priced by its bound
+            resource).
 
 Run (fakes 8 devices; ONLY examples/dry-run may do this):
   PYTHONPATH=src python examples/multi_tenant_serve.py
@@ -38,23 +39,30 @@ def run_phase(server, title, steps):
 
 
 def heterogeneous_fleet():
-    """One fabric, three workload classes (FILCO's diverse-workload claim):
+    """One fabric, four workload classes (FILCO's diverse-workload claim):
     a transformer decode tenant, a mamba SSM tenant (constant-size recurrent
-    state) and an encoder tenant (prefill-only embeddings) share 8 CUs under
-    the class-aware analytical policy — each priced by its bound resource
-    (weight bandwidth / state bandwidth / compute)."""
+    state), an encoder tenant (prefill-only embeddings) and a seamless
+    enc-dec tenant (batched bucketed encode + cross-attention decode) share
+    8 CUs under the class-aware analytical policy — each priced by its bound
+    resource (weight bandwidth / state bandwidth / compute / decode GEMV +
+    per-step cross-attention source reads)."""
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     serve = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    s2t_serve = ServeConfig(max_slots=2, max_len=24, eos_id=-1,
+                            max_src_len=32, len_buckets=(16,))
     server = ComposedServer(
         mesh,
         [TenantSpec("llm", "minitron-4b", serve=serve),
          TenantSpec("mamba", "falcon-mamba-7b", seed=1, serve=serve),
          TenantSpec("embed", "qwen2.5-32b", seed=2, serve=serve,
-                    workload="encoder")],
+                    workload="encoder"),
+         # workload="auto" derives "encdec" from the enc-dec architecture
+         TenantSpec("s2t", "seamless-m4t-medium", seed=3, serve=s2t_serve)],
         policy=AnalyticalPolicy(),
         decide_every=3)
     print(f"\nheterogeneous fleet: classes={server.classes} "
           f"composition={server.sizes()}")
+    assert server.classes["s2t"] == "encdec"
     rng = np.random.default_rng(1)
 
     def traffic(name, n, new):
@@ -63,10 +71,11 @@ def heterogeneous_fleet():
             server.submit(name, rng.integers(1, vocab, size=8),
                           max_new_tokens=new)
 
-    # wave 1: decode + embedding traffic only — the idle mamba tenant is
-    # parked and its CUs go to the busy classes
+    # wave 1: decode + embedding + enc-dec traffic — the idle mamba tenant
+    # is parked and its CUs go to the busy classes
     traffic("llm", 2, 10)
     traffic("embed", 4, 0)
+    traffic("s2t", 2, 8)
     for _ in range(8):
         server.step()
     # wave 2: a mamba burst — the policy admits it back, stealing CUs from
@@ -78,11 +87,16 @@ def heterogeneous_fleet():
     for e in server.events:
         print(f"  step {e.step:3d} [{e.reason}] {e.sizes_before} -> "
               f"{e.sizes_after}")
-    assert done == {"llm": 2, "mamba": 3, "embed": 4}
+    assert done == {"llm": 2, "mamba": 3, "embed": 4, "s2t": 2}
     assert server.events, "expected the policy to recompose between classes"
     # embeddings are real vectors, not token streams
     emb = next(iter(server.engines["embed"].results().values()))
     assert len(emb) == server.cfgs["embed"].d_model
+    # enc-dec jobs produce full decode streams through the fabric
+    s2t_streams = server.engines["s2t"].results()
+    assert all(len(toks) == 8 for toks in s2t_streams.values())
+    print(f"s2t encode-bucket hits: "
+          f"{server.engines['s2t'].stats()['bucket_hits']}")
     print("heterogeneous fleet OK")
 
 

@@ -17,7 +17,8 @@ first:
       --arch minitron-4b --arch qwen2.5-32b --reduced --requests 12
 
 Heterogeneous fleet (one tenant per workload class — transformer decode +
-mamba SSM + encoder embedding — with class-aware CU costing):
+mamba SSM + encoder embedding + seamless enc-dec — with class-aware CU
+costing):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --fabric --scenario mixed \
@@ -54,11 +55,13 @@ from repro.serve import (AnalyticalPolicy, ComposedServer, ServeConfig,
 
 
 # the heterogeneous fleet --scenario mixed serves: one tenant per workload
-# class, so the class-aware policy splits the fabric across all three bound
-# resources (decode bandwidth / SSM state bandwidth / encoder compute)
+# class, so the class-aware policy splits the fabric across all four bound
+# resources (decode bandwidth / SSM state bandwidth / encoder compute /
+# enc-dec decode + cross-attention source reads)
 MIXED_FLEET = (("decode", "minitron-4b"),
                ("ssm", "falcon-mamba-7b"),
-               ("encoder", "qwen2.5-32b"))
+               ("encoder", "qwen2.5-32b"),
+               ("encdec", "seamless-m4t-medium"))
 
 
 def run_fabric(args) -> int:
@@ -100,8 +103,8 @@ def run_fabric(args) -> int:
             break
     dt = time.monotonic() - t0
     stats = server.stats()
-    # per-class throughput: decode/ssm tenants emit tokens, encoder tenants
-    # emit completed sequences (embeddings)
+    # per-class throughput: decode/ssm/encdec tenants emit tokens, encoder
+    # tenants emit completed sequences (embeddings)
     throughput = {
         t: {"class": server.classes[t],
             "unit": ("seqs_per_s" if server.classes[t] == "encoder"
@@ -264,7 +267,8 @@ def main(argv=None) -> int:
                     default="bursty",
                     help="fabric traffic: 'bursty' serves the --arch tenants; "
                          "'mixed' serves one tenant per workload class "
-                         "(transformer decode + mamba SSM + encoder)")
+                         "(transformer decode + mamba SSM + encoder + "
+                         "seamless enc-dec)")
     ap.add_argument("--decide-every", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)

@@ -13,6 +13,7 @@ decode).  MLA caches the *compressed* latent instead: {"ckv": (B,T,R),
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -139,7 +140,16 @@ def cross_init(rng, cfg: ModelConfig):
     return gqa_init(rng, cfg)
 
 
-def cross_fwd(p, cfg: ModelConfig, x, enc_out, enc_positions):
+def cross_fwd(p, cfg: ModelConfig, x, enc_out, enc_positions, src_len=None):
+    """Cross-attention over encoder outputs (train / prefill).
+
+    src_len: optional int32 scalar or (B,) valid source lengths.  When the
+    encoder output is right-padded to a bucketed program shape (serving),
+    positions >= src_len are masked out of the softmax so the decoder only
+    attends real source frames — the full-sequence counterpart of
+    ``cross_step``'s masked ``decode_attention`` read.  None keeps the
+    unmasked training path (exact-length encoder outputs).
+    """
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(x.dtype))
@@ -147,7 +157,23 @@ def cross_fwd(p, cfg: ModelConfig, x, enc_out, enc_positions):
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
         v = v + p["bv"].astype(x.dtype)
-    o = L.blockwise_attention(q, k, v, causal=False)
+    if src_len is None:
+        o = L.blockwise_attention(q, k, v, causal=False)
+    else:
+        # masked source padding: scores are (B, Hq, Sq, Ssrc) — tiny for the
+        # single-token decoder prompts the serving engine prefills
+        B, Sq, Hq, D = q.shape
+        Ss, Hkv = k.shape[1], k.shape[2]
+        groups = Hq // Hkv
+        kexp = jnp.repeat(k, groups, axis=2)
+        vexp = jnp.repeat(v, groups, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kexp,
+                       preferred_element_type=jnp.float32) / math.sqrt(D)
+        lens = jnp.broadcast_to(jnp.asarray(src_len, jnp.int32), (B,))
+        mask = jnp.arange(Ss)[None, None, None, :] < lens[:, None, None, None]
+        s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(vexp.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, vexp)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
 
 

@@ -111,12 +111,20 @@ class Model:
 
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, *, src_len: int = 0):
+        """Pooled decode cache for ``batch`` slots of ``max_len`` tokens.
+
+        src_len: cross-attention source capacity (enc-dec archs only) —
+        allocates per-layer (batch, src_len, kv_heads, head_dim) cross-K/V
+        buffers and a per-row ``src_len`` int32 vector recording each slot's
+        *valid* source length (continuous batching mixes source lengths, so
+        the mask bound is per row, not per pool).
+        """
         cfg = self.cfg
         dtype = cfg.activation_dtype
         cache = T.decoder_cache_init(cfg, batch, max_len, dtype,
                                      cross_src=src_len if cfg.is_encdec else 0)
         if cfg.is_encdec:
-            cache["src_len"] = jnp.asarray(src_len, jnp.int32)
+            cache["src_len"] = jnp.full((batch,), src_len, jnp.int32)
         return cache
 
     @staticmethod
@@ -126,24 +134,43 @@ class Model:
 
     def prefill(self, params, batch, cache, *, attn_impl: str = "blockwise",
                 moe_dispatch: str = "einsum", residual_spec=None,
-                true_len=None, attn_block: int = 512):
+                true_len=None, enc_out=None, src_len=None,
+                attn_block: int = 512):
         """Run the prompt through the model, filling the cache.
 
         true_len: optional (B,) or scalar valid prompt lengths when the
         prompt is right-padded (continuous batching).  Returns logits at the
         last *valid* position per row, and the cache with per-row positions.
+
+        Enc-dec archs additionally accept:
+
+        * enc_out — precomputed encoder hidden states (B, S_src, d); when
+          given the encoder stack is skipped (the serving engine encodes
+          sources in a separate batched, bucketed program and prefills the
+          decoder per slot from the shared output);
+        * src_len — int32 scalar or (B,) valid source lengths when the
+          encoder output is right-padded: masks cross-attention reads and
+          is recorded per row in the returned cache's ``src_len`` vector
+          (the bound ``decode_step``'s cross-attention reads honour).
         """
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
         pos = jnp.broadcast_to(jnp.arange(S), tokens.shape)
-        enc_out = enc_pos = None
+        enc_pos = None
         if cfg.is_encdec:
-            enc_out, enc_pos = self._encode(params, batch["frames"], attn_impl)
+            if enc_out is None:
+                enc_out, enc_pos = self._encode(params, batch["frames"],
+                                                attn_impl)
+            else:
+                enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                           enc_out.shape[:2])
+        else:
+            enc_out = None
         x, cache = T.decoder_prefill(params["decoder"], cfg, x, pos, cache,
                                      attn_impl=attn_impl, enc_out=enc_out,
-                                     enc_positions=enc_pos,
+                                     enc_positions=enc_pos, src_len=src_len,
                                      moe_dispatch=moe_dispatch,
                                      residual_spec=residual_spec,
                                      true_len=true_len,
@@ -158,7 +185,9 @@ class Model:
             "bd,dv->bv", last, self._head(params).astype(x.dtype)))
         out_cache = dict(cache)
         if cfg.is_encdec:
-            out_cache["src_len"] = jnp.asarray(batch["frames"].shape[1], jnp.int32)
+            src = enc_out.shape[1] if src_len is None else src_len
+            out_cache["src_len"] = jnp.broadcast_to(
+                jnp.asarray(src, jnp.int32), (B,))
         return logits, out_cache
 
     def encode(self, params, batch, *, attn_impl: str = "blockwise"):

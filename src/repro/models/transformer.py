@@ -136,7 +136,7 @@ def _layer_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
 
 def _layer_prefill(p, cfg, x, positions, cache, *, is_global=None,
                    attn_impl="blockwise", enc_out=None, enc_positions=None,
-                   moe_dispatch="einsum", attn_block=512):
+                   src_len=None, moe_dispatch="einsum", attn_block=512):
     h = L.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if cfg.hybrid_parallel:
@@ -164,7 +164,8 @@ def _layer_prefill(p, cfg, x, positions, cache, *, is_global=None,
         x = x + y
     if "cross" in p:
         hc = L.apply_norm(cfg.norm, p["ln_cross"], x, cfg.norm_eps)
-        x = x + A.cross_fwd(p["cross"], cfg, hc, enc_out, enc_positions)
+        x = x + A.cross_fwd(p["cross"], cfg, hc, enc_out, enc_positions,
+                            src_len=src_len)
         ck, cv = A.cross_kv(p["cross"], cfg, enc_out)
         new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
         new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
@@ -318,11 +319,11 @@ def decoder_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
 
 def cache_slot_axes(cache) -> PyTree:
     """Explicit batch-slot axis index per cache leaf, -1 for leaves without
-    one (scalars like ``src_len``).
+    one (scalar bookkeeping).
 
     Scanned stacks carry the layer axis leading, so their slot axis is 1;
-    every other leaf (prologue layers, per-row ``pos``, cross-attention KV)
-    is slot-leading.  Serving code writes single-request prefill results into
+    every other leaf (prologue layers, per-row ``pos`` and ``src_len``,
+    cross-attention KV) is slot-leading.  Serving code writes single-request prefill results into
     the pooled cache along these axes — positional, never inferred from shape
     mismatch, so a 1-slot pool updates exactly like an N-slot one.
     """
@@ -338,8 +339,11 @@ def cache_slot_axes(cache) -> PyTree:
 
 def decoder_prefill(params, cfg: ModelConfig, x, positions, cache, *,
                     attn_impl="blockwise", enc_out=None, enc_positions=None,
-                    moe_dispatch="einsum", residual_spec=None, true_len=None,
-                    attn_block=512):
+                    src_len=None, moe_dispatch="einsum", residual_spec=None,
+                    true_len=None, attn_block=512):
+    """src_len: optional valid source lengths for the cross-attention mask
+    when ``enc_out`` is right-padded (serving's bucketed encode programs);
+    None attends the full encoder output (training, exact lengths)."""
     n_pro, n_scan = _prologue_plan(cfg)
     new_pro = []
     x = _constrain(x, residual_spec)
@@ -347,7 +351,7 @@ def decoder_prefill(params, cfg: ModelConfig, x, positions, cache, *,
         x, nc = _layer_prefill(lp, cfg, x, positions, lc,
                                is_global=jnp.asarray(i in cfg.global_attn_layers),
                                attn_impl=attn_impl, enc_out=enc_out,
-                               enc_positions=enc_positions,
+                               enc_positions=enc_positions, src_len=src_len,
                                moe_dispatch=moe_dispatch,
                                attn_block=attn_block)
         x = _constrain(x, residual_spec)
@@ -358,7 +362,7 @@ def decoder_prefill(params, cfg: ModelConfig, x, positions, cache, *,
         lp, lc, is_global = xs
         h, nc = _layer_prefill(lp, cfg, h, positions, lc, is_global=is_global,
                                attn_impl=attn_impl, enc_out=enc_out,
-                               enc_positions=enc_positions,
+                               enc_positions=enc_positions, src_len=src_len,
                                moe_dispatch=moe_dispatch,
                                attn_block=attn_block)
         return _constrain(h, residual_spec), nc

@@ -3,7 +3,7 @@ from repro.serve.engine import DecodeEngine, Request, ServeConfig, ServeEngine
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                 RecompositionEvent, TenantLoad, TenantSpec,
                                 serve_engine_rules)
-from repro.workloads import EncoderEngine, SSMEngine
+from repro.workloads import EncDecEngine, EncoderEngine, SSMEngine
 
 __all__ = [
     "ExecutableCache",
@@ -13,6 +13,7 @@ __all__ = [
     "DecodeEngine",
     "SSMEngine",
     "EncoderEngine",
+    "EncDecEngine",
     "AnalyticalPolicy",
     "ComposedServer",
     "RecompositionEvent",

@@ -1,10 +1,13 @@
-"""Compatibility shim: the batched transformer serving engine moved to
-``repro.workloads.decode`` when the workload-class subsystem landed (it is
-now one engine class among decode/ssm/encoder — see ``repro.workloads``).
+"""Compatibility shim — NOT the engine's home.  The batched transformer
+serving engine lives in ``repro.workloads.decode`` (it moved there when the
+workload-class subsystem landed and is now one engine class among
+decode/ssm/encoder/encdec — see ``repro.workloads`` and docs/workloads.md).
 
-``ServeEngine`` remains the public name for the transformer decode engine;
-new code should import :class:`~repro.workloads.decode.DecodeEngine` (or its
-siblings) from ``repro.workloads``.
+``ServeEngine`` remains a public alias for the transformer decode engine;
+new code should import :class:`~repro.workloads.decode.DecodeEngine` (or
+its siblings :class:`~repro.workloads.ssm.SSMEngine`,
+:class:`~repro.workloads.encoder.EncoderEngine`,
+:class:`~repro.workloads.encdec.EncDecEngine`) from ``repro.workloads``.
 """
 from repro.workloads.decode import (DecodeEngine, Request, ServeConfig,
                                     _mesh_of, _write_slot)

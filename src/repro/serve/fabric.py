@@ -4,7 +4,7 @@ independent accelerators" (paper §1, §2.1).
 
 A :class:`ComposedServer` owns the full device mesh.  Each tenant runs the
 engine of its *workload class* (transformer decode / SSM recurrent decode /
-encoder embedding — :mod:`repro.workloads`) on a
+encoder embedding / enc-dec encode→decode — :mod:`repro.workloads`) on a
 :class:`~repro.core.composer.MeshComposer` sub-accelerator, tensor-parallel
 over its sub-mesh's model axis (``serve_engine_rules``), so a tenant's
 measured throughput actually tracks the CUs it holds.  Between decode steps
@@ -44,8 +44,9 @@ from repro.core.composer import MeshComposer
 from repro.distribution import partitioning as part
 from repro.models import build_model
 from repro.models.ssm import dims as ssm_dims
-from repro.workloads import (DECODE, ENCODER, SSM, Engine, ExecutableCache,
-                             ServeConfig, build_engine, workload_class_of)
+from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, Engine,
+                             ExecutableCache, ServeConfig, build_engine,
+                             workload_class_of)
 
 
 def serve_engine_rules() -> part.ShardingRules:
@@ -74,8 +75,9 @@ class TenantSpec:
     serve: ServeConfig = ServeConfig()
     seed: int = 0
     # workload class: "auto" derives from the arch (attention-free SSM ->
-    # "ssm", else "decode"); "encoder" is an explicit tenant choice — any
-    # arch can serve prefill-only/embedding traffic
+    # "ssm", enc-dec with cross-attention -> "encdec", else "decode");
+    # "encoder" is an explicit tenant choice — any arch can serve
+    # prefill-only/embedding traffic
     workload: str = "auto"
 
 
@@ -148,7 +150,10 @@ class AnalyticalPolicy:
       streamed every token);
     * ``ssm``     — state-bandwidth-bound recurrent update per step
       (``ssm_step_latency``: params + read/write of the O(1) state);
-    * ``encoder`` — compute-bound full-sequence MMs per owed prompt token.
+    * ``encoder`` — compute-bound full-sequence MMs per owed prompt token;
+    * ``encdec``  — decode-side batched GEMVs (self-attn, cross-attn and
+      MLP projections) plus the per-step cross-attention source-cache read,
+      whose bytes scale with the tenant's source length (``src_len``).
 
     So a compute-starved encoder tenant and a bandwidth-starved decode
     tenant are priced on different rooflines, and the split search allocates
@@ -173,15 +178,25 @@ class AnalyticalPolicy:
 
     # -- per-tenant per-step cost on a c-CU sub-accelerator ----------------
     def step_cost(self, cfg: ModelConfig, batch: int, cus: int,
-                  wclass: str = DECODE) -> float:
+                  wclass: str = DECODE, src_len: int = 0) -> float:
+        """Predicted seconds per unit of owed work for one tenant on a
+        ``cus``-CU sub-accelerator: per decode step for decode/ssm/encdec
+        tenants, per owed prompt token for encoder tenants.
+
+        src_len: enc-dec tenants' per-slot source length (frames read by
+        every cross-attention step); ignored for other classes.
+        """
         if cus <= 0:
             return float("inf")
-        # the key carries the workload class: an SSM/encoder tenant sharing
-        # a cfg.name with a transformer tenant must never read a stale
-        # decode-GEMM price (and full/reduced configs share a name: key on
-        # the priced dims too)
+        # the key carries the workload class: an SSM/encoder/encdec tenant
+        # sharing a cfg.name with a transformer tenant must never read a
+        # stale decode-GEMM price (and full/reduced configs share a name:
+        # key on the priced dims too — d_ff and the KV dims are priced, so
+        # they are in the key).  src_len prices the encdec cross-attention
+        # read, so it is part of the key.
         key = (wclass, cfg.name, cfg.num_layers, cfg.d_model,
-               max(batch, 1), cus)
+               cfg.d_ff, cfg.num_kv_heads, cfg.resolved_head_dim,
+               max(batch, 1), cus, src_len if wclass == ENCDEC else 0)
         if key not in self._cost_cache:
             accel = AccelConfig(
                 name=f"tpu-sub{cus}", num_cus=cus,
@@ -207,6 +222,27 @@ class AnalyticalPolicy:
                 cost = layers * (2 * _composed_total_s(lb_attn, cus)
                                  + 2 * _composed_total_s(lb_mlp, cus)) \
                     / ENC_COST_TILE
+            elif wclass == ENCDEC:
+                # enc-dec decode step: the decoder-side batched GEMVs — one
+                # extra (d x d) projection pair vs plain decode for the
+                # cross-attention block — plus the per-step cross-attention
+                # source-cache read: 2·kv_heads·head_dim·src_len K/V
+                # elements per layer per live slot, pure HBM bandwidth on
+                # the composed sub-accelerator (each CU owns its HBM slice,
+                # so the read scales down with the grant like every other
+                # bandwidth term)
+                b = max(batch, 1)
+                lb_attn = layer_latency(accel, self.platform, b, d, d)
+                lb_mlp = layer_latency(accel, self.platform,
+                                       b, d, cfg.d_ff or 4 * d)
+                src = max(src_len, 1)
+                kv_bytes = 4.0 * b * src * 2 * cfg.num_kv_heads \
+                    * cfg.resolved_head_dim
+                cross_read_s = kv_bytes / (max(cus, 1) * self.platform.hbm_bw)
+                cost = cfg.num_layers * (
+                    3 * _composed_total_s(lb_attn, cus)
+                    + 2 * _composed_total_s(lb_mlp, cus)
+                    + cross_read_s)
             else:
                 # dominant decode GEMMs per layer: attention out/in (d x d)
                 # and the MLP pair (d x d_ff), batched over live slots
@@ -226,13 +262,17 @@ class AnalyticalPolicy:
                current: Mapping[str, int],
                num_cus: int,
                classes: Optional[Mapping[str, str]] = None,
+               src_lens: Optional[Mapping[str, int]] = None,
                ) -> Tuple[Dict[str, int], str]:
         """Return (target sizes, reason).  Tenants with no load are parked
         (size 0); returning ``current`` means "leave the fabric alone".
         ``classes`` maps tenant -> workload class; omitted tenants derive
         from their config (encoder tenancy can't be derived, so mixed
-        fabrics pass it explicitly)."""
+        fabrics pass it explicitly).  ``src_lens`` maps enc-dec tenants to
+        their per-slot source length (prices the per-step cross-attention
+        read); omitted tenants price at the minimal source."""
         classes = dict(classes or {})
+        src_lens = dict(src_lens or {})
         for t in cfgs:
             classes.setdefault(t, workload_class_of(cfgs[t]))
         # arena pressure inflates demand: a hot arena means queued work the
@@ -246,7 +286,8 @@ class AnalyticalPolicy:
 
         def makespan(sizes: Mapping[str, int]) -> float:
             return max(demand[t] * self.step_cost(
-                cfgs[t], loads[t].active or 1, sizes.get(t, 0), classes[t])
+                cfgs[t], loads[t].active or 1, sizes.get(t, 0), classes[t],
+                src_len=src_lens.get(t, 0))
                 for t in busy)
 
         best_sizes, best_cost = None, float("inf")
@@ -331,9 +372,9 @@ class ComposedServer:
     recomposition between decode steps.
 
     Tenants are a *mixed fleet*: each runs the engine of its workload class
-    (transformer decode / SSM recurrent decode / encoder embedding — see
-    ``repro.workloads``), and the policy prices each class by its bound
-    resource.  All engines share one fabric-level AOT executable cache
+    (transformer decode / SSM recurrent decode / encoder embedding /
+    enc-dec encode→decode — see ``repro.workloads``), and the policy prices
+    each class by its bound resource.  All engines share one fabric-level AOT executable cache
     keyed by (config fingerprint, mesh fingerprint, shapes), so same-config
     tenants reuse each other's warm programs instead of compiling per
     engine.
@@ -390,6 +431,7 @@ class ComposedServer:
         self.exec_cache = ExecutableCache(capacity=128)
         self.cfgs: Dict[str, ModelConfig] = {}
         self.classes: Dict[str, str] = {}
+        self.src_lens: Dict[str, int] = {}
         self.engines: Dict[str, Engine] = {}
         for spec in tenants:
             cfg = (get_reduced(spec.arch) if spec.reduced
@@ -400,6 +442,10 @@ class ComposedServer:
                       else spec.workload)
             self.cfgs[spec.name] = cfg
             self.classes[spec.name] = wclass
+            if wclass == ENCDEC:
+                # prices the per-step cross-attention source-cache read
+                self.src_lens[spec.name] = (spec.serve.max_src_len
+                                            or spec.serve.max_len)
             self.engines[spec.name] = build_engine(
                 wclass, model, params, spec.serve,
                 mesh=self.subs[spec.name], rules=self.rules,
@@ -407,13 +453,17 @@ class ComposedServer:
 
     # ------------------------------------------------------------------
     def submit(self, tenant: str, tokens, max_new_tokens: int = 16) -> int:
+        """Route one request to ``tenant``'s engine; returns its rid."""
         return self.engines[tenant].submit(tokens, max_new_tokens)
 
     def sizes(self) -> Dict[str, int]:
+        """Current composition: tenant -> CUs held (0 = parked)."""
         return {t: len(self.subs[t].cu_ids) if t in self.subs else 0
                 for t in self.engines}
 
     def loads(self) -> Dict[str, TenantLoad]:
+        """Per-tenant load signals sampled from the engines (the policy's
+        ``decide`` inputs)."""
         return {t: TenantLoad(eng.pending_tokens(), eng.queue_depth,
                               eng.active_count, eng.arena_utilization())
                 for t, eng in self.engines.items()}
@@ -475,7 +525,7 @@ class ComposedServer:
 
         target, reason = self.policy.decide(
             self.loads(), self.cfgs, self.sizes(), self.composer.num_cus,
-            classes=self.classes)
+            classes=self.classes, src_lens=self.src_lens)
         target = {t: s for t, s in target.items() if s > 0}
         if target == self._normalized(self.sizes()):
             # idle decide interval: nothing committed — speculatively warm
@@ -585,6 +635,8 @@ class ComposedServer:
 
     # ------------------------------------------------------------------
     def pending(self) -> int:
+        """Total owed work units across tenants (decode steps / prompt
+        tokens by class)."""
         return sum(ld.pending_tokens for ld in self.loads().values())
 
     def drain(self, max_steps: int = 10_000) -> Dict[str, Dict[int, List[int]]]:
@@ -603,6 +655,8 @@ class ComposedServer:
         return self.results()
 
     def results(self) -> Dict[str, Dict[int, List[int]]]:
+        """Per-tenant ``snapshot()``: every request seen -> emitted units
+        (tokens, or embedding components for encoder tenants)."""
         return {t: eng.snapshot() for t, eng in self.engines.items()}
 
     def decode_step_ms(self) -> Dict[str, Dict[str, float]]:
@@ -618,6 +672,10 @@ class ComposedServer:
         return out
 
     def stats(self) -> Dict[str, object]:
+        """Fabric-wide telemetry: per-tenant emitted units and classes,
+        recomposition timings (seconds), per-tenant migrations and cold
+        builds, shared-cache hit counts, speculative prewarms, decode step
+        latency percentiles (ms) and the current device composition."""
         return {
             "steps": self._step_no,
             "workload_classes": dict(self.classes),

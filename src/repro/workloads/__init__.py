@@ -1,20 +1,27 @@
 """Workload-class subsystem: heterogeneous tenant engines for the composed
 serving fabric (transformer decode / SSM recurrent decode / encoder
-embedding), behind one :class:`Engine` protocol.  See ``base.py`` for the
-workload taxonomy and ``repro.serve.fabric`` for the fabric that mixes them.
+embedding / enc-dec encode→decode), behind one :class:`Engine` protocol.
+See ``base.py`` for the workload taxonomy, ``docs/workloads.md`` for the
+protocol contract, and ``repro.serve.fabric`` for the fabric that mixes
+them.
 """
-from repro.workloads.base import (DECODE, ENCODER, SSM, WORKLOAD_CLASSES,
-                                  Engine, build_engine, workload_class_of)
+from repro.workloads.base import (DECODE, ENCDEC, ENCODER, SSM,
+                                  WORKLOAD_CLASSES, Engine, build_engine,
+                                  length_buckets, pick_bucket,
+                                  workload_class_of)
 from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import DecodeEngine, Request, ServeConfig
+from repro.workloads.encdec import EncDecEngine
 from repro.workloads.encoder import EncodeJob, EncoderEngine
 from repro.workloads.ssm import SSMEngine
 
 __all__ = [
-    "DECODE", "ENCODER", "SSM", "WORKLOAD_CLASSES",
+    "DECODE", "ENCDEC", "ENCODER", "SSM", "WORKLOAD_CLASSES",
     "Engine", "build_engine", "workload_class_of",
+    "length_buckets", "pick_bucket",
     "DecodeEngine", "Request", "ServeConfig",
     "EncodeJob", "EncoderEngine",
+    "EncDecEngine",
     "ExecutableCache",
     "SSMEngine",
 ]

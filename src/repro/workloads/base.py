@@ -15,7 +15,12 @@ mixed fleet where each tenant's engine is chosen by workload class:
   (:class:`~repro.workloads.ssm.SSMEngine`);
 * ``encoder`` — prefill-only / embedding workloads: compute-bound
   full-sequence matmuls, no decode loop
-  (:class:`~repro.workloads.encoder.EncoderEngine`).
+  (:class:`~repro.workloads.encoder.EncoderEngine`);
+* ``encdec``  — full encode→decode jobs on encoder-decoder archs: one
+  compute-bound bidirectional encode of the source, then bandwidth-bound
+  autoregressive decode whose every step additionally reads a per-slot
+  cross-attention source cache scaled by the source length
+  (:class:`~repro.workloads.encdec.EncDecEngine`).
 
 The :class:`Engine` protocol is what the fabric and the recomposition policy
 program against; the concrete engines share no inheritance requirement with
@@ -23,7 +28,8 @@ it — any object with these methods can be a tenant.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Protocol, Tuple, runtime_checkable
+from typing import Any, Dict, List, Protocol, Sequence, Tuple, \
+    runtime_checkable
 
 from repro.configs.base import ModelConfig
 
@@ -31,20 +37,49 @@ from repro.configs.base import ModelConfig
 DECODE = "decode"
 SSM = "ssm"
 ENCODER = "encoder"
-WORKLOAD_CLASSES: Tuple[str, ...] = (DECODE, SSM, ENCODER)
+ENCDEC = "encdec"
+WORKLOAD_CLASSES: Tuple[str, ...] = (DECODE, SSM, ENCODER, ENCDEC)
 
 
 def workload_class_of(cfg: ModelConfig) -> str:
     """Default workload class for an architecture.
 
-    Attention-free SSM archs decode from recurrent state (``ssm``); anything
-    with a decode loop defaults to ``decode``.  ``encoder`` is never inferred:
-    any arch can serve embedding traffic, so it is an explicit tenant choice
-    (``TenantSpec(workload="encoder")``), not a property of the config.
+    Attention-free SSM archs decode from recurrent state (``ssm``);
+    encoder-decoder archs serve full encode→decode jobs (``encdec``);
+    anything else with a decode loop defaults to ``decode``.  ``encoder`` is
+    never inferred: any arch can serve embedding traffic, so it is an
+    explicit tenant choice (``TenantSpec(workload="encoder")``), not a
+    property of the config.
     """
     if cfg.ssm is not None and cfg.attention_free:
         return SSM
+    if cfg.is_encdec and cfg.cross_attention:
+        return ENCDEC
     return DECODE
+
+
+def length_buckets(buckets: Sequence[int], cap: int) -> Tuple[int, ...]:
+    """Normalized ascending ladder of padded-length program buckets.
+
+    ``buckets`` are the requested sequence-length breakpoints (e.g.
+    ``(128, 512)``); ``cap`` is the engine's hard capacity and is always the
+    final bucket.  Entries outside ``(0, cap)`` are dropped.  A job of
+    length L runs in the smallest bucket >= L, so short jobs skip the padded
+    FLOPs of the full-capacity program; an empty ``buckets`` means one
+    program at ``cap`` (the pre-bucketing behavior).
+    """
+    ladder = sorted({int(b) for b in buckets if 0 < int(b) < cap})
+    return tuple(ladder) + (cap,)
+
+
+def pick_bucket(ladder: Sequence[int], length: int) -> int:
+    """Smallest bucket in ``ladder`` that fits ``length`` (ladder is
+    ascending and its last entry is the capacity, so callers reject
+    oversized jobs before picking)."""
+    for b in ladder:
+        if length <= b:
+            return b
+    return ladder[-1]
 
 
 @runtime_checkable
@@ -126,10 +161,12 @@ def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,
     own copy.
     """
     from repro.workloads.decode import DecodeEngine
+    from repro.workloads.encdec import EncDecEngine
     from repro.workloads.encoder import EncoderEngine
     from repro.workloads.ssm import SSMEngine
 
-    classes = {DECODE: DecodeEngine, SSM: SSMEngine, ENCODER: EncoderEngine}
+    classes = {DECODE: DecodeEngine, SSM: SSMEngine, ENCODER: EncoderEngine,
+               ENCDEC: EncDecEngine}
     if wclass not in classes:
         raise KeyError(f"unknown workload class {wclass!r}; "
                        f"known: {WORKLOAD_CLASSES}")

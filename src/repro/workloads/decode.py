@@ -72,6 +72,9 @@ def _rules_fp(rules: Optional[part.ShardingRules]):
 
 @dataclasses.dataclass
 class Request:
+    """One submitted request's host-side lifecycle record (``tokens`` is
+    the prompt for decode/ssm engines, the source sequence for enc-dec)."""
+
     rid: int
     tokens: np.ndarray                  # prompt
     max_new_tokens: int
@@ -87,14 +90,26 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Per-tenant serving dimensions (they shape the compiled programs, so
+    they are part of every executable-cache key)."""
+
     max_slots: int = 4                 # concurrent decode slots
-    max_len: int = 128                 # per-slot cache capacity
+    max_len: int = 128                 # per-slot cache capacity (tokens)
     eos_id: int = 0
     greedy: bool = True
     prefill_bucket: int = 32           # prompts padded up to this length
     # overlap decode dispatch with host bookkeeping (applies when eos_id < 0,
     # i.e. termination is length-based and known at dispatch time)
     pipeline_decode: bool = True
+    # enc-dec tenants: per-slot cross-attention source-cache capacity in
+    # source frames (0 -> max_len); submit()'s tokens are the SOURCE sequence
+    max_src_len: int = 0
+    # decoder start token for enc-dec jobs (the decoder prompt is [bos])
+    bos_id: int = 1
+    # sequence-length program buckets for batched encode phases
+    # (EncoderEngine jobs / EncDecEngine sources): compile one program per
+    # bucket, run each job in the smallest fitting one.  () = capacity only.
+    len_buckets: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -107,6 +122,12 @@ class _Inflight:
 
 
 class DecodeEngine(EngineTelemetry):
+    """Batched transformer decode on a composed sub-accelerator (the
+    ``decode`` workload class) — continuous batching over a pooled slot
+    cache, FlexArena admission control, tensor parallelism per composition,
+    AOT-warmable executables and pipelined decode dispatch (see the module
+    docstring; the Engine-protocol contract is docs/workloads.md)."""
+
     workload_class = "decode"
 
     def __init__(self, model: Model, params: PyTree, cfg: ServeConfig,
@@ -137,12 +158,12 @@ class DecodeEngine(EngineTelemetry):
             raise ValueError(
                 "tensor-parallel serving needs annotated params: pass "
                 "model.init(...) without strip() when rules are given")
-        cache_ann = model.init_cache(cfg.max_slots, cfg.max_len)
+        cache_ann = self._init_cache_ann(cfg.max_slots)
         self._cache_plan = part.ShardingPlan.of(cache_ann)
         self.cache = part.strip(cache_ann)
         # one reusable single-slot prefill cache: prefill is functional, so
         # the prototype is never mutated — no init_cache(1, ...) per request
-        single_ann = model.init_cache(1, cfg.max_len)
+        single_ann = self._init_cache_ann(1)
         self._single_plan = part.ShardingPlan.of(single_ann)
         self._single = part.strip(single_ann)
         self._slot_axes = model.cache_slot_axes(self.cache)
@@ -171,9 +192,16 @@ class DecodeEngine(EngineTelemetry):
         self.reshard_count = 0         # construction placement isn't a move
 
     # ------------------------------------------------------------------
-    # admission-accounting hooks (overridden by the SSM engine, whose
-    # per-slot state is constant-size rather than length-proportional)
+    # admission-accounting / cache-shape hooks (overridden by the SSM
+    # engine, whose per-slot state is constant-size rather than
+    # length-proportional, and by the enc-dec engine, which adds the
+    # per-slot cross-attention source cache)
     # ------------------------------------------------------------------
+    def _init_cache_ann(self, batch: int):
+        """Annotated decode-cache pytree for ``batch`` slots (pooled cache
+        and the reusable single-slot prefill cache are both built here)."""
+        return self.model.init_cache(batch, self.cfg.max_len)
+
     def _per_token_cache_elems(self) -> int:
         """Per-layer per-token KV elements (admission accounting)."""
         mc = self.model.cfg
@@ -328,14 +356,17 @@ class DecodeEngine(EngineTelemetry):
     # load metrics consumed by the recomposition policy
     @property
     def queue_depth(self) -> int:
+        """Requests awaiting admission (count)."""
         return len(self._queue)
 
     @property
     def active_count(self) -> int:
+        """Live decode slots (count)."""
         return len(self._active)
 
     @property
     def has_work(self) -> bool:
+        """True while the queue, slots or an in-flight dispatch hold work."""
         return bool(self._queue or self._active or self._inflight)
 
     def pending_tokens(self) -> int:
@@ -348,9 +379,13 @@ class DecodeEngine(EngineTelemetry):
         return max(owed, 0)
 
     def arena_utilization(self) -> float:
+        """KV-arena pressure, 0..1 (admission-accounting fill fraction)."""
         return self.arena.utilization()
 
     def stats(self) -> Dict[str, Any]:
+        """Load/telemetry snapshot: queue depth (requests), live slots,
+        owed decode steps, arena pressure (0..1), migrations performed and
+        cold executable builds."""
         return {
             "workload_class": self.workload_class,
             "queue_depth": self.queue_depth,
@@ -363,6 +398,8 @@ class DecodeEngine(EngineTelemetry):
 
     # ------------------------------------------------------------------
     def submit(self, tokens, max_new_tokens: int = 16) -> int:
+        """Queue one request; returns its rid.  Requests never vanish:
+        ones that could never fit a slot are rejected-but-recorded."""
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid, np.asarray(tokens, np.int32),
@@ -371,6 +408,9 @@ class DecodeEngine(EngineTelemetry):
 
     # ------------------------------------------------------------------
     def _admit(self) -> None:
+        """Move queued requests into free slots while the arena admits them
+        (FILCO Fig. 5(b) fit check), then prefill the batch just admitted."""
+        admitted: List[Request] = []
         while self._queue and self._free_slots:
             req = self._queue[0]
             if self._oversized(req):
@@ -390,6 +430,14 @@ class DecodeEngine(EngineTelemetry):
             req.view = view
             req.slot = self._free_slots.pop(0)
             self._active[req.slot] = req
+            admitted.append(req)
+        if admitted:
+            self._prefill_admitted(admitted)
+
+    def _prefill_admitted(self, reqs: List[Request]) -> None:
+        """Prefill the requests just admitted (hook: the enc-dec engine
+        overrides this to share one batched source encode across them)."""
+        for req in reqs:
             self._prefill_into_slot(req)
 
     def _bucketed(self, length: int) -> int:
@@ -512,6 +560,7 @@ class DecodeEngine(EngineTelemetry):
         self._evict_finished()
 
     def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        """Step until idle (or ``max_steps``); returns ``snapshot()``."""
         for _ in range(max_steps):
             if not self.has_work:
                 break

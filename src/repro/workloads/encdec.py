@@ -1,0 +1,244 @@
+"""Enc-dec serving engine: full encode→decode jobs through the composed
+fabric — the fourth workload class, completing FILCO's "diverse workloads on
+one fabric" story (paper §1; Herald's scheduling win comes from covering
+*every* class in the mix).
+
+An enc-dec job (e.g. seamless-m4t speech-to-text) is two phases with
+opposite bound resources:
+
+* **encode** — one compute-bound bidirectional pass over the source frames
+  (:meth:`Model.encode`'s encoder stack).  The engine batches the encodes of
+  every request admitted in the same step and compiles the batched program
+  **per source-length bucket** (``ServeConfig.len_buckets``), so short
+  sources skip the padded FLOPs of the full-capacity program;
+* **decode** — pooled-slot autoregressive decode on the shared
+  continuous-batching substrate of :class:`DecodeEngine` (slots, pipelined
+  dispatch, AOT executables, ``ShardingPlan`` TP, live ``reshard_to``),
+  where each step additionally reads the slot's **cross-attention source
+  cache**: per-layer (max_slots, max_src_len, kv_heads, head_dim) K/V
+  computed from the encoder output once at admission and masked per row by
+  the slot's true source length (``cache["src_len"]``, an int32 vector the
+  model side threads through ``init_cache``/``decode_step``).
+
+Admission accounting covers *both* caches: a request holds
+``src_len + 1 + max_new_tokens`` arena rows (source frames + BOS + decode
+budget — cross K/V and decoder KV have the same per-row footprint of
+``2·kv_heads·head_dim`` elements per layer), so the FlexArena fit check
+backpressures on source-cache pressure exactly like it does on KV pressure.
+
+The job contract: ``submit(tokens)`` takes the SOURCE sequence (embedded as
+stand-in frames — the audio frontend is a STUB per the assignment); the
+decoder starts from ``ServeConfig.bos_id`` and emits ``max_new_tokens``
+target tokens through the inherited ``step()``/``results()`` stream API.
+
+Determinism note: sources are right-padded to their bucket and the
+bidirectional encoder attends its own row's padding, so encoder outputs
+depend (numerically, deterministically) on the bucket — a job of length L
+always lands in the same bucket, so streams are reproducible and invariant
+across recompositions (pinned in tests/test_workloads.py).  Cross-attention
+itself never reads padded positions: prefill and decode both mask at the
+true source length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.composer import mesh_fingerprint
+from repro.distribution import partitioning as part
+from repro.models.model import Model
+from repro.workloads.base import length_buckets, pick_bucket
+from repro.workloads.compile_cache import ExecutableCache
+from repro.workloads.decode import (DecodeEngine, Request, ServeConfig,
+                                    _mesh_of, _write_slot)
+
+
+class EncDecEngine(DecodeEngine):
+    """Full encode→decode serving on enc-dec archs (the ``encdec`` workload
+    class): batched bucketed source encode at admission, per-slot
+    cross-attention source cache, inherited pooled-slot decode (see the
+    module docstring; the Engine-protocol contract is docs/workloads.md)."""
+
+    workload_class = "encdec"
+
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 mesh=None, rules: Optional[part.ShardingRules] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
+        mc = model.cfg
+        if not (mc.is_encdec and mc.cross_attention):
+            raise ValueError(
+                f"EncDecEngine serves encoder-decoder archs with "
+                f"cross-attention; {mc.name!r} is family={mc.family!r} "
+                "(use DecodeEngine/SSMEngine for decoder-only archs, or "
+                "EncoderEngine for embedding-only traffic)")
+        # source-cache capacity and encode-program buckets must exist before
+        # super().__init__ builds the pooled/single caches through the
+        # _init_cache_ann hook
+        self._max_src = cfg.max_src_len or cfg.max_len
+        self._src_buckets = length_buckets(cfg.len_buckets, self._max_src)
+        self._bucket_hits: Dict[int, int] = {b: 0 for b in self._src_buckets}
+        super().__init__(model, params, cfg, mesh=mesh, rules=rules,
+                         exec_cache=exec_cache)
+        # the serve dims that shape enc-dec programs extend the shared-cache
+        # config fingerprint: two tenants differing only in source capacity
+        # or bucket ladder must not share compiled executables
+        self._cfg_key = self._cfg_key + (self._max_src, self._src_buckets)
+        # the decoder prompt is always [bos]: the token-bucketed prefill
+        # programs of the base engine never dispatch, so warm_compile must
+        # not burn time building them per candidate composition
+        self._prefill_lens = set()
+
+    # ------------------------------------------------------------------
+    # cache shapes / admission accounting (hooks from DecodeEngine)
+    # ------------------------------------------------------------------
+    def _init_cache_ann(self, batch: int):
+        """Decoder KV pool plus per-slot cross-attention source cache
+        (per-layer (batch, max_src, kv_heads, head_dim) K/V and the (batch,)
+        int32 ``src_len`` mask bounds)."""
+        return self.model.init_cache(batch, self.cfg.max_len,
+                                     src_len=self._max_src)
+
+    def _arena_capacity(self) -> int:
+        """Arena elements mirroring the device pools: per slot, ``max_len``
+        decoder-KV rows plus ``max_src`` source-cache rows (cross K/V and
+        decoder KV share the 2·kv_heads·head_dim per-layer row footprint)."""
+        return (self.cfg.max_slots * (self.cfg.max_len + self._max_src)
+                * self._per_token_elems)
+
+    def _slot_rows(self, req: Request) -> int:
+        """Arena rows a job occupies: its source frames (cross-cache side)
+        plus BOS + generation budget (decoder-KV side)."""
+        return len(req.tokens) + 1 + req.max_new_tokens
+
+    def _oversized(self, req: Request) -> bool:
+        """Hard reject: source longer than the cross cache, or a generation
+        budget (plus BOS) overflowing a decoder slot."""
+        return (len(req.tokens) > self._max_src
+                or 1 + req.max_new_tokens > self.cfg.max_len)
+
+    # ------------------------------------------------------------------
+    # compiled executables: batched bucketed encode + per-slot prefill
+    # (decode is inherited — the pooled cache carries the cross state)
+    # ------------------------------------------------------------------
+    def _encode_fn(self, params, tokens):
+        """(E, S_b) right-padded source tokens -> (E, S_b, d) encoder hidden
+        states (bidirectional stack; token embeddings stand in for the
+        stubbed audio frontend's precomputed frames)."""
+        return self.model.encode(params, {"tokens": tokens})
+
+    def _build_encode(self, mesh, sb: int):
+        E = self.cfg.max_slots
+        kwargs = {}
+        if mesh is not None:
+            kwargs["out_shardings"] = NamedSharding(mesh, P())
+        fn = jax.jit(self._encode_fn, **kwargs)
+        return fn.lower(
+            self._param_plan.avals(mesh, self._rules_eff),
+            self._vec_aval(mesh, jnp.int32, (E, sb)),
+        ).compile()
+
+    def _encdec_prefill_fn(self, params, pool_cache, single, enc, idx,
+                           src_len, slot):
+        """Write one encoded job into its slot: row ``idx`` of the batched
+        encoder output becomes the slot's cross K/V (masked at ``src_len``),
+        and a BOS-only decoder prefill seeds the slot's KV + first token."""
+        enc_row = jax.lax.dynamic_slice_in_dim(enc, idx, 1, axis=0)
+        toks = jnp.full((1, 1), self.cfg.bos_id, jnp.int32)
+        logits, filled = self.model.prefill(
+            params, {"tokens": toks}, single, enc_out=enc_row,
+            src_len=src_len)
+        pool = _write_slot(pool_cache, filled, slot, self._slot_axes)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return first, pool
+
+    def _build_prefill_encdec(self, mesh, sb: int):
+        E = self.cfg.max_slots
+        rules = self._rules_eff
+        kwargs = {}
+        if mesh is not None:
+            kwargs["out_shardings"] = (
+                NamedSharding(mesh, P()),
+                self._cache_plan.shardings(mesh, rules))
+        fn = jax.jit(self._encdec_prefill_fn, donate_argnums=(1,), **kwargs)
+        act = self.model.cfg.activation_dtype
+        return fn.lower(
+            self._param_plan.avals(mesh, rules),
+            self._cache_plan.avals(mesh, rules),
+            self._single_plan.avals(mesh, rules),
+            self._vec_aval(mesh, act, (E, sb, self.model.cfg.d_model)),
+            self._vec_aval(mesh, jnp.int32, ()),
+            self._vec_aval(mesh, jnp.int32, ()),
+            self._vec_aval(mesh, jnp.int32, ()),
+        ).compile()
+
+    def _encode_exec(self, mesh, sb: int):
+        key = ("encdec_encode", self._cfg_key, self._mesh_fp, sb)
+        return self._exec.get_or_build(
+            key, self._counted(lambda: self._build_encode(mesh, sb)))
+
+    def _prefill_exec_encdec(self, mesh, sb: int):
+        key = ("encdec_prefill", self._cfg_key, self._mesh_fp, sb)
+        return self._exec.get_or_build(
+            key, self._counted(lambda: self._build_prefill_encdec(mesh, sb)))
+
+    def warm_compile(self, sub) -> int:
+        """Pre-compile decode plus every bucket's encode and prefill
+        programs for a candidate sub-accelerator (no state moves).  The
+        bucket ladder is static, so this fully covers the composition.
+        Returns the number of cold builds performed."""
+        mesh = _mesh_of(sub)
+        fp = mesh_fingerprint(mesh)
+        built = self._exec.ensure(
+            ("decode", self._cfg_key, fp),
+            self._counted(lambda: self._build_decode(mesh)))
+        for sb in self._src_buckets:
+            built += self._exec.ensure(
+                ("encdec_encode", self._cfg_key, fp, sb),
+                self._counted(lambda sb=sb: self._build_encode(mesh, sb)))
+            built += self._exec.ensure(
+                ("encdec_prefill", self._cfg_key, fp, sb),
+                self._counted(
+                    lambda sb=sb: self._build_prefill_encdec(mesh, sb)))
+        return built
+
+    # ------------------------------------------------------------------
+    # admission: one batched encode per bucket group, then per-slot writes
+    # ------------------------------------------------------------------
+    def _prefill_admitted(self, reqs: List[Request]) -> None:
+        by_bucket: Dict[int, List[Request]] = {}
+        for req in reqs:
+            by_bucket.setdefault(
+                pick_bucket(self._src_buckets, len(req.tokens)),
+                []).append(req)
+        E = self.cfg.max_slots
+        for sb in sorted(by_bucket):
+            group = by_bucket[sb]
+            for at in range(0, len(group), E):
+                chunk = group[at:at + E]
+                toks = np.zeros((E, sb), np.int32)
+                for i, req in enumerate(chunk):
+                    toks[i, :len(req.tokens)] = req.tokens
+                enc = self._encode_exec(self.mesh, sb)(self.params, toks)
+                exe = self._prefill_exec_encdec(self.mesh, sb)
+                for i, req in enumerate(chunk):
+                    self._bucket_hits[sb] += 1
+                    first_dev, self.cache = exe(
+                        self.params, self.cache, self._single, enc,
+                        np.int32(i), np.int32(len(req.tokens)),
+                        np.int32(req.slot))
+                    first = int(jax.device_get(first_dev))
+                    req.out_tokens.append(first)
+                    req.scheduled = 1
+                    self._inject[req.slot] = first
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Base decode-engine stats plus per-bucket encode-program hit
+        counts (jobs served per source-length bucket)."""
+        out = super().stats()
+        out["bucket_hits"] = {str(b): n for b, n in self._bucket_hits.items()}
+        return out

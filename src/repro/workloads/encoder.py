@@ -13,10 +13,16 @@ Design (throughput-oriented):
 * jobs queue on the host; each ``step()`` runs ONE batched encoder forward
   over up to ``max_slots`` jobs and completes them — there is no in-flight
   device state between steps, so ``reshard_to`` only moves params;
-* the batch is a fixed compiled shape ``(max_slots, max_len)`` — one AOT
-  program per composed mesh, so ``warm_compile`` fully covers a candidate
-  composition and a job's embedding never depends on what it was co-batched
-  with (padding is per-row; attention mixes positions, never batch rows);
+* the batch compiles at ``(max_slots, bucket)`` for each sequence-length
+  bucket of ``ServeConfig.len_buckets`` (always including ``max_len``); a
+  step groups its jobs by each job's OWN smallest fitting bucket and runs
+  one batched forward per group, cutting the padded FLOPs of short
+  embedding jobs.  The bucket ladder is static, so ``warm_compile`` still
+  fully covers a candidate composition, and a job's embedding never
+  depends on what it was co-batched with: the bucket — hence the row
+  padding a bidirectional stack sees — is a function of the job's length
+  alone, and attention mixes positions, never batch rows.  ``stats()``
+  reports per-bucket hit counts (jobs served per bucket);
 * each job's output is the masked mean over its valid positions of
   :meth:`Model.encode` hidden states, in fp32 — a (d_model,) embedding.
   Causal stacks are padding-proof by construction; bidirectional encoder
@@ -38,13 +44,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.composer import mesh_fingerprint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
-from repro.workloads.base import EngineTelemetry
+from repro.workloads.base import EngineTelemetry, length_buckets, pick_bucket
 from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import ServeConfig, _mesh_of, _rules_fp
 
 
 @dataclasses.dataclass
 class EncodeJob:
+    """One embedding job's host-side record (``embedding`` is the fp32
+    mean-pooled (d_model,) vector once done; ``[]`` marks a reject)."""
+
     rid: int
     tokens: np.ndarray
     embedding: Optional[List[float]] = None
@@ -52,6 +61,12 @@ class EncodeJob:
 
 
 class EncoderEngine(EngineTelemetry):
+    """Prefill-only embedding serving (the ``encoder`` workload class):
+    each step batches queued jobs through one bucketed compiled
+    ``Model.encode`` forward and completes them — no decode loop, no
+    in-flight device state (see the module docstring; the Engine-protocol
+    contract is docs/workloads.md)."""
+
     workload_class = "encoder"
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
@@ -70,8 +85,11 @@ class EncoderEngine(EngineTelemetry):
                 "model.init(...) without strip() when rules are given")
         self._exec = exec_cache if exec_cache is not None else ExecutableCache()
         self._own_builds = 0
+        self._buckets = length_buckets(cfg.len_buckets, cfg.max_len)
+        self._bucket_hits: Dict[int, int] = {b: 0 for b in self._buckets}
         self._cfg_key = (self.workload_class, model.cfg,
-                         cfg.max_slots, cfg.max_len, _rules_fp(rules))
+                         cfg.max_slots, cfg.max_len, self._buckets,
+                         _rules_fp(rules))
         self._queue: List[EncodeJob] = []
         self._finished: Dict[int, List[float]] = {}
         self.finished_cap = 10_000
@@ -111,8 +129,8 @@ class EncoderEngine(EngineTelemetry):
         pooled = jnp.einsum("bsd,bs->bd", x.astype(jnp.float32), mask)
         return pooled / jnp.maximum(lens, 1).astype(jnp.float32)[:, None]
 
-    def _build_encode(self, mesh):
-        B, S = self.cfg.max_slots, self.cfg.max_len
+    def _build_encode(self, mesh, sb: int):
+        B, S = self.cfg.max_slots, sb
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = NamedSharding(mesh, P())
@@ -130,19 +148,21 @@ class EncoderEngine(EngineTelemetry):
             aval(jnp.int32, (B,)),
         ).compile()
 
-    def _encode_exec(self, mesh):
-        key = ("encode", self._cfg_key, self._mesh_fp)
+    def _encode_exec(self, mesh, sb: int):
+        key = ("encode", self._cfg_key, self._mesh_fp, sb)
         return self._exec.get_or_build(
-            key, self._counted(lambda: self._build_encode(mesh)))
+            key, self._counted(lambda: self._build_encode(mesh, sb)))
 
     def warm_compile(self, sub) -> int:
-        """Pre-compile the batched encode program for a candidate
-        sub-accelerator.  The fixed (max_slots, max_len) batch shape means
-        one program fully covers the composition."""
+        """Pre-compile the batched encode program of every sequence-length
+        bucket for a candidate sub-accelerator.  The ladder is static, so
+        this fully covers the composition.  Returns cold builds performed."""
         mesh = _mesh_of(sub)
-        return self._exec.ensure(
-            ("encode", self._cfg_key, mesh_fingerprint(mesh)),
-            self._counted(lambda: self._build_encode(mesh)))
+        fp = mesh_fingerprint(mesh)
+        return sum(self._exec.ensure(
+            ("encode", self._cfg_key, fp, sb),
+            self._counted(lambda sb=sb: self._build_encode(mesh, sb)))
+            for sb in self._buckets)
 
     # ------------------------------------------------------------------
     # load signals
@@ -170,6 +190,9 @@ class EncoderEngine(EngineTelemetry):
         return min(1.0, len(self._queue) / max(self.cfg.max_slots, 1))
 
     def stats(self) -> Dict[str, Any]:
+        """Load/telemetry snapshot: queue depth (jobs), owed prompt tokens,
+        batch-fill pressure (0..1), migrations, cold builds, completed
+        sequences, and jobs served per sequence-length bucket."""
         return {
             "workload_class": self.workload_class,
             "queue_depth": self.queue_depth,
@@ -179,6 +202,7 @@ class EncoderEngine(EngineTelemetry):
             "reshard_count": self.reshard_count,
             "compile_builds": self.compile_builds,
             "seqs_done": self._seqs_done,
+            "bucket_hits": {str(b): n for b, n in self._bucket_hits.items()},
         }
 
     # ------------------------------------------------------------------
@@ -210,19 +234,30 @@ class EncoderEngine(EngineTelemetry):
             batch.append(job)
         if not batch:
             return emitted
-        B, S = self.cfg.max_slots, self.cfg.max_len
-        toks = np.zeros((B, S), np.int32)
-        lens = np.zeros((B,), np.int32)
-        for i, job in enumerate(batch):
-            toks[i, :len(job.tokens)] = job.tokens
-            lens[i] = len(job.tokens)
-        exe = self._encode_exec(self.mesh)
-        emb = np.asarray(jax.device_get(exe(self.params, toks, lens)))
-        for i, job in enumerate(batch):
-            job.embedding = [float(v) for v in emb[i]]
-            job.done = True
-            self._record_finished(job)
-            emitted.append((job.rid, job.embedding))
+        # group by each job's OWN smallest fitting bucket (NOT the batch
+        # max): a bidirectional stack attends its row's padding, so the
+        # bucket must be a function of the job alone or its embedding would
+        # depend on what it was co-batched with
+        groups: Dict[int, List[EncodeJob]] = {}
+        for job in batch:
+            groups.setdefault(pick_bucket(self._buckets, len(job.tokens)),
+                              []).append(job)
+        B = self.cfg.max_slots
+        for sb in sorted(groups):
+            jobs = groups[sb]
+            self._bucket_hits[sb] += len(jobs)
+            toks = np.zeros((B, sb), np.int32)
+            lens = np.zeros((B,), np.int32)
+            for i, job in enumerate(jobs):
+                toks[i, :len(job.tokens)] = job.tokens
+                lens[i] = len(job.tokens)
+            exe = self._encode_exec(self.mesh, sb)
+            emb = np.asarray(jax.device_get(exe(self.params, toks, lens)))
+            for i, job in enumerate(jobs):
+                job.embedding = [float(v) for v in emb[i]]
+                job.done = True
+                self._record_finished(job)
+                emitted.append((job.rid, job.embedding))
         self._seqs_done += len(batch)
         return emitted
 
@@ -233,6 +268,7 @@ class EncoderEngine(EngineTelemetry):
         self._evict_finished()
 
     def run_to_completion(self, max_steps: int = 1000) -> Dict[int, List[float]]:
+        """Step until idle (or ``max_steps``); returns ``snapshot()``."""
         for _ in range(max_steps):
             if not self.has_work:
                 break

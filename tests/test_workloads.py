@@ -1,7 +1,9 @@
 """Heterogeneous workload subsystem: SSM serving numerics (chunked-scan
 prefill == step-by-step decode state; streams invariant across TP degree and
-live recomposition), encoder embedding invariance, class-aware policy
-costing, and the mixed-fleet end-to-end acceptance (one fabric, three
+live recomposition), encoder embedding invariance, enc-dec decode through
+the fabric (cross-attention source-cache correctness vs a monolithic Model
+forward; streams invariant across live recomposition), class-aware policy
+costing, and the mixed-fleet end-to-end acceptance (one fabric, four
 workload classes, outputs bit-identical across a live move between classes).
 
 Device-touching scenarios run in an 8-host-device subprocess (device count
@@ -16,18 +18,25 @@ import numpy as np
 import pytest
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.models import build_model, ssm as S
 from repro.distribution import strip
 from repro.serve.fabric import AnalyticalPolicy, TenantLoad
-from repro.workloads import (DECODE, ENCODER, SSM, DecodeEngine,
-                             EncoderEngine, Engine, ExecutableCache,
-                             SSMEngine, ServeConfig, workload_class_of)
+from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, DecodeEngine,
+                             EncDecEngine, EncoderEngine, Engine,
+                             ExecutableCache, SSMEngine, ServeConfig,
+                             length_buckets, pick_bucket, workload_class_of)
 
 
 def _fm_cfg():
     return dataclasses.replace(get_reduced("falcon-mamba-7b"),
+                               dtype="float32")
+
+
+def _s2t_cfg():
+    return dataclasses.replace(get_reduced("seamless-m4t-medium"),
                                dtype="float32")
 
 
@@ -121,6 +130,18 @@ def test_workload_class_derivation():
     assert workload_class_of(_fm_cfg()) == SSM
     assert workload_class_of(get_reduced("qwen2.5-32b")) == DECODE
     assert workload_class_of(get_reduced("hymba-1.5b")) == DECODE  # hybrid: KV
+    assert workload_class_of(_s2t_cfg()) == ENCDEC  # enc-dec: full jobs
+
+
+def test_length_bucket_ladder():
+    assert length_buckets((), 128) == (128,)
+    assert length_buckets((512, 128, 999), 512) == (128, 512)
+    ladder = length_buckets((8, 16), 32)
+    assert ladder == (8, 16, 32)
+    assert pick_bucket(ladder, 5) == 8
+    assert pick_bucket(ladder, 8) == 8
+    assert pick_bucket(ladder, 9) == 16
+    assert pick_bucket(ladder, 30) == 32
 
 
 def test_engines_satisfy_protocol(mamba):
@@ -128,6 +149,99 @@ def test_engines_satisfy_protocol(mamba):
     eng = SSMEngine(model, params, ServeConfig(max_slots=1, eos_id=-1))
     enc = EncoderEngine(model, params, ServeConfig(max_slots=1, max_len=16))
     assert isinstance(eng, Engine) and isinstance(enc, Engine)
+
+
+# ---------------------------------------------------------------------------
+# enc-dec decode through the fabric: cross-attention source cache
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def seamless():
+    cfg = _s2t_cfg()
+    model = build_model(cfg)
+    params = strip(model.init(jax.random.key(0)))
+    return cfg, model, params
+
+
+def test_encdec_engine_satisfies_protocol(seamless):
+    cfg, model, params = seamless
+    eng = EncDecEngine(model, params,
+                       ServeConfig(max_slots=1, max_len=16, eos_id=-1,
+                                   max_src_len=8))
+    assert isinstance(eng, Engine)
+    assert eng.workload_class == ENCDEC
+
+
+def test_encdec_rejects_decoder_only_archs():
+    qcfg = get_reduced("qwen2.5-32b")
+    qmodel = build_model(qcfg)
+    qparams = strip(qmodel.init(jax.random.key(0)))
+    with pytest.raises(ValueError):
+        EncDecEngine(qmodel, qparams, ServeConfig())
+
+
+def test_encdec_stream_matches_monolithic_forward(seamless):
+    """Cross-attention cache correctness: the engine's pooled-slot decode —
+    bucketed batched encode, per-slot cross K/V write, masked per-row
+    src_len — must emit the exact token stream of a monolithic Model
+    prefill + decode_step loop over the same (bucket-padded) inputs."""
+    cfg, model, params = seamless
+    sc = ServeConfig(max_slots=1, max_len=16, eos_id=-1, max_src_len=12,
+                     len_buckets=(8,))
+    eng = EncDecEngine(model, params, sc)
+    rng = np.random.default_rng(0)
+    srcs = [rng.integers(1, cfg.vocab_size, size=L) for L in (5, 7, 11)]
+    rids = [eng.submit(s, max_new_tokens=6) for s in srcs]
+    out = eng.run_to_completion(200)
+    # two sources share the 8-bucket, the 11-frame one runs at capacity
+    assert eng.stats()["bucket_hits"] == {"8": 2, "12": 1}
+
+    for s, rid in zip(srcs, rids):
+        sb = pick_bucket(eng._src_buckets, len(s))
+        toks = np.zeros((1, sb), np.int32)
+        toks[0, :len(s)] = s
+        enc = model.encode(params, {"tokens": jnp.asarray(toks)})
+        cache = strip(model.init_cache(1, sc.max_len, src_len=sb))
+        logits, cache = model.prefill(
+            params, {"tokens": jnp.full((1, 1), sc.bos_id, jnp.int32)},
+            cache, enc_out=enc, src_len=len(s))
+        stream = [int(jnp.argmax(logits[0]))]
+        for _ in range(5):
+            logits, cache = model.decode_step(
+                params, cache, jnp.asarray([[stream[-1]]], jnp.int32))
+            stream.append(int(jnp.argmax(logits[0])))
+        assert out[rid] == stream, \
+            f"engine decode diverged from monolithic forward for rid {rid}"
+
+
+def test_encdec_admission_backpressure_on_source_cache(seamless):
+    """Admission is arena-bound across BOTH caches: when live source caches
+    + decode budgets exhaust the arena, later jobs stay queued (never lost)
+    and admit as slots free.  The arena is shrunk to one job's footprint so
+    the source-cache rows are what blocks the second admission."""
+    from repro.core.arena import FlexArena
+    cfg, model, params = seamless
+    sc = ServeConfig(max_slots=2, max_len=16, eos_id=-1, max_src_len=8)
+    eng = EncDecEngine(model, params, sc)
+    src, new = 8, 7
+    rows = src + 1 + new                       # source + BOS + budget
+    eng.arena = FlexArena(rows * eng._per_token_elems)
+    rng = np.random.default_rng(0)
+    r1 = eng.submit(rng.integers(1, cfg.vocab_size, size=src),
+                    max_new_tokens=new)
+    r2 = eng.submit(rng.integers(1, cfg.vocab_size, size=src),
+                    max_new_tokens=new)
+    eng.step()
+    assert eng.active_count == 1 and eng.queue_depth == 1, \
+        "second job should backpressure on the exhausted arena"
+    out = eng.run_to_completion(200)
+    assert len(out[r1]) == new and len(out[r2]) == new
+
+    # oversized sources are rejected-but-recorded, like every other class
+    r3 = eng.submit(rng.integers(1, cfg.vocab_size, size=9),  # > max_src_len
+                    max_new_tokens=2)
+    out = eng.run_to_completion(50)
+    assert out[r3] == []
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +279,57 @@ def test_same_config_engines_share_executables(mamba):
     assert d.compile_builds > 0
 
 
+def test_encoder_bucketed_programs_match_full_capacity(mamba):
+    """Bucketed sequence-length encode: every job runs in its OWN smallest
+    fitting program (recorded in stats) and — causal stacks being
+    padding-proof — emits exactly the embeddings of the full-capacity
+    program."""
+    cfg, model, params = mamba
+    jobs = [np.arange(1, 1 + L) % cfg.vocab_size for L in (4, 6, 20, 3)]
+
+    def run(buckets):
+        eng = EncoderEngine(model, params,
+                            ServeConfig(max_slots=2, max_len=32,
+                                        len_buckets=buckets))
+        for j in jobs:
+            eng.submit(j)
+        while eng.has_work:
+            eng.step()
+        return eng
+
+    full = run(())
+    bucketed = run((8, 16))
+    assert full.stats()["bucket_hits"] == {"32": 4}
+    # step 1 batches lens (4, 6) -> both 8-bucket; step 2 batches (20, 3)
+    # -> split per job into the capacity program and the 8-bucket one
+    assert bucketed.stats()["bucket_hits"] == {"8": 3, "16": 0, "32": 1}
+    assert bucketed.results() == full.results(), \
+        "bucketed encode changed a causal stack's embeddings"
+
+
+def test_encoder_bucket_is_per_job_not_per_batch(seamless):
+    """A job's bucket — hence the row padding a BIDIRECTIONAL stack sees —
+    must be a function of the job alone: co-batching a short job with a
+    long one must not change its embedding (arrival timing would otherwise
+    alter results)."""
+    cfg, model, params = seamless
+    sc = ServeConfig(max_slots=2, max_len=32, len_buckets=(8,))
+    short = np.arange(1, 5) % cfg.vocab_size
+    long = np.arange(1, 21) % cfg.vocab_size
+
+    alone = EncoderEngine(model, params, sc)
+    r_alone = alone.submit(short)
+    alone.run_to_completion(10)
+
+    both = EncoderEngine(model, params, sc)
+    r_both = both.submit(short)
+    both.submit(long)                       # co-batched in the same step
+    both.run_to_completion(10)
+
+    assert both.results()[r_both] == alone.results()[r_alone], \
+        "co-batching changed a bidirectional job's embedding"
+
+
 def test_encoder_rejections_not_counted_as_throughput(mamba):
     """Oversized embedding jobs are rejected-but-recorded, and — like the
     decode engine's rejects — never emitted: emitted entries feed the
@@ -187,14 +352,15 @@ def test_encoder_rejections_not_counted_as_throughput(mamba):
 # ---------------------------------------------------------------------------
 
 def test_step_cost_cache_key_includes_workload_class():
-    """Satellite regression: an SSM/encoder tenant sharing a cfg.name with a
-    transformer tenant must not read a stale decode-GEMM price."""
+    """Satellite regression: an SSM/encoder/encdec tenant sharing a cfg.name
+    with a transformer tenant must not read a stale decode-GEMM price."""
     pol = AnalyticalPolicy()
     cfg = _fm_cfg()
     dec = pol.step_cost(cfg, 2, 4)                   # caches under DECODE
     ssm = pol.step_cost(cfg, 2, 4, SSM)
     enc = pol.step_cost(cfg, 2, 4, ENCODER)
-    assert dec != ssm and dec != enc and ssm != enc
+    ed = pol.step_cost(cfg, 2, 4, ENCDEC, src_len=64)
+    assert len({dec, ssm, enc, ed}) == 4
     # and the decode price is unchanged by the later class-keyed entries
     assert pol.step_cost(cfg, 2, 4) == dec
 
@@ -203,8 +369,28 @@ def test_step_cost_scales_down_with_cus_per_class():
     pol = AnalyticalPolicy()
     cfg = _fm_cfg()
     qcfg = get_reduced("qwen2.5-32b")
-    for c, wc in ((cfg, SSM), (qcfg, ENCODER), (qcfg, DECODE)):
+    scfg = _s2t_cfg()
+    for c, wc in ((cfg, SSM), (qcfg, ENCODER), (qcfg, DECODE),
+                  (scfg, ENCDEC)):
         assert pol.step_cost(c, 2, 4, wc) < pol.step_cost(c, 2, 1, wc)
+
+
+def test_step_cost_encdec_prices_cross_attention_by_src_len():
+    """The encdec step price (seconds per decode step) must grow with the
+    source length — each step reads the whole per-slot cross-attention
+    source cache — and the price must be keyed by src_len so two enc-dec
+    tenants with different source capacities never share a stale entry."""
+    pol = AnalyticalPolicy()
+    cfg = _s2t_cfg()
+    short = pol.step_cost(cfg, 2, 2, ENCDEC, src_len=64)
+    long = pol.step_cost(cfg, 2, 2, ENCDEC, src_len=64 * 1024)
+    assert long > short
+    # cached entries survive interleaved queries at the other src_len
+    assert pol.step_cost(cfg, 2, 2, ENCDEC, src_len=64) == short
+    # an encdec step also prices the extra cross-projection GEMVs: it must
+    # cost at least a plain decode step of the same dims
+    assert pol.step_cost(cfg, 2, 2, ENCDEC, src_len=64) > \
+        pol.step_cost(cfg, 2, 2, DECODE)
 
 
 def _load(pending, active=1, util=0.0):
@@ -366,11 +552,66 @@ def test_encoder_embeddings_invariant_across_moves():
     assert res["tp_close"], "TP encoder diverged from replicated"
 
 
+def test_encdec_streams_invariant_across_recomposition():
+    """Acceptance pin: enc-dec decode streams are bit-identical across a
+    mid-stream live recomposition (1->2 CU grow, then back) vs a never-moved
+    reference run, and 2-way TP (with and without mid-stream degree changes)
+    emits the replicated streams."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.models import build_model
+    from repro.serve import serve_engine_rules
+    from repro.workloads import EncDecEngine, ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    cfg = dataclasses.replace(get_reduced("seamless-m4t-medium"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=2, max_len=24, eos_id=-1, max_src_len=16,
+                     len_buckets=(8,))
+    rng = np.random.default_rng(0)
+    srcs = [rng.integers(1, cfg.vocab_size, size=L) for L in (5, 9, 7, 13)]
+
+    def run(tp, rules, script=None):
+        eng = EncDecEngine(model, params, sc,
+                           mesh=comp.submesh(range(tp), f"tp{tp}"),
+                           rules=rules)
+        for s in srcs:
+            eng.submit(s, max_new_tokens=8)
+        step = 0
+        while eng.has_work:
+            if script and step in script:
+                eng.reshard_to(comp.submesh(range(script[step]), "re"))
+            eng.step()
+            step += 1
+            assert step < 200
+        return {str(r): t for r, t in eng.results().items()}
+
+    rules = serve_engine_rules()
+    ref = run(1, None)                          # never-moved baseline
+    moved = run(1, None, {3: 2, 7: 1})          # the 1->2 CU move (and back)
+    tp2 = run(2, rules)
+    dyn = run(2, rules, {3: 1, 7: 4})
+    print(json.dumps({"n": len(ref),
+                      "lens_ok": all(len(t) == 8 for t in ref.values()),
+                      "moved": moved == ref, "tp2": tp2 == ref,
+                      "dyn": dyn == ref}))
+    """)
+    assert res["n"] == 4 and res["lens_ok"]
+    assert res["moved"], "1->2 CU live recomposition altered enc-dec streams"
+    assert res["tp2"], "TP enc-dec decode diverged from replicated"
+    assert res["dyn"], "mid-stream TP degree change altered enc-dec streams"
+
+
 def test_mixed_fleet_end_to_end_with_live_class_moves():
-    """Acceptance: a mixed fleet (transformer decode + mamba + encoder) runs
-    end-to-end through ComposedServer with >=1 live recomposition between
-    classes, and SSM token streams / encoder embeddings are bit-identical to
-    a never-recomposed run of the same fleet."""
+    """Acceptance: a mixed fleet (transformer decode + mamba + encoder +
+    seamless enc-dec) runs end-to-end through ComposedServer with >=1 live
+    recomposition between classes, and SSM token streams / encoder
+    embeddings / enc-dec decode streams are bit-identical to a
+    never-recomposed run of the same fleet."""
     res = _run("""
     from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                     TenantSpec)
@@ -378,11 +619,14 @@ def test_mixed_fleet_end_to_end_with_live_class_moves():
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    s2t_sc = ServeConfig(max_slots=2, max_len=16, eos_id=-1, max_src_len=16,
+                         len_buckets=(8,))
     tenants = [
         TenantSpec("llm", "minitron-4b", serve=sc),
         TenantSpec("mamba", "falcon-mamba-7b", seed=1, serve=sc),
         TenantSpec("embed", "qwen2.5-32b", seed=2, serve=sc,
                    workload="encoder"),
+        TenantSpec("s2t", "seamless-m4t-medium", seed=3, serve=s2t_sc),
     ]
 
     def run(policy):
@@ -396,6 +640,7 @@ def test_mixed_fleet_end_to_end_with_live_class_moves():
                            max_new_tokens=new)
         traffic("llm", 2, 8)
         traffic("embed", 3, 0)
+        traffic("s2t", 2, 8)
         for _ in range(8):
             srv.step()
         traffic("mamba", 3, 10)              # burst: forces a class move
@@ -411,6 +656,7 @@ def test_mixed_fleet_end_to_end_with_live_class_moves():
         "moved_classes": sorted(moved_classes),
         "ssm_match": out["mamba"] == ref["mamba"],
         "enc_match": out["embed"] == ref["embed"],
+        "encdec_match": out["s2t"] == ref["s2t"],
         "llm_match": out["llm"] == ref["llm"],
         "done": {t: len(d) for t, d in out.items()},
     }))
@@ -418,10 +664,13 @@ def test_mixed_fleet_end_to_end_with_live_class_moves():
     assert res["recomps"] >= 1, "expected a live recomposition"
     assert len(res["moved_classes"]) >= 2, \
         f"expected moves across classes, got {res['moved_classes']}"
+    assert res["classes"]["s2t"] == "encdec"   # derived from the arch
     assert res["ssm_match"], "SSM streams changed across the live move"
     assert res["enc_match"], "encoder embeddings changed across the live move"
+    assert res["encdec_match"], \
+        "enc-dec decode streams changed across the live move"
     assert res["llm_match"]
-    assert res["done"] == {"llm": 2, "mamba": 3, "embed": 3}
+    assert res["done"] == {"llm": 2, "mamba": 3, "embed": 3, "s2t": 2}
 
 
 def test_speculative_runner_up_prewarm():

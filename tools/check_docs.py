@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Docs drift check: fail if a file under docs/ references a code symbol or
+path that no longer exists in the tree.
+
+The check is deliberately simple (grep against `git grep -l`, per ISSUE):
+
+* inline code spans (single backticks, outside fenced blocks) are scanned
+  for symbol-shaped references — CamelCase names, snake_case names and
+  dotted paths built from them; prose-y lowercase words, CLI flags and
+  formula fragments are ignored;
+* spans that look like repo paths (contain ``/`` or end in a known file
+  extension) must exist on disk;
+* every surviving symbol must appear verbatim somewhere under the source
+  roots (src/ tests/ examples/ benchmarks/ tools/).
+
+Run: python tools/check_docs.py          (CI runs exactly this)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+SOURCE_ROOTS = ("src", "tests", "examples", "benchmarks", "tools")
+PATH_SUFFIXES = (".py", ".md", ".json", ".txt", ".yml", ".yaml", ".toml")
+
+FENCE = re.compile(r"^```", re.M)
+INLINE = re.compile(r"`([^`\n]+)`")
+LEADING_SYM = re.compile(r"^[A-Za-z_][A-Za-z0-9_.]*")
+
+
+def _camel(tok: str) -> bool:
+    return any(c.isupper() for c in tok) and any(c.islower() for c in tok)
+
+
+def _symbolish(tok: str) -> bool:
+    """Worth checking: CamelCase or snake_case — not prose-y lowercase
+    words like `decode` or `tokens` (workload ids, English)."""
+    return _camel(tok) or ("_" in tok and not tok.startswith("_")
+                           and not tok.endswith("_"))
+
+
+def _inline_spans(text: str):
+    """Inline code spans outside fenced blocks (fenced blocks hold ASCII
+    diagrams and pseudo-formulas, not checkable symbols)."""
+    outside, fenced = [], False
+    for line in text.splitlines():
+        if FENCE.match(line):
+            fenced = not fenced
+            continue
+        if not fenced:
+            outside.append(line)
+    return INLINE.findall("\n".join(outside))
+
+
+def _exists_in_source(needle: str) -> bool:
+    out = subprocess.run(
+        ["git", "grep", "-l", "--fixed-strings", needle, "--",
+         *SOURCE_ROOTS],
+        cwd=REPO, capture_output=True, text=True)
+    return out.returncode == 0 and bool(out.stdout.strip())
+
+
+def check_span(span: str):
+    """Return None if the span checks out (or isn't checkable), else an
+    error string."""
+    span = span.strip()
+    # repo paths: must exist on disk
+    if "/" in span and " " not in span and not span.startswith("-"):
+        leading = re.match(r"^[A-Za-z0-9_./-]+", span)
+        if leading and (leading.group(0).endswith(PATH_SUFFIXES)
+                        or "/" in leading.group(0)):
+            p = leading.group(0).rstrip("/.")
+            if not (REPO / p).exists():
+                return f"path {p!r} does not exist"
+            return None
+    if " " not in span and span.endswith(PATH_SUFFIXES) \
+            and not (REPO / span).exists() and not _exists_in_source(span):
+        return f"file {span!r} does not exist"
+    m = LEADING_SYM.match(span)
+    if not m:
+        return None
+    sym = m.group(0).rstrip(".")
+    parts = sym.split(".")
+    checkable = [p for p in parts if _symbolish(p)]
+    if not checkable:
+        return None
+    if _exists_in_source(sym):
+        return None
+    if any(_exists_in_source(p) for p in checkable):
+        return None
+    return f"symbol {sym!r} not found under {'/'.join(SOURCE_ROOTS)}"
+
+
+def main() -> int:
+    if not DOCS.is_dir():
+        print("docs/ missing — nothing to check (FAIL: the docs tree is "
+              "part of the repo contract)")
+        return 1
+    errors = []
+    for md in sorted(DOCS.rglob("*.md")):
+        seen = set()
+        for span in _inline_spans(md.read_text()):
+            if span in seen:
+                continue
+            seen.add(span)
+            err = check_span(span)
+            if err:
+                errors.append(f"{md.relative_to(REPO)}: {err}")
+    if errors:
+        print("docs-check FAILED — stale references:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs-check OK ({len(list(DOCS.rglob('*.md')))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
