@@ -196,6 +196,32 @@ def layer_latency(cfg: AccelConfig, platform: PlatformProfile,
                             cfg.num_fmus, cus)
 
 
+# per-hop latency of one ring all-reduce phase on the serving mesh's ICI.
+# What makes the serving DSE's TP-degree choice non-trivial: sharding a step
+# over p CUs divides its bandwidth terms by p but adds 2(p-1) latency-bound
+# collective phases per layer — for a small/reduced model the phases dominate
+# and Stage 1 correctly picks tp < cus.
+ICI_HOP_LATENCY_S = 1.0e-6
+
+
+def tp_collective_latency(platform: PlatformProfile, degree: int,
+                          bytes_per_device: float) -> float:
+    """Seconds for one tensor-parallel all-reduce of ``bytes_per_device``
+    activation bytes across ``degree`` chips (ring: 2(p-1) phases, each
+    moving ~bytes/p over one ICI link plus a fixed hop latency).  Degree
+    <= 1 costs nothing; a platform without a profiled ICI bandwidth
+    (``ici_bw`` 0, e.g. the Versal board's stream fabric) prices the
+    latency phases only."""
+    p = max(int(degree), 1)
+    if p <= 1:
+        return 0.0
+    phases = 2 * (p - 1)
+    if platform.ici_bw <= 0:
+        return phases * ICI_HOP_LATENCY_S
+    return phases * (ICI_HOP_LATENCY_S
+                     + bytes_per_device / (p * platform.ici_bw))
+
+
 def ssm_step_latency(cfg: AccelConfig, platform: PlatformProfile,
                      batch: int, d_model: int, d_inner: int, state_dim: int,
                      conv_width: int, dt_rank: int, *,

@@ -9,6 +9,15 @@ size, reproducing the paper's guidance in §4.4).
 
 The result carries the ExecutionPlan consumed by the code generator
 (instruction streams) and, on the TPU side, by the mesh composer.
+
+The *serving-side* incarnation of the same two-stage split lives in
+``repro.serve.dse``: there Stage 1 optimizes one tenant engine's runtime
+parameters (TP degree, slot count, bucket ladder) per candidate CU grant
+with the analytical model, and Stage 2 is the recomposition policy's split
+search over those Stage-1-optimal :class:`DesignPoint` memos.  The
+``DesignPoint`` record is defined here because it is the shared currency
+between the two stages — the offline driver's mode tables play the same
+role for the schedule optimizer.
 """
 from __future__ import annotations
 
@@ -27,6 +36,58 @@ from repro.core.schedule import Schedule, ScheduleProblem, validate
 
 AUTO_EXACT_MAX_NODES = 12        # |layers| x |modes| budget for exact solver
 AUTO_EXACT_MAX_MODES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One workload's optimized runtime configuration on a ``cus``-CU
+    sub-accelerator — Stage 1's output, Stage 2's search atom.
+
+    On the serving fabric the knobs are the tenant engine's runtime
+    parameters; ``None`` means "keep the engine's current setting" (used
+    by the split-only policy mode, which optimizes nothing per tenant):
+
+    * ``tp``      — tensor-parallel degree over the sub-mesh (<= cus; the
+      analytical all-reduce cost can make ``tp < cus`` optimal);
+    * ``slots``   — concurrent decode/SSM slots (batch per step, priced via
+      ``batch`` in the analytical step cost, memory-feasibility-bounded);
+    * ``buckets`` — padded-length program ladder for encode phases
+      (encoder / enc-dec tenants), chosen from observed job lengths.
+
+    ``cost`` is the predicted seconds per unit of owed work (decode step /
+    prompt token) at this design point — what Stage 2's makespan minimizes.
+    """
+
+    cus: int
+    tp: Optional[int] = None
+    slots: Optional[int] = None
+    buckets: Optional[Tuple[int, ...]] = None
+    cost: float = 0.0
+
+    def knobs(self) -> dict:
+        """The non-default engine knobs this point pins (for telemetry)."""
+        out = {}
+        if self.tp is not None:
+            out["tp"] = self.tp
+        if self.slots is not None:
+            out["slots"] = self.slots
+        if self.buckets is not None:
+            out["buckets"] = list(self.buckets)
+        return out
+
+
+def tp_candidates(cus: int) -> Tuple[int, ...]:
+    """Candidate tensor-parallel degrees on a ``cus``-CU grant: powers of
+    two up to the grant, plus the grant itself (the full-mesh default)."""
+    if cus <= 0:
+        return ()
+    out = []
+    p = 1
+    while p < cus:
+        out.append(p)
+        p *= 2
+    out.append(cus)
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)

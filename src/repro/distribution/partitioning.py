@@ -258,6 +258,27 @@ def fit_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
     return P(*(fit(d, e) for d, e in zip(shape, entries)))
 
 
+def tp_submesh(mesh: Optional[Mesh], degree: Optional[int],
+               axis: str = "model") -> Optional[Mesh]:
+    """Restrict a (sub-)mesh's ``axis`` to its first ``degree`` columns.
+
+    The serving-side DSE Stage 1 optimizes each tenant's tensor-parallel
+    degree *independently of its CU grant*: a tenant whose analytical
+    all-reduce cost outweighs the bandwidth gain runs at ``tp < cus`` on a
+    slice of its granted sub-accelerator (the remaining columns idle rather
+    than slow the step down).  ``degree`` of None/0, or >= the axis size,
+    returns the mesh unchanged; meshes without ``axis`` are returned as-is.
+    """
+    if mesh is None or not degree or axis not in mesh.axis_names:
+        return mesh
+    ax = mesh.axis_names.index(axis)
+    if degree >= mesh.devices.shape[ax]:
+        return mesh
+    idx = [slice(None)] * mesh.devices.ndim
+    idx[ax] = slice(0, degree)
+    return Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
     """The sharding-relevant skeleton of a pytree — treedef plus per-leaf

@@ -79,7 +79,8 @@ def run_fabric(args) -> int:
         tenants = [TenantSpec(f"tenant{i}-{arch}", arch, reduced=args.reduced,
                               serve=serve, seed=i)
                    for i, arch in enumerate(args.arch)]
-    server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
+    policy = AnalyticalPolicy(two_stage=not args.split_only)
+    server = ComposedServer(mesh, tenants, policy=policy,
                             decide_every=args.decide_every,
                             tp=not args.no_tp, warm=not args.no_warm,
                             prewarm_async=args.prewarm_async)
@@ -90,6 +91,7 @@ def run_fabric(args) -> int:
     bursts = sorted((int(rng.integers(0, 4 * args.requests)), t.name)
                     for t in tenants for _ in range(args.requests))
     steps = 0
+    predicted = None
     while bursts or server.pending():
         while bursts and bursts[0][0] <= steps:
             _, name = bursts.pop(0)
@@ -98,6 +100,8 @@ def run_fabric(args) -> int:
             server.submit(name, rng.integers(1, vocab, size=plen),
                           max_new_tokens=args.max_new_tokens)
         server.step()
+        if policy.predicted is not None:
+            predicted = dict(policy.predicted)   # last busy decide's view
         steps += 1
         if steps > 10_000:
             break
@@ -113,11 +117,17 @@ def run_fabric(args) -> int:
         for t in server.engines}
     print(json.dumps({
         "tenants": [t.name for t in tenants], "scenario": args.scenario,
+        "two_stage": not args.split_only,
         "decode_steps": steps,
         "wall_s": round(dt, 2), **stats,
         "per_class_throughput": throughput,
+        # the last busy decide's predicted makespans (analytical, seconds):
+        # what Stage 2 thought the best and the applied design cost
+        "predicted_makespan_s": predicted,
         "events": [{"step": e.step, "reason": e.reason,
                     "sizes": e.sizes_after,
+                    "retuned": list(e.retuned),
+                    "design": e.design,
                     "seconds": round(e.seconds, 4),
                     "warm_compile_seconds": round(e.warm_compile_seconds, 4),
                     "warm_builds": e.warm_builds,
@@ -203,6 +213,55 @@ def run_scaling(args) -> int:
         "step_ms_by_cus": {str(s): lat[s] for s in sizes},
         "monotone": monotone,
     }, indent=1))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# DSE smoke: Stage 1 must pick a non-default design point, applied live
+# ---------------------------------------------------------------------------
+
+def run_dse_smoke(args) -> int:
+    """Two-tenant fleet under the two-stage policy: the serving DSE's
+    Stage 1 must pick at least one non-default design point (slot count
+    above the provisioned default, or a TP degree below the grant) and the
+    fabric must apply it live (a recomposition event carrying design
+    deltas) while every stream completes.  Fast CI guard that the two-stage
+    path actually optimizes rather than echoing the engine defaults."""
+    if jax.device_count() < 4:
+        print("dse-smoke needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    tenants = [TenantSpec("a", "minitron-4b", serve=sc),
+               TenantSpec("b", "qwen2.5-32b", seed=1, serve=sc)]
+    server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
+                            decide_every=3)
+    rng = np.random.default_rng(args.seed)
+    for t in ("a", "b"):
+        vocab = server.cfgs[t].vocab_size
+        for _ in range(6):                 # queue depth 6 >> 2 default slots
+            server.submit(t, rng.integers(1, vocab, size=8),
+                          max_new_tokens=10)
+    out = server.drain(max_steps=500)
+    stats = server.stats()
+    applied = {t: d for e in server.events for t, d in e.design.items()}
+    nondefault = {
+        t: d for t, d in stats["design_points"].items()
+        if d["slots"] != sc.max_slots
+        or (d["tp"] is not None and 0 < d["tp"] < d["cus"])}
+    complete = all(len(toks) == 10
+                   for streams in out.values() for toks in streams.values())
+    ok = bool(nondefault) and bool(applied) and complete
+    print(json.dumps({"design_points": stats["design_points"],
+                      "applied_deltas": applied,
+                      "nondefault": sorted(nondefault),
+                      "complete": complete, "ok": ok}))
+    if not ok:
+        print("DSE smoke FAILED: Stage 1 never picked (or the fabric never "
+              "applied) a non-default design point")
+        return 1
+    print("DSE smoke OK: non-default design point chosen and applied live")
     return 0
 
 
@@ -298,10 +357,19 @@ def main(argv=None) -> int:
     ap.add_argument("--scale-dff", type=int, default=8192)
     ap.add_argument("--tp-smoke", action="store_true",
                     help="assert 2-way TP decode matches replicated decode")
+    ap.add_argument("--split-only", action="store_true",
+                    help="disable the serving DSE's Stage 1: the policy "
+                         "searches raw CU splits (the pre-two-stage "
+                         "behavior; the two_stage_dse benchmark ablation)")
+    ap.add_argument("--dse-smoke", action="store_true",
+                    help="assert the two-stage policy picks and applies a "
+                         "non-default per-tenant design point")
     args = ap.parse_args(argv)
 
     if args.tp_smoke:
         return run_tp_smoke(args)
+    if args.dse_smoke:
+        return run_dse_smoke(args)
     if args.scaling_curve:
         return run_scaling(args)
     if args.scenario == "mixed":

@@ -66,19 +66,23 @@ def _project_qkv(p, cfg: ModelConfig, x, positions):
 
 
 def gqa_fwd(p, cfg: ModelConfig, x, positions, *, causal=True, is_global=None,
-            attn_impl: str = "blockwise", block_size: int = 512):
+            attn_impl: str = "blockwise", block_size: int = 512,
+            kv_len=None):
     """Full-sequence attention (train / encoder).  is_global: scalar bool for
-    hybrid stacks whose scanned body switches window on/off per layer."""
+    hybrid stacks whose scanned body switches window on/off per layer.
+    kv_len: optional per-row (B,) valid lengths — a bidirectional stack over
+    right-padded rows masks each row's own key padding so outputs are
+    independent of the padded program shape (bucket-invariant encodes)."""
     q, k, v = _project_qkv(p, cfg, x, positions)
     window = cfg.window_size if cfg.attn_type == "sliding" else 0
-    if attn_impl == "triangular" and causal:
+    if attn_impl == "triangular" and causal and kv_len is None:
         o = L.triangular_attention(q, k, v, window=window,
                                    block_size=block_size, is_global=is_global,
                                    logit_cap=cfg.logit_softcap)
     else:
         o = L.blockwise_attention(q, k, v, causal=causal, window=window,
                                   block_size=block_size, is_global=is_global,
-                                  logit_cap=cfg.logit_softcap)
+                                  logit_cap=cfg.logit_softcap, kv_len=kv_len)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
 
 

@@ -136,12 +136,21 @@ def _gqa_expand(k, groups: int):
 
 
 def _block_mask(qpos, kpos, valid_len, *, causal, window, is_global):
-    """(Sq, blk) mask shared by the fwd and bwd passes."""
-    mask = kpos[None, :] < valid_len
+    """(B|1, Sq, blk) mask shared by the fwd and bwd passes.
+
+    valid_len may be a scalar (one kv length for the whole batch — decode
+    with a uniform cache, or Skv itself) or a per-row (B,) vector (serving's
+    right-padded batches: each row masks its own key padding, so a job's
+    attention never reads another bucket's pad region and encodes are
+    bucket-invariant)."""
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        vl = vl[None]                                     # (1,)
+    mask = kpos[None, None, :] < vl[:, None, None]        # (B|1, 1, blk)
     if causal:
-        mask = mask & (kpos[None, :] <= qpos[:, None])
+        mask = mask & (kpos[None, None, :] <= qpos[None, :, None])
     if window:
-        w_ok = kpos[None, :] > (qpos[:, None] - window)
+        w_ok = kpos[None, None, :] > (qpos[None, :, None] - window)
         if is_global is not None:
             w_ok = w_ok | is_global
         mask = mask & w_ok
@@ -174,7 +183,7 @@ def _flash_fwd_pass(causal, window, block_size, logit_cap, q, k, v, q_offset,
             s = logit_cap * jnp.tanh(s / logit_cap)
         mask = _block_mask(qpos, kpos, valid_len, causal=causal,
                            window=window, is_global=is_global)
-        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         resc = jnp.exp(m - m_new)
@@ -236,7 +245,7 @@ def _flash_bwd(causal, window, block_size, logit_cap, res, dout):
             s = s_raw
         mask = _block_mask(qpos, kpos, valid_len, causal=causal,
                            window=window, is_global=is_global)
-        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
         p = jnp.exp(s - lse[..., None])                       # (B,Sq,Hq,blk)
         pc = p.astype(v.dtype)
         dv_h = jnp.einsum("bqhk,bqhd->bkhd", pc, dout,
@@ -247,7 +256,7 @@ def _flash_bwd(causal, window, block_size, logit_cap, res, dout):
         if logit_cap > 0.0:
             t = jnp.tanh(s_raw / logit_cap)
             ds = ds * (1.0 - jnp.square(t))
-        ds = jnp.where(mask[None, :, None, :], ds, 0.0)
+        ds = jnp.where(mask[:, :, None, :], ds, 0.0)
         dsc = ds.astype(k.dtype)
         dq = dq + jnp.einsum("bqhk,bkhd->bqhd", dsc, kexp,
                              preferred_element_type=jnp.float32) * scale
@@ -283,7 +292,9 @@ def blockwise_attention(
 
     q_offset: position of q[0] within the kv timeline (prefill: 0; decode:
       cache length).  window: sliding-window size (0 = unlimited).  kv_len:
-      optional dynamic valid kv length (decode with preallocated cache).
+      optional dynamic valid kv length — a scalar (decode with a
+      preallocated cache) or a per-row (B,) vector (right-padded serving
+      batches: each row masks its own key padding).
     is_global: optional scalar bool — when True, ignore ``window`` (hybrid
       models with a few global layers inside a scanned stack).
     """

@@ -73,13 +73,17 @@ class Model:
         ok = jnp.arange(logits.shape[-1]) < V
         return jnp.where(ok, logits, -1e30)
 
-    def _encode(self, params, frames, attn_impl="blockwise"):
+    def _encode(self, params, frames, attn_impl="blockwise", src_len=None):
+        """src_len: optional per-row (B,) valid frame counts when the batch
+        is right-padded — the bidirectional stack then masks each row's own
+        key padding, so valid rows are independent of the padded shape
+        (bucket-invariant encodes; ROADMAP enc-dec follow-up)."""
         cfg = self.cfg
         x = L.apply_norm(cfg.norm, params["frame_norm"],
                          frames.astype(cfg.activation_dtype), cfg.norm_eps)
         pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
         return T.encoder_fwd(params["encoder"], cfg, x, pos,
-                             attn_impl=attn_impl), pos
+                             attn_impl=attn_impl, kv_len=src_len), pos
 
     # ------------------------------------------------------------------
     def loss(self, params, batch, *, attn_impl: str = "blockwise",
@@ -190,7 +194,8 @@ class Model:
                 jnp.asarray(src, jnp.int32), (B,))
         return logits, out_cache
 
-    def encode(self, params, batch, *, attn_impl: str = "blockwise"):
+    def encode(self, params, batch, *, attn_impl: str = "blockwise",
+               lens=None):
         """Full-sequence hidden states for prefill-only / embedding
         workloads (no cache, no decode loop) -> (B, S, d).
 
@@ -201,13 +206,20 @@ class Model:
         the final-norm hidden states.  This is what the throughput-oriented
         EncoderEngine batches: compute-bound full-sequence matmuls, priced
         as such by the class-aware recomposition policy.
+
+        lens: optional per-row (B,) valid lengths for right-padded batches.
+        A bidirectional stack masks each row's key padding with them, making
+        a row's encode independent of the padded program shape (the serving
+        engines' bucketed programs are then bucket-invariant); causal stacks
+        are padding-proof by construction, so lens is ignored there.
         """
         cfg = self.cfg
         if cfg.is_encdec:
             frames = batch.get("frames")
             if frames is None:
                 frames = jnp.take(params["embed"], batch["tokens"], axis=0)
-            enc_out, _ = self._encode(params, frames, attn_impl)
+            enc_out, _ = self._encode(params, frames, attn_impl,
+                                      src_len=lens)
             return enc_out
         tokens = batch["tokens"]
         x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)

@@ -67,12 +67,14 @@ def _layer_init(rng, cfg: ModelConfig, *, dense_override_ff: int = 0,
 
 
 def _mixer_fwd(p, cfg: ModelConfig, h, positions, is_global, attn_impl,
-               causal=True, ssm_impl="chunked", attn_block=512):
-    """The sequence mixer (attention / ssm / hybrid) on normed input h."""
+               causal=True, ssm_impl="chunked", attn_block=512, kv_len=None):
+    """The sequence mixer (attention / ssm / hybrid) on normed input h.
+    kv_len: optional per-row valid lengths (right-padded bidirectional
+    stacks mask their own key padding; see ``gqa_fwd``)."""
     if cfg.hybrid_parallel:
         a = A.gqa_fwd(p["attn"], cfg, h, positions, causal=causal,
                       is_global=is_global, attn_impl=attn_impl,
-                      block_size=attn_block)
+                      block_size=attn_block, kv_len=kv_len)
         s = S.mamba_fwd(p["ssm"], cfg, h, impl=ssm_impl)
         a = L.apply_norm("rmsnorm", p["attn_out_norm"], a, cfg.norm_eps)
         s = L.apply_norm("rmsnorm", p["ssm_out_norm"], s, cfg.norm_eps)
@@ -84,17 +86,18 @@ def _mixer_fwd(p, cfg: ModelConfig, h, positions, is_global, attn_impl,
                          block_size=attn_block)
     return A.gqa_fwd(p["attn"], cfg, h, positions, causal=causal,
                      is_global=is_global, attn_impl=attn_impl,
-                     block_size=attn_block)
+                     block_size=attn_block, kv_len=kv_len)
 
 
 def _layer_fwd(p, cfg: ModelConfig, x, positions, *, is_global=None,
                attn_impl="blockwise", enc_out=None, enc_positions=None,
                causal=True, moe_dispatch="einsum", ssm_impl="chunked",
-               attn_block=512):
+               attn_block=512, kv_len=None):
     """Residual layer. Returns (x, aux_loss)."""
     h = L.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     x = x + _mixer_fwd(p, cfg, h, positions, is_global, attn_impl, causal,
-                       ssm_impl=ssm_impl, attn_block=attn_block)
+                       ssm_impl=ssm_impl, attn_block=attn_block,
+                       kv_len=kv_len)
     if "cross" in p:
         hc = L.apply_norm(cfg.norm, p["ln_cross"], x, cfg.norm_eps)
         x = x + A.cross_fwd(p["cross"], cfg, hc, enc_out, enc_positions)
@@ -415,10 +418,17 @@ def encoder_init(rng, cfg: ModelConfig):
     return {"scanned": scanned, "final_norm": L.norm_init(cfg.norm, cfg.d_model)}
 
 
-def encoder_fwd(params, cfg: ModelConfig, x, positions, *, attn_impl="blockwise"):
+def encoder_fwd(params, cfg: ModelConfig, x, positions, *,
+                attn_impl="blockwise", kv_len=None):
+    """Bidirectional encoder stack.  kv_len: optional per-row (B,) valid
+    source lengths — when the batch is right-padded (serving's bucketed
+    encode programs), each row's attention masks its own key padding, making
+    the valid rows of the output independent of the padded program shape
+    (bucket-invariant encodes).  None keeps the unmasked exact-length path
+    (training)."""
     def body(h, lp):
         h, _ = _layer_fwd(lp, cfg, h, positions, causal=False,
-                          attn_impl=attn_impl)
+                          attn_impl=attn_impl, kv_len=kv_len)
         return h, None
 
     if cfg.remat:

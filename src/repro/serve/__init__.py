@@ -1,4 +1,6 @@
+from repro.core.dse import DesignPoint
 from repro.serve.compile_cache import ExecutableCache
+from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
 from repro.serve.engine import DecodeEngine, Request, ServeConfig, ServeEngine
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                 RecompositionEvent, TenantLoad, TenantSpec,
@@ -16,7 +18,10 @@ __all__ = [
     "EncDecEngine",
     "AnalyticalPolicy",
     "ComposedServer",
+    "DesignPoint",
     "RecompositionEvent",
+    "Stage1Optimizer",
+    "TenantDesignSpace",
     "TenantLoad",
     "TenantSpec",
     "serve_engine_rules",

@@ -41,9 +41,11 @@ from repro.configs import get_config, get_reduced
 from repro.configs.base import ModelConfig
 from repro.core.analytical import AccelConfig, layer_latency, ssm_step_latency
 from repro.core.composer import MeshComposer
+from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models import build_model
 from repro.models.ssm import dims as ssm_dims
+from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
 from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, Engine,
                              ExecutableCache, ServeConfig, build_engine,
                              workload_class_of)
@@ -103,6 +105,11 @@ class RecompositionEvent:
     parked: Tuple[str, ...]
     seconds: float                   # state migration (device_put) only
     reason: str
+    # tenants whose CU set did not move but whose engine design point
+    # (TP degree / slots / bucket ladder) was reconfigured live, and the
+    # per-tenant knobs actually applied (DSE Stage-1 deltas)
+    retuned: Tuple[str, ...] = ()
+    design: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     # moved tenant -> wall time of its first step on the new composition;
     # with a cold executable cache this is where the XLA recompile stall
     # lands — filled in by ComposedServer.step()
@@ -138,10 +145,21 @@ def _composed_total_s(lb, cus: int) -> float:
 
 
 class AnalyticalPolicy:
-    """Chooses a CU split by pricing each tenant's step on candidate
-    sub-accelerator design points with the analytical latency model (the same
-    machinery DSE Stage 2 schedules with, §3.1) and minimizing the predicted
-    makespan of the owed work.
+    """The serving-side DSE Stage 2: chooses a *composition of design
+    points* by pricing each tenant on candidate sub-accelerator grants with
+    the analytical latency model (the same machinery the offline DSE
+    schedules with, §3.1) and minimizing the predicted makespan of the owed
+    work.
+
+    Two-stage (default): for every candidate CU grant ``c`` the per-tenant
+    Stage-1 optimizer (:class:`~repro.serve.dse.Stage1Optimizer`) first
+    picks that tenant's best engine configuration — TP degree over the
+    sub-mesh, slot count, bucket ladder — and ``decide`` searches splits
+    over those Stage-1-optimal :class:`~repro.core.dse.DesignPoint` memos,
+    returning per-tenant design points (CUs + knobs) for the fabric to
+    apply live.  With ``two_stage=False`` (the split-only ablation, and the
+    behavior when the fabric supplies no design spaces) the CU count is the
+    whole design point — exactly the pre-DSE policy.
 
     Class-aware costing (the heterogeneous-workload point): each tenant is
     priced by its workload class's actual bound resource —
@@ -170,11 +188,17 @@ class AnalyticalPolicy:
     """
 
     def __init__(self, platform: PlatformProfile = TPU_V5E,
-                 min_gain: float = 1.25):
+                 min_gain: float = 1.25, two_stage: bool = True):
         self.platform = platform
         self.min_gain = min_gain
         self._cost_cache: Dict[Tuple, float] = {}
-        self.runner_up: Optional[Dict[str, int]] = None
+        self.runner_up: Optional[Dict[str, DesignPoint]] = None
+        # Stage 1 shares this policy's step_cost memo as its price table
+        self.stage1: Optional[Stage1Optimizer] = (
+            Stage1Optimizer(self.step_cost, platform) if two_stage else None)
+        # last non-idle decision's predicted makespans (telemetry /
+        # benchmark): {"best_s": ..., "current_s": ...}
+        self.predicted: Optional[Dict[str, float]] = None
 
     # -- per-tenant per-step cost on a c-CU sub-accelerator ----------------
     def step_cost(self, cfg: ModelConfig, batch: int, cus: int,
@@ -256,23 +280,37 @@ class AnalyticalPolicy:
             self._cost_cache[key] = cost
         return self._cost_cache[key]
 
-    # -- split search ------------------------------------------------------
+    # -- the two-stage search ----------------------------------------------
     def decide(self, loads: Mapping[str, TenantLoad],
                cfgs: Mapping[str, ModelConfig],
-               current: Mapping[str, int],
+               current: Mapping[str, object],
                num_cus: int,
                classes: Optional[Mapping[str, str]] = None,
                src_lens: Optional[Mapping[str, int]] = None,
-               ) -> Tuple[Dict[str, int], str]:
-        """Return (target sizes, reason).  Tenants with no load are parked
-        (size 0); returning ``current`` means "leave the fabric alone".
-        ``classes`` maps tenant -> workload class; omitted tenants derive
-        from their config (encoder tenancy can't be derived, so mixed
-        fabrics pass it explicitly).  ``src_lens`` maps enc-dec tenants to
-        their per-slot source length (prices the per-step cross-attention
-        read); omitted tenants price at the minimal source."""
+               lengths: Optional[Mapping[str, Sequence[int]]] = None,
+               spaces: Optional[Mapping[str, TenantDesignSpace]] = None,
+               ) -> Tuple[Dict[str, DesignPoint], str]:
+        """Return (per-tenant design points, reason).
+
+        Each returned :class:`DesignPoint` carries the tenant's CU grant
+        plus its Stage-1-optimal engine knobs (TP degree / slots / bucket
+        ladder — ``None`` knobs mean "keep").  Tenants with no load are
+        parked (cus 0); returning the ``current`` points means "leave the
+        fabric alone".
+
+        ``current`` maps tenant -> applied CU count (int) or applied
+        DesignPoint.  ``classes`` maps tenant -> workload class; omitted
+        tenants derive from their config (encoder tenancy can't be derived,
+        so mixed fabrics pass it explicitly).  ``src_lens`` maps enc-dec
+        tenants to their per-slot source capacity (prices the per-step
+        cross-attention read).  ``lengths`` maps tenants to recently
+        observed job/source lengths and ``spaces`` to their Stage-1 design
+        spaces — both fabric-supplied; without a space a tenant is priced
+        split-only (its CU count is the whole design point)."""
         classes = dict(classes or {})
         src_lens = dict(src_lens or {})
+        lengths = dict(lengths or {})
+        spaces = dict(spaces or {})
         for t in cfgs:
             classes.setdefault(t, workload_class_of(cfgs[t]))
         # arena pressure inflates demand: a hot arena means queued work the
@@ -280,47 +318,110 @@ class AnalyticalPolicy:
         demand = {t: ld.pending_tokens * (1.0 + ld.arena_utilization)
                   for t, ld in loads.items()}
         busy = [t for t, d in demand.items() if d > 0]
+
+        def concurrency(t: str) -> int:
+            return max(loads[t].active + loads[t].queue_depth, 1)
+
+        def split_only_cost(t: str, c: int) -> float:
+            if c <= 0:
+                return float("inf")
+            cost = self.step_cost(cfgs[t], loads[t].active or 1, c,
+                                  classes[t], src_len=src_lens.get(t, 0))
+            if self.stage1 is not None and spaces:
+                # a space-less tenant in a two-stage decide must price in
+                # Stage 1's units (seconds per TOKEN: one batched step
+                # emits `active` tokens) or the makespan would compare
+                # per-step against per-token costs and systematically
+                # over-grant the space-less tenant
+                cost /= max(loads[t].active, 1)
+            return cost
+
+        def stage1_point(t: str, c: int) -> DesignPoint:
+            """Stage 1: the tenant's best design point on a c-CU grant."""
+            sp = spaces.get(t)
+            if self.stage1 is not None and sp is not None:
+                return self.stage1.best(cfgs[t], sp, concurrency(t), c,
+                                        lengths.get(t, ()),
+                                        src_lens.get(t, 0))
+            return DesignPoint(cus=max(c, 0), cost=split_only_cost(t, c))
+
+        def as_point(t: str, v) -> DesignPoint:
+            """Normalize a ``current`` entry and (re-)price it under the
+            current load — the hysteresis baseline."""
+            if not isinstance(v, DesignPoint):
+                return stage1_point(t, int(v))
+            sp = spaces.get(t)
+            if self.stage1 is not None and sp is not None and v.cus > 0:
+                cost = self.stage1.cost_of(cfgs[t], sp, concurrency(t), v,
+                                           lengths.get(t, ()),
+                                           src_lens.get(t, 0))
+            else:
+                cost = split_only_cost(t, v.cus)
+            return dataclasses.replace(v, cost=cost)
+
+        cur_points = {t: as_point(t, v) for t, v in current.items()}
         if not busy:
             self.runner_up = None
-            return dict(current), "idle"
+            self.predicted = None
+            return dict(cur_points), "idle"
 
-        def makespan(sizes: Mapping[str, int]) -> float:
-            return max(demand[t] * self.step_cost(
-                cfgs[t], loads[t].active or 1, sizes.get(t, 0), classes[t],
-                src_len=src_lens.get(t, 0))
-                for t in busy)
+        # Stage-1 memo: one design-point search per (busy tenant, grant)
+        memo: Dict[Tuple[str, int], DesignPoint] = {}
 
-        best_sizes, best_cost = None, float("inf")
-        second_sizes, second_cost = None, float("inf")
+        def point(t: str, c: int) -> DesignPoint:
+            if (t, c) not in memo:
+                memo[(t, c)] = stage1_point(t, c)
+            return memo[(t, c)]
+
+        def makespan(points: Mapping[str, DesignPoint]) -> float:
+            worst = 0.0
+            for t in busy:
+                p = points.get(t)
+                cost = p.cost if p is not None else float("inf")
+                worst = max(worst, demand[t] * cost)
+            return worst
+
+        # Stage 2: split search over Stage-1-optimal design points
+        best_pts, best_cost = None, float("inf")
+        second_pts, second_cost = None, float("inf")
         for split in _candidate_splits(num_cus, busy, demand):
-            sizes = dict(zip(busy, split))
-            cost = makespan(sizes)
+            pts = {t: point(t, c) for t, c in zip(busy, split)}
+            cost = makespan(pts)
             if cost < best_cost:
-                second_sizes, second_cost = best_sizes, best_cost
-                best_sizes, best_cost = sizes, cost
+                second_pts, second_cost = best_pts, best_cost
+                best_pts, best_cost = pts, cost
             elif cost < second_cost:
-                second_sizes, second_cost = sizes, cost
-        assert best_sizes is not None
+                second_pts, second_cost = pts, cost
+        assert best_pts is not None
 
-        cur_cost = makespan(current)
+        cur_cost = makespan(cur_points)
+        # JSON-safe telemetry: an admit tick's current makespan is infinite
+        # (a parked tenant owes work) — record None, not float('inf')
+        self.predicted = {
+            "best_s": best_cost,
+            "current_s": cur_cost if cur_cost != float("inf") else None}
         if cur_cost == float("inf"):
-            self.runner_up = second_sizes
-            return best_sizes, "admit"          # a parked tenant got work
+            self.runner_up = second_pts
+            return best_pts, "admit"            # a parked tenant got work
         if cur_cost / max(best_cost, 1e-12) >= self.min_gain:
-            self.runner_up = second_sizes
+            self.runner_up = second_pts
+            if self._sizes(best_pts) == self._sizes(cur_points):
+                # same split, better per-tenant configs: a pure Stage-1
+                # delta (slots / TP / ladder) applied with no CU move
+                return best_pts, "retune"
             if len(busy) == 1:
-                return best_sizes, "unify"
-            return best_sizes, "rebalance"
+                return best_pts, "unify"
+            return best_pts, "rebalance"
         # staying put: the best candidate is what we'd switch to next —
-        # that's the split worth prewarming while the fabric idles
-        self.runner_up = (best_sizes
-                          if best_sizes != self._normalized(current) else
-                          second_sizes)
-        return dict(current), "hysteresis"
+        # that's the design worth prewarming while the fabric idles
+        self.runner_up = (best_pts
+                          if self._sizes(best_pts) != self._sizes(cur_points)
+                          else second_pts)
+        return dict(cur_points), "hysteresis"
 
     @staticmethod
-    def _normalized(sizes: Mapping[str, int]) -> Dict[str, int]:
-        return {t: s for t, s in sizes.items() if s > 0}
+    def _sizes(points: Mapping[str, DesignPoint]) -> Dict[str, int]:
+        return {t: p.cus for t, p in points.items() if p.cus > 0}
 
 
 def _compositions(total: int, parts: int):
@@ -379,6 +480,15 @@ class ComposedServer:
     tenants reuse each other's warm programs instead of compiling per
     engine.
 
+    With a two-stage :class:`AnalyticalPolicy` (the default) the fabric
+    runs the paper's full DSE in the serving loop: each decide tick it
+    snapshots per-tenant design spaces and observed job lengths, the policy
+    returns Stage-1-optimal design points per tenant (CUs + TP degree +
+    slots + bucket ladder), and ``recompose`` applies the deltas live —
+    CU moves via ``reshard_to``-style migration, knob changes via
+    ``Engine.reconfigure`` (retunes), both re-entering the shared AOT cache
+    under the new fingerprints so warm-compile covers the new programs.
+
     tp: shard each tenant's engine (params + pooled state) over its
         sub-mesh with ``serve_engine_rules`` so granted CUs buy measured
         tokens/s; off -> replicated engines (bit-identical resharding).
@@ -409,7 +519,8 @@ class ComposedServer:
         self._step_no = 0
         self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
         self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
-        self._pending_prewarm: Optional[Tuple[Dict[str, int], str, list]] = None
+        self._pending_prewarm: Optional[
+            Tuple[Dict[str, DesignPoint], str, list]] = None
         # speculative runner-up prewarm bookkeeping
         self.speculative_prewarms = 0
         self._spec_warmed: set = set()
@@ -452,9 +563,12 @@ class ComposedServer:
                 exec_cache=self.exec_cache)
 
     # ------------------------------------------------------------------
-    def submit(self, tenant: str, tokens, max_new_tokens: int = 16) -> int:
-        """Route one request to ``tenant``'s engine; returns its rid."""
-        return self.engines[tenant].submit(tokens, max_new_tokens)
+    def submit(self, tenant: str, tokens, max_new_tokens: int = 16,
+               **kwargs) -> int:
+        """Route one request to ``tenant``'s engine; returns its rid.
+        Extra keywords pass through to the engine's submit (e.g. the
+        enc-dec engine's forced-decoding ``prefix=``)."""
+        return self.engines[tenant].submit(tokens, max_new_tokens, **kwargs)
 
     def sizes(self) -> Dict[str, int]:
         """Current composition: tenant -> CUs held (0 = parked)."""
@@ -506,12 +620,81 @@ class ComposedServer:
             self.autoscale()
         return emitted
 
+    # ------------------------------------------------------------------
+    # serving-side DSE plumbing (Stage-1 inputs, applied design points)
+    # ------------------------------------------------------------------
+    def _design_spaces(self) -> Optional[Dict[str, TenantDesignSpace]]:
+        """Per-tenant Stage-1 search bounds, snapshotted from the engines
+        each decide tick (None when the policy is split-only)."""
+        if self.policy is None or self.policy.stage1 is None:
+            return None
+        out = {}
+        for t, eng in self.engines.items():
+            d = eng.design()
+            arena = getattr(eng, "arena", None)
+            per_slot = (arena.capacity // max(d["slots"], 1)
+                        if arena is not None else 0)
+            out[t] = TenantDesignSpace(
+                wclass=self.classes[t],
+                max_len=eng.cfg.max_len,
+                max_src=getattr(eng, "_max_src", 0),
+                base_slots=d["slots"],
+                base_buckets=tuple(d["buckets"] or ()),
+                base_tp=d["tp"],
+                per_slot_elems=per_slot,
+                tp_allowed=self.rules is not None)
+        return out
+
+    def _applied_points(self) -> Dict[str, DesignPoint]:
+        """The live composition as applied design points (the policy's
+        hysteresis baseline; parked tenants carry cus 0)."""
+        out = {}
+        for t, eng in self.engines.items():
+            c = len(self.subs[t].cu_ids) if t in self.subs else 0
+            d = eng.design()
+            out[t] = DesignPoint(
+                cus=c, tp=d["tp"], slots=d["slots"],
+                buckets=tuple(d["buckets"]) if d["buckets"] else None)
+        return out
+
+    def _knob_delta(self, t: str, p: DesignPoint) -> Dict[str, object]:
+        """Engine-knob overrides that actually change tenant ``t``'s
+        configuration when design point ``p`` commits (None knobs keep; a
+        slot shrink clamps at the live occupancy — streams are migrated,
+        never evicted)."""
+        eng = self.engines[t]
+        d = eng.design()
+        out: Dict[str, object] = {}
+        if p.tp is not None:
+            want = min(p.tp, p.cus)
+            would = min(d["tp"], p.cus) if d["tp"] else p.cus
+            if want != would:
+                out["tp"] = p.tp
+        if p.slots is not None:
+            want_s = max(p.slots, eng.active_count)
+            if want_s != d["slots"]:
+                out["slots"] = want_s
+        if p.buckets is not None and d["buckets"] is not None \
+                and tuple(p.buckets) != tuple(d["buckets"]):
+            out["buckets"] = tuple(p.buckets)
+        return out
+
+    def _no_change(self, points: Mapping[str, DesignPoint]) -> bool:
+        """True when applying ``points`` would change nothing: same CU
+        split AND no engine-knob delta on any composed tenant."""
+        sizes = {t: p.cus for t, p in points.items() if p.cus > 0}
+        if sizes != self._normalized(self.sizes()):
+            return False
+        return all(not self._knob_delta(t, p) for t, p in points.items()
+                   if p.cus > 0)
+
     def autoscale(self) -> Optional[RecompositionEvent]:
         """Consult the policy; apply the recomposition it asks for.
 
         With ``prewarm_async`` the switch is two-phase: kick background
-        compiles for the chosen composition, keep serving on the current
-        one, and commit on a later tick once every executable is warm."""
+        compiles for the chosen composition (at its target design points),
+        keep serving on the current one, and commit on a later tick once
+        every executable is warm."""
         if self._pending_prewarm is not None:
             target, reason, futures = self._pending_prewarm
             if not all(f.done() for f in futures):
@@ -519,37 +702,52 @@ class ComposedServer:
             self._pending_prewarm = None
             for f in futures:
                 f.result()                # surface background build errors
-            if self._normalized(target) == self._normalized(self.sizes()):
+            if self._no_change(target):
                 return None
             return self.recompose(target, reason=reason, overlapped=True)
 
         target, reason = self.policy.decide(
-            self.loads(), self.cfgs, self.sizes(), self.composer.num_cus,
-            classes=self.classes, src_lens=self.src_lens)
-        target = {t: s for t, s in target.items() if s > 0}
-        if target == self._normalized(self.sizes()):
+            self.loads(), self.cfgs, self._applied_points(),
+            self.composer.num_cus, classes=self.classes,
+            src_lens=self.src_lens,
+            lengths={t: eng.recent_lengths()
+                     for t, eng in self.engines.items()},
+            spaces=self._design_spaces())
+        target = {t: p for t, p in target.items() if p.cus > 0}
+        if self._no_change(target):
             # idle decide interval: nothing committed — speculatively warm
-            # the policy's runner-up split so the *next* plausible switch is
-            # already compiled when its gain clears hysteresis
+            # the policy's runner-up design so the *next* plausible switch
+            # is already compiled when its gain clears hysteresis
             self._speculative_prewarm()
             return None
         if self.warm and self.prewarm_async:
-            new_subs, delta = self.composer.recompose(self.subs, target)
-            futures = [self._pool().submit(self.engines[t].warm_compile,
-                                           new_subs[t])
-                       for t in delta.moved + delta.admitted]
+            futures = self._warm_design(target)
             self._pending_prewarm = (target, reason, futures)
             return None
         return self.recompose(target, reason=reason)
 
+    def _warm_design(self, points: Mapping[str, DesignPoint]) -> list:
+        """Submit background warm compiles for a candidate design — every
+        tenant a CU move or a knob delta would touch, each warmed at its
+        target design point's overrides.  Returns the futures."""
+        new_subs, delta = self.composer.recompose(
+            self.subs, {t: p.cus for t, p in points.items()})
+        touched = set(delta.moved + delta.admitted)
+        touched |= {t for t, p in points.items() if self._knob_delta(t, p)}
+        return [self._pool().submit(
+            lambda t=t: self.engines[t].warm_compile(
+                new_subs[t], **self._knob_delta(t, points[t])))
+            for t in sorted(touched)]
+
     def _speculative_prewarm(self) -> None:
-        """Warm the runner-up candidate split in the background.
+        """Warm the runner-up candidate design in the background.
 
         Reuses the ``prewarm_async`` machinery (same single-worker pool, so
         speculative compiles never contend with a committed prewarm) and is
         gated on it: synchronous fabrics shouldn't burn serving time on
-        compositions that may never commit.  Each distinct runner-up is
-        warmed once; ``warm_compile`` itself is idempotent on the shared
+        compositions that may never commit.  Each distinct runner-up —
+        keyed on the FULL design point (composition + per-tenant config) —
+        is warmed once; ``warm_compile`` itself is idempotent on the shared
         executable cache."""
         # surface errors from (and drop) finished speculative compiles
         pending = []
@@ -562,23 +760,21 @@ class ComposedServer:
         ru = self.policy.runner_up if self.policy is not None else None
         if not (self.warm and self.prewarm_async and ru):
             return
-        ru = self._normalized(ru)
-        if not ru or ru == self._normalized(self.sizes()):
+        ru = {t: p for t, p in ru.items() if p.cus > 0}
+        if not ru or self._no_change(ru):
             return
-        key = tuple(sorted(ru.items()))
+        key = tuple(sorted((t, p.cus, p.tp, p.slots,
+                            tuple(p.buckets or ())) for t, p in ru.items()))
         if key in self._spec_warmed:
             return
         if len(self._spec_warmed) > 64:      # long-lived fabric: re-warm ok
             self._spec_warmed.clear()
-        new_subs, delta = self.composer.recompose(self.subs, ru)
-        touched = delta.moved + delta.admitted
-        if not touched:
+        futures = self._warm_design(ru)
+        if not futures:
             return
         self._spec_warmed.add(key)
         self.speculative_prewarms += 1
-        self._spec_futures.extend(
-            self._pool().submit(self.engines[t].warm_compile, new_subs[t])
-            for t in touched)
+        self._spec_futures.extend(futures)
 
     @staticmethod
     def _normalized(sizes: Mapping[str, int]) -> Dict[str, int]:
@@ -590,40 +786,62 @@ class ComposedServer:
                 max_workers=1, thread_name_prefix="prewarm")
         return self._executor
 
-    def recompose(self, target_sizes: Mapping[str, int], *,
+    def recompose(self, target_sizes: Mapping[str, object], *,
                   reason: str = "manual",
                   overlapped: bool = False) -> RecompositionEvent:
-        """Live recomposition: grow/shrink/admit/park tenants.  Only moved
-        tenants pay a state migration; unchanged ones keep their devices.
-        With warming on, the target composition's executables are compiled
+        """Live recomposition: grow/shrink/admit/park tenants AND apply
+        per-tenant design-point deltas (DSE Stage-1 knobs).
+
+        ``target_sizes`` maps tenant -> CU count (int, the pre-DSE contract)
+        or DesignPoint (CUs + TP degree + slots + bucket ladder).  Only
+        moved tenants pay a state migration; unchanged ones keep their
+        devices — but a tenant whose knobs changed with its CU set intact
+        is *retuned* in place (``Engine.reconfigure``, draining nothing:
+        live slots migrate inside the resize).  With warming on, the target
+        composition's executables are compiled at the target design points
         before any state moves, so the post-move step is stall-free."""
         before = self.sizes()
-        new_subs, delta = self.composer.recompose(self.subs, target_sizes)
-        touched = delta.moved + delta.admitted
+        points = {t: (v if isinstance(v, DesignPoint)
+                      else DesignPoint(cus=int(v)))
+                  for t, v in target_sizes.items()}
+        sizes = {t: p.cus for t, p in points.items()}
+        new_subs, delta = self.composer.recompose(self.subs, sizes)
+        knobs = {t: self._knob_delta(t, p) for t, p in points.items()
+                 if p.cus > 0}
+        moved = delta.moved + delta.admitted
+        retuned = tuple(t for t in knobs
+                        if knobs[t] and t not in moved)
+        touched = moved + retuned
         warm_s, warm_builds = 0.0, 0
         if self.warm:
             w0 = time.monotonic()
             for t in touched:
-                warm_builds += self.engines[t].warm_compile(new_subs[t])
+                warm_builds += self.engines[t].warm_compile(
+                    new_subs[t], **knobs.get(t, {}))
             warm_s = time.monotonic() - w0
         t0 = time.monotonic()
+        applied: Dict[str, Dict] = {}
         for t in touched:
             eng = self.engines[t]
-            eng.reshard_to(new_subs[t])
+            out = eng.reconfigure(new_subs[t] if t in moved else None,
+                                  **knobs.get(t, {}))
+            if out:
+                applied[t] = out
             eng.sync()
         self.subs = new_subs
         # the committed move changes device assignments, so a previously
-        # prewarmed runner-up size-split now maps to different sub-meshes
+        # prewarmed runner-up design now maps to different sub-meshes
         # (different mesh fingerprints): let it be warmed again
         self._spec_warmed.clear()
         seconds = time.monotonic() - t0
         event = RecompositionEvent(
             step=self._step_no, sizes_before=before, sizes_after=self.sizes(),
-            moved=touched, unchanged=delta.unchanged,
+            moved=moved, unchanged=delta.unchanged,
             parked=delta.evicted, seconds=seconds, reason=reason,
+            retuned=retuned, design=applied,
             warm_compile_seconds=warm_s, warm_builds=warm_builds,
             overlapped=overlapped)
-        for t in event.moved:
+        for t in touched:
             self._stall_probe[t] = event
         self.events.append(event)
         return event
@@ -682,6 +900,14 @@ class ComposedServer:
             # per-tenant emitted units: tokens for decode/ssm tenants,
             # completed sequences (embeddings) for encoder tenants
             "tokens_emitted": dict(self._tokens_emitted),
+            # applied design points (the serving DSE's Stage-1 knobs)
+            "design_points": {
+                t: {"cus": len(self.subs[t].cu_ids) if t in self.subs else 0,
+                    "tp": d["tp"], "slots": d["slots"],
+                    "buckets": list(d["buckets"]) if d["buckets"] else None}
+                for t, d in ((t, eng.design())
+                             for t, eng in self.engines.items())},
+            "retunes": sum(len(e.retuned) for e in self.events),
             "recompositions": len(self.events),
             "recompose_seconds": [round(e.seconds, 4) for e in self.events],
             "warm_compile_seconds": [round(e.warm_compile_seconds, 4)

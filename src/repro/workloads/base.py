@@ -110,10 +110,17 @@ class Engine(Protocol):
     def pending_tokens(self) -> int: ...
     def arena_utilization(self) -> float: ...
 
-    # -- real-time recomposition ----------------------------------------
+    # -- real-time recomposition / design-point reconfiguration ---------
     def reshard_to(self, sub) -> None: ...
-    def warm_compile(self, sub) -> int: ...
+    def reconfigure(self, sub=None, *, slots: int = None, tp: int = None,
+                    buckets=None) -> Dict[str, Any]: ...
+    def warm_compile(self, sub, *, slots: int = None, tp: int = None,
+                     buckets=None) -> int: ...
     def sync(self) -> None: ...
+
+    # -- serving-DSE inputs/outputs -------------------------------------
+    def design(self) -> Dict[str, Any]: ...
+    def recent_lengths(self) -> Tuple[int, ...]: ...
 
     # -- telemetry (ComposedServer.stats reads these per tenant) --------
     reshard_count: int

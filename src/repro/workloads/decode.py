@@ -36,6 +36,7 @@ Three properties make the engine a real-time-recomposable accelerator
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -73,7 +74,8 @@ def _rules_fp(rules: Optional[part.ShardingRules]):
 @dataclasses.dataclass
 class Request:
     """One submitted request's host-side lifecycle record (``tokens`` is
-    the prompt for decode/ssm engines, the source sequence for enc-dec)."""
+    the prompt for decode/ssm engines, the source sequence — token ids or
+    precomputed (S, d_model) frame embeddings — for enc-dec)."""
 
     rid: int
     tokens: np.ndarray                  # prompt
@@ -86,6 +88,9 @@ class Request:
     # steps).  Runs ahead of len(out_tokens) by the in-flight step under
     # pipelined decode; equal to it otherwise.
     scheduled: int = 0
+    # enc-dec forced decoding: target-prefix token ids prepended (after BOS)
+    # to the decoder prompt; None decodes from BOS alone
+    prefix: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +143,12 @@ class DecodeEngine(EngineTelemetry):
         self.rules = rules
         self._rules_eff = rules or part.ShardingRules(rules={})
         self.reshard_count = 0
+        # tensor-parallel degree over the granted sub-mesh: None = the whole
+        # grant (the pre-DSE default); the serving-side DSE Stage 1 sets it
+        # per design point via reconfigure(tp=...)
+        self._tp: Optional[int] = None
+        self._granted = None               # last granted sub-mesh (unsliced)
+        self._recent_lens: collections.deque = collections.deque(maxlen=256)
         self._per_token_elems = self._per_token_cache_elems()
         self.arena = FlexArena(self._arena_capacity())
         self._queue: List[Request] = []
@@ -174,8 +185,9 @@ class DecodeEngine(EngineTelemetry):
         # the serve dims that shape the compiled program.
         self._exec = exec_cache if exec_cache is not None else ExecutableCache()
         self._own_builds = 0
-        self._cfg_key = (self.workload_class, model.cfg,
-                         cfg.max_slots, cfg.max_len, _rules_fp(rules))
+        self._plan_memo: Dict[int, part.ShardingPlan] = {
+            cfg.max_slots: self._cache_plan}
+        self._cfg_key = self._config_key(cfg.max_slots)
         # seed the bucketed prompt length only for archs that actually pad
         # to it; SSM/hybrid archs prefill at exact lengths (see
         # _prefill_into_slot), and warm_compile must not burn seconds per
@@ -224,6 +236,24 @@ class DecodeEngine(EngineTelemetry):
         """True when the request could never fit a slot (hard reject)."""
         return self._slot_rows(req) > self.cfg.max_len
 
+    def _config_key(self, slots: int, buckets=None) -> Tuple:
+        """Shared-executable-cache config fingerprint at a (possibly
+        prospective) slot count — warm_compile prices candidate design
+        points before they are applied.  ``buckets`` is unused here (decode
+        has no encode phase); the enc-dec engine extends the key with it."""
+        del buckets
+        return (self.workload_class, self.model.cfg, slots,
+                self.cfg.max_len, _rules_fp(self.rules))
+
+    def _plan_for_slots(self, slots: int) -> part.ShardingPlan:
+        """ShardingPlan of the pooled cache at ``slots`` — abstract-eval'd
+        (no device allocation), memoized; lets warm_compile lower programs
+        for a candidate slot count without building the pool."""
+        if slots not in self._plan_memo:
+            ann = jax.eval_shape(lambda: self._init_cache_ann(slots))
+            self._plan_memo[slots] = part.ShardingPlan.of(ann)
+        return self._plan_memo[slots]
+
     # ------------------------------------------------------------------
     def reshard_to(self, sub) -> None:
         """Migrate this engine — params AND live decode state — onto a new
@@ -240,7 +270,10 @@ class DecodeEngine(EngineTelemetry):
         pins across 1/2/4-way TP).
         """
         self._harvest()                 # inflight tokens live on the old mesh
-        mesh = _mesh_of(sub)
+        self._granted = _mesh_of(sub)
+        # the engine computes on the grant restricted to its TP degree (the
+        # serving DSE's per-tenant design knob); None = the whole grant
+        mesh = part.tp_submesh(self._granted, self._tp)
         self.mesh = mesh
         # hot-path executable-cache key: recomputing the device-id tuple per
         # dispatch is a per-step O(devices) Python loop on a pod-scale mesh
@@ -259,6 +292,106 @@ class DecodeEngine(EngineTelemetry):
         """Block until this engine's device state (params + pooled cache) is
         ready — recomposition migration timing and post-move stall probing."""
         jax.block_until_ready((self.params, self.cache))
+
+    # ------------------------------------------------------------------
+    # live design-point reconfiguration (serving DSE Stage 1's knobs)
+    # ------------------------------------------------------------------
+    def design(self) -> Dict[str, Any]:
+        """The engine's currently applied design point (the runtime knobs
+        the serving DSE optimizes): TP degree (None = whole grant), slot
+        count, encode bucket ladder (None for classes without one)."""
+        return {"tp": self._tp, "slots": self.cfg.max_slots, "buckets": None}
+
+    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
+                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
+        """Apply a design-point delta live — the engine-side half of the
+        serving DSE's Stage-1 → fabric loop.  Any subset of:
+
+        * ``sub``     — migrate onto a new sub-accelerator (reshard_to);
+        * ``tp``      — tensor-parallel degree over the grant: params and
+          pooled state reshard onto the first ``tp`` model-axis columns;
+        * ``slots``   — resize the pooled decode cache: live slots are
+          migrated (exact device-side copy) into the new pool, so pinned
+          streams are bit-identical across the resize; never shrinks below
+          the current occupancy (live streams are migrated, not evicted);
+        * ``buckets`` — swap the encode-program ladder (encoder / enc-dec
+          subclasses; numerics-safe because encodes are bucket-invariant).
+
+        Every step re-enters the shared AOT executable cache under the new
+        config/mesh fingerprint, so a preceding ``warm_compile`` with the
+        same overrides makes the first post-reconfigure step stall-free.
+        Returns the knobs actually applied (slot clamps included).
+        """
+        self._harvest()                 # in-flight tokens shaped by old pool
+        applied: Dict[str, Any] = {}
+        if tp is not None and tp != (self._tp or 0):
+            self._tp = max(int(tp), 1)
+            applied["tp"] = self._tp
+        if sub is not None or "tp" in applied:
+            # commit the (new) grant under the (new) degree
+            self.reshard_to(sub if sub is not None else self._granted)
+        if slots is not None and int(slots) != self.cfg.max_slots:
+            applied["slots"] = self._resize_slots(int(slots))
+        b = self._apply_buckets(buckets)
+        if b is not None:
+            applied["buckets"] = b
+        return applied
+
+    def _apply_buckets(self, buckets):
+        """Bucket-ladder hook: plain decode has no encode phase."""
+        del buckets
+        return None
+
+    def _resize_slots(self, slots: int) -> int:
+        """Resize the pooled slot cache live, migrating every live slot.
+
+        The new pool is allocated (sharded on the current mesh), each live
+        slot's cache rows are copied device-side into the lowest new slot
+        ids (an exact copy — decode rows are batch-independent, so pinned
+        streams stay bit-identical), and the host-side slot bookkeeping and
+        admission arena are rebuilt at the new capacity.  Shrinking clamps
+        at the live occupancy: streams are migrated, never evicted.
+        """
+        live = sorted(self._active)
+        slots = max(int(slots), len(live), 1)
+        if slots == self.cfg.max_slots:
+            return slots
+        mapping = {old: new for new, old in enumerate(live)}
+        new_ann = self._init_cache_ann(slots)
+        new_plan = part.ShardingPlan.of(new_ann)
+        new_cache = part.strip(new_ann)
+        if self.mesh is not None:
+            new_cache = jax.device_put(
+                new_cache, new_plan.shardings(self.mesh, self._rules_eff))
+        axes = self.model.cache_slot_axes(new_cache)
+        if live:
+            # one pass per leaf: gather the live slots' rows from the old
+            # pool (exact copy — bit-identical streams) and write them as
+            # a block into the lowest new slot ids; free slots keep their
+            # freshly initialized values
+            new_cache = _migrate_slots(new_cache, self.cache, live, axes)
+        self.cache = new_cache
+        self._cache_plan = new_plan
+        self._slot_axes = axes
+        self.cfg = dataclasses.replace(self.cfg, max_slots=slots)
+        self._plan_memo[slots] = new_plan
+        self._cfg_key = self._config_key(slots)
+        # host bookkeeping follows the migrated slots
+        self._active = {mapping[s]: r for s, r in self._active.items()}
+        for s, req in self._active.items():
+            req.slot = s
+        self._inject = {mapping[s]: v for s, v in self._inject.items()
+                        if s in mapping}
+        self._free_slots = list(range(len(live), slots))
+        # admission arena mirrors the new pool capacity; live views re-admit
+        # (len(live) <= slots and per-request rows <= per-slot rows, so the
+        # re-allocation cannot fail)
+        arena = FlexArena(self._arena_capacity())
+        for req in self._active.values():
+            req.view = arena.alloc(self._slot_rows(req),
+                                   self._per_token_elems, ROLE_ACT)
+        self.arena = arena
+        return slots
 
     # ------------------------------------------------------------------
     # compiled executables (build counting: EngineTelemetry)
@@ -288,35 +421,37 @@ class DecodeEngine(EngineTelemetry):
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         return first, pool
 
-    def _build_decode(self, mesh):
-        B = self.cfg.max_slots
+    def _build_decode(self, mesh, slots: Optional[int] = None):
+        B = slots or self.cfg.max_slots
+        plan = self._plan_for_slots(B)
         rules = self._rules_eff
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = (
                 NamedSharding(mesh, P()),
-                self._cache_plan.shardings(mesh, rules))
+                plan.shardings(mesh, rules))
         fn = jax.jit(self._decode_fn, donate_argnums=(1,), **kwargs)
         return fn.lower(
             self._param_plan.avals(mesh, rules),
-            self._cache_plan.avals(mesh, rules),
+            plan.avals(mesh, rules),
             self._vec_aval(mesh, jnp.int32, (B,)),
             self._vec_aval(mesh, jnp.int32, (B,)),
             self._vec_aval(mesh, jnp.bool_, (B,)),
             self._vec_aval(mesh, jnp.bool_, (B,)),
         ).compile()
 
-    def _build_prefill(self, mesh, nb: int):
+    def _build_prefill(self, mesh, nb: int, slots: Optional[int] = None):
+        plan = self._plan_for_slots(slots or self.cfg.max_slots)
         rules = self._rules_eff
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = (
                 NamedSharding(mesh, P()),
-                self._cache_plan.shardings(mesh, rules))
+                plan.shardings(mesh, rules))
         fn = jax.jit(self._prefill_fn, donate_argnums=(1,), **kwargs)
         return fn.lower(
             self._param_plan.avals(mesh, rules),
-            self._cache_plan.avals(mesh, rules),
+            plan.avals(mesh, rules),
             self._single_plan.avals(mesh, rules),
             self._vec_aval(mesh, jnp.int32, (1, nb)),
             self._vec_aval(mesh, jnp.int32, ()),
@@ -334,22 +469,31 @@ class DecodeEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_prefill(mesh, nb)))
 
-    def warm_compile(self, sub) -> int:
+    def warm_compile(self, sub, *, slots: Optional[int] = None,
+                     tp: Optional[int] = None, buckets=None) -> int:
         """Pre-compile this engine's decode + known prefill executables for
         a *candidate* sub-accelerator, without moving any state.  Called by
         the fabric before committing a recomposition (possibly from a
         background thread) so the first step on the new composition hits a
-        warm executable.  Returns the number of cold builds performed."""
-        mesh = _mesh_of(sub)
+        warm executable.  The keyword overrides warm a candidate *design
+        point* (prospective slot count / TP degree / bucket ladder — the
+        serving DSE's Stage-1 knobs) rather than the engine's current
+        configuration.  Returns the number of cold builds performed."""
+        del buckets                      # no encode phase on plain decode
+        mesh = part.tp_submesh(_mesh_of(sub),
+                               tp if tp is not None else self._tp)
+        B = slots or self.cfg.max_slots
+        key = self._config_key(B)
         fp = mesh_fingerprint(mesh)
-        built = self._exec.ensure(("decode", self._cfg_key, fp),
-                                  self._counted(lambda: self._build_decode(mesh)))
+        built = self._exec.ensure(
+            ("decode", key, fp),
+            self._counted(lambda: self._build_decode(mesh, B)))
         # snapshot: the serving thread appends new prefill lengths while a
         # background prewarm iterates
         for nb in sorted(tuple(self._prefill_lens)):
             built += self._exec.ensure(
-                ("prefill", self._cfg_key, fp, nb),
-                self._counted(lambda nb=nb: self._build_prefill(mesh, nb)))
+                ("prefill", key, fp, nb),
+                self._counted(lambda nb=nb: self._build_prefill(mesh, nb, B)))
         return built
 
     # ------------------------------------------------------------------
@@ -382,10 +526,16 @@ class DecodeEngine(EngineTelemetry):
         """KV-arena pressure, 0..1 (admission-accounting fill fraction)."""
         return self.arena.utilization()
 
+    def recent_lengths(self) -> Tuple[int, ...]:
+        """Recently submitted prompt/source lengths (bounded window) — the
+        observed-traffic signal the serving DSE's Stage-1 bucket-ladder
+        search optimizes against."""
+        return tuple(self._recent_lens)
+
     def stats(self) -> Dict[str, Any]:
         """Load/telemetry snapshot: queue depth (requests), live slots,
-        owed decode steps, arena pressure (0..1), migrations performed and
-        cold executable builds."""
+        owed decode steps, arena pressure (0..1), migrations performed,
+        cold executable builds and the applied design point."""
         return {
             "workload_class": self.workload_class,
             "queue_depth": self.queue_depth,
@@ -394,6 +544,7 @@ class DecodeEngine(EngineTelemetry):
             "arena_utilization": round(self.arena_utilization(), 4),
             "reshard_count": self.reshard_count,
             "compile_builds": self.compile_builds,
+            "design": self.design(),
         }
 
     # ------------------------------------------------------------------
@@ -402,8 +553,9 @@ class DecodeEngine(EngineTelemetry):
         ones that could never fit a slot are rejected-but-recorded."""
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(tokens, np.int32),
-                                   max_new_tokens))
+        toks = np.asarray(tokens, np.int32)
+        self._recent_lens.append(len(toks))
+        self._queue.append(Request(rid, toks, max_new_tokens))
         return rid
 
     # ------------------------------------------------------------------
@@ -599,3 +751,23 @@ def _write_slot(pool_cache: PyTree, single_cache: PyTree, slot,
                                             start)
 
     return jax.tree.map(write, slot_axes, pool_cache, single_cache)
+
+
+def _migrate_slots(dst_cache: PyTree, src_cache: PyTree,
+                   src_slots: List[int], slot_axes: PyTree) -> PyTree:
+    """Copy ``src_slots``' rows from ``src_cache`` into slots [0, n) of
+    ``dst_cache`` (pool→pool; the pools may differ in slot count but share
+    every other dim).  One gather + one block write per leaf — an exact
+    device-side copy, because live slot migration during a
+    ``reconfigure(slots=...)`` resize must preserve streams bit-for-bit."""
+    idx = jnp.asarray(src_slots, jnp.int32)
+
+    def cp(ax, dst, src):
+        if ax < 0:
+            return dst
+        block = jnp.take(src, idx, axis=ax)
+        start = (0,) * dst.ndim
+        return jax.lax.dynamic_update_slice(dst, block.astype(dst.dtype),
+                                            start)
+
+    return jax.tree.map(cp, slot_axes, dst_cache, src_cache)

@@ -10,38 +10,43 @@ opposite bound resources:
   (:meth:`Model.encode`'s encoder stack).  The engine batches the encodes of
   every request admitted in the same step and compiles the batched program
   **per source-length bucket** (``ServeConfig.len_buckets``), so short
-  sources skip the padded FLOPs of the full-capacity program;
+  sources skip the padded FLOPs of the full-capacity program.  Each row's
+  key padding is masked (``Model.encode(lens=...)``), so a job's encode is
+  bit-identical across buckets — the ladder is pure performance tuning, and
+  the serving DSE's Stage 1 can swap it live (``reconfigure(buckets=...)``)
+  without touching numerics;
 * **decode** — pooled-slot autoregressive decode on the shared
   continuous-batching substrate of :class:`DecodeEngine` (slots, pipelined
-  dispatch, AOT executables, ``ShardingPlan`` TP, live ``reshard_to``),
-  where each step additionally reads the slot's **cross-attention source
-  cache**: per-layer (max_slots, max_src_len, kv_heads, head_dim) K/V
-  computed from the encoder output once at admission and masked per row by
-  the slot's true source length (``cache["src_len"]``, an int32 vector the
-  model side threads through ``init_cache``/``decode_step``).
+  dispatch, AOT executables, ``ShardingPlan`` TP, live ``reshard_to`` /
+  ``reconfigure``), where each step additionally reads the slot's
+  **cross-attention source cache**: per-layer (max_slots, max_src_len,
+  kv_heads, head_dim) K/V computed from the encoder output once at admission
+  and masked per row by the slot's true source length (``cache["src_len"]``,
+  an int32 vector the model side threads through
+  ``init_cache``/``decode_step``).
+
+The job contract (``submit(source, max_new_tokens, prefix=...)``):
+
+* ``source`` is the source sequence — int token ids (embedded as stand-in
+  frames, the audio frontend being a STUB) **or** precomputed frame
+  embeddings as a float (S, d_model) array from a real frontend; both run
+  the same bidirectional encoder and pay the same per-frame arena rows;
+* ``prefix`` is an optional target-token prefix for **forced decoding**:
+  the decoder prompt becomes ``[bos] + prefix`` (prefilled through the
+  fused slot-prefill program at a bucketed prompt length), and the stream
+  then continues greedily for ``max_new_tokens`` — without it the decoder
+  starts from ``ServeConfig.bos_id`` alone.
 
 Admission accounting covers *both* caches: a request holds
-``src_len + 1 + max_new_tokens`` arena rows (source frames + BOS + decode
-budget — cross K/V and decoder KV have the same per-row footprint of
-``2·kv_heads·head_dim`` elements per layer), so the FlexArena fit check
-backpressures on source-cache pressure exactly like it does on KV pressure.
-
-The job contract: ``submit(tokens)`` takes the SOURCE sequence (embedded as
-stand-in frames — the audio frontend is a STUB per the assignment); the
-decoder starts from ``ServeConfig.bos_id`` and emits ``max_new_tokens``
-target tokens through the inherited ``step()``/``results()`` stream API.
-
-Determinism note: sources are right-padded to their bucket and the
-bidirectional encoder attends its own row's padding, so encoder outputs
-depend (numerically, deterministically) on the bucket — a job of length L
-always lands in the same bucket, so streams are reproducible and invariant
-across recompositions (pinned in tests/test_workloads.py).  Cross-attention
-itself never reads padded positions: prefill and decode both mask at the
-true source length.
+``src_len + len(decoder prompt) + max_new_tokens`` arena rows (source frames
++ BOS/prefix + decode budget — cross K/V and decoder KV have the same
+per-row footprint of ``2·kv_heads·head_dim`` elements per layer), so the
+FlexArena fit check backpressures on source-cache pressure exactly like it
+does on KV pressure.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,12 +61,18 @@ from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import (DecodeEngine, Request, ServeConfig,
                                     _mesh_of, _write_slot)
 
+# source kinds a request's batched encode groups by: token ids embedded as
+# stand-in frames (frontend STUB) vs precomputed frame embeddings
+TOKENS, FRAMES = "tokens", "frames"
+
 
 class EncDecEngine(DecodeEngine):
     """Full encode→decode serving on enc-dec archs (the ``encdec`` workload
-    class): batched bucketed source encode at admission, per-slot
-    cross-attention source cache, inherited pooled-slot decode (see the
-    module docstring; the Engine-protocol contract is docs/workloads.md)."""
+    class): batched bucketed source encode at admission (token or
+    precomputed-frame sources), per-slot cross-attention source cache,
+    forced decoding from target prefixes, inherited pooled-slot decode (see
+    the module docstring; the Engine-protocol contract is
+    docs/workloads.md)."""
 
     workload_class = "encdec"
 
@@ -77,24 +88,35 @@ class EncDecEngine(DecodeEngine):
                 "EncoderEngine for embedding-only traffic)")
         # source-cache capacity and encode-program buckets must exist before
         # super().__init__ builds the pooled/single caches through the
-        # _init_cache_ann hook
+        # _init_cache_ann hook (and the config key through _config_key)
         self._max_src = cfg.max_src_len or cfg.max_len
         self._src_buckets = length_buckets(cfg.len_buckets, self._max_src)
         self._bucket_hits: Dict[int, int] = {b: 0 for b in self._src_buckets}
+        # decoder-prompt program lengths seen (1 = the BOS-only default;
+        # forced decoding adds bucketed prefix lengths) and source kinds
+        # seen — both bound what warm_compile builds per candidate
+        self._dec_lens = {1}
+        self._src_kinds = {TOKENS}
         super().__init__(model, params, cfg, mesh=mesh, rules=rules,
                          exec_cache=exec_cache)
-        # the serve dims that shape enc-dec programs extend the shared-cache
-        # config fingerprint: two tenants differing only in source capacity
-        # or bucket ladder must not share compiled executables
-        self._cfg_key = self._cfg_key + (self._max_src, self._src_buckets)
-        # the decoder prompt is always [bos]: the token-bucketed prefill
-        # programs of the base engine never dispatch, so warm_compile must
-        # not burn time building them per candidate composition
+        # the token-bucketed prefill programs of the base engine never
+        # dispatch (enc-dec prefills through the fused slot-prefill
+        # program), so warm_compile must not burn time building them
         self._prefill_lens = set()
 
     # ------------------------------------------------------------------
     # cache shapes / admission accounting (hooks from DecodeEngine)
     # ------------------------------------------------------------------
+    def _config_key(self, slots: int, buckets=None) -> Tuple:
+        """The serve dims that shape enc-dec programs extend the shared-cache
+        config fingerprint: two tenants differing only in source capacity or
+        bucket ladder must not share compiled executables.  ``buckets``
+        prices a prospective ladder (warm_compile on a candidate design
+        point)."""
+        ladder = (length_buckets(buckets, self._max_src)
+                  if buckets is not None else self._src_buckets)
+        return super()._config_key(slots) + (self._max_src, ladder)
+
     def _init_cache_ann(self, batch: int):
         """Decoder KV pool plus per-slot cross-attention source cache
         (per-layer (batch, max_src, kv_heads, head_dim) K/V and the (batch,)
@@ -109,127 +131,248 @@ class EncDecEngine(DecodeEngine):
         return (self.cfg.max_slots * (self.cfg.max_len + self._max_src)
                 * self._per_token_elems)
 
+    def _dec_prompt(self, req: Request) -> np.ndarray:
+        """The decoder prompt: BOS plus the forced-decoding prefix."""
+        bos = np.asarray([self.cfg.bos_id], np.int32)
+        if req.prefix is None or len(req.prefix) == 0:
+            return bos
+        return np.concatenate([bos, np.asarray(req.prefix, np.int32)])
+
     def _slot_rows(self, req: Request) -> int:
         """Arena rows a job occupies: its source frames (cross-cache side)
-        plus BOS + generation budget (decoder-KV side)."""
-        return len(req.tokens) + 1 + req.max_new_tokens
+        plus the decoder prompt (BOS + forced prefix) + generation budget
+        (decoder-KV side)."""
+        return (len(req.tokens) + len(self._dec_prompt(req))
+                + req.max_new_tokens)
 
     def _oversized(self, req: Request) -> bool:
-        """Hard reject: source longer than the cross cache, or a generation
-        budget (plus BOS) overflowing a decoder slot."""
+        """Hard reject: source longer than the cross cache, or a decoder
+        prompt (BOS + prefix) plus generation budget overflowing a slot."""
         return (len(req.tokens) > self._max_src
-                or 1 + req.max_new_tokens > self.cfg.max_len)
+                or len(self._dec_prompt(req)) + req.max_new_tokens
+                > self.cfg.max_len)
+
+    def _dec_bucket(self, length: int) -> int:
+        """Padded decoder-prompt program length: the BOS-only fast path
+        compiles at 1; forced-decode prompts pad to the prefill bucket
+        (clamped to the slot capacity)."""
+        if length <= 1:
+            return 1
+        return min(self._bucketed(length), self.cfg.max_len)
 
     # ------------------------------------------------------------------
     # compiled executables: batched bucketed encode + per-slot prefill
     # (decode is inherited — the pooled cache carries the cross state)
     # ------------------------------------------------------------------
-    def _encode_fn(self, params, tokens):
-        """(E, S_b) right-padded source tokens -> (E, S_b, d) encoder hidden
-        states (bidirectional stack; token embeddings stand in for the
-        stubbed audio frontend's precomputed frames)."""
-        return self.model.encode(params, {"tokens": tokens})
+    def _encode_fn(self, params, tokens, lens):
+        """(E, S_b) right-padded source tokens + (E,) valid lengths ->
+        (E, S_b, d) encoder hidden states (bidirectional stack; token
+        embeddings stand in for the stubbed audio frontend's precomputed
+        frames).  ``lens`` masks each row's key padding, so valid rows are
+        bit-identical across buckets."""
+        return self.model.encode(params, {"tokens": tokens}, lens=lens)
 
-    def _build_encode(self, mesh, sb: int):
-        E = self.cfg.max_slots
+    def _encode_frames_fn(self, params, frames, lens):
+        """(E, S_b, d) right-padded precomputed frame embeddings + (E,)
+        valid frame counts -> (E, S_b, d) encoder hidden states (a real
+        frontend's output enters here instead of re-embedding tokens)."""
+        return self.model.encode(params, {"frames": frames}, lens=lens)
+
+    def _build_encode(self, mesh, sb: int, kind: str = TOKENS,
+                      slots: Optional[int] = None):
+        E = slots or self.cfg.max_slots
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = NamedSharding(mesh, P())
-        fn = jax.jit(self._encode_fn, **kwargs)
+        if kind == FRAMES:
+            fn = jax.jit(self._encode_frames_fn, **kwargs)
+            src_aval = self._vec_aval(mesh, self.model.cfg.activation_dtype,
+                                      (E, sb, self.model.cfg.d_model))
+        else:
+            fn = jax.jit(self._encode_fn, **kwargs)
+            src_aval = self._vec_aval(mesh, jnp.int32, (E, sb))
         return fn.lower(
             self._param_plan.avals(mesh, self._rules_eff),
-            self._vec_aval(mesh, jnp.int32, (E, sb)),
+            src_aval,
+            self._vec_aval(mesh, jnp.int32, (E,)),
         ).compile()
 
     def _encdec_prefill_fn(self, params, pool_cache, single, enc, idx,
-                           src_len, slot):
+                           src_len, slot, dec_toks, dec_len):
         """Write one encoded job into its slot: row ``idx`` of the batched
         encoder output becomes the slot's cross K/V (masked at ``src_len``),
-        and a BOS-only decoder prefill seeds the slot's KV + first token."""
+        and a decoder prefill over the (padded) decoder prompt — BOS plus
+        any forced-decoding prefix, valid length ``dec_len`` — seeds the
+        slot's KV and the first generated token."""
         enc_row = jax.lax.dynamic_slice_in_dim(enc, idx, 1, axis=0)
-        toks = jnp.full((1, 1), self.cfg.bos_id, jnp.int32)
         logits, filled = self.model.prefill(
-            params, {"tokens": toks}, single, enc_out=enc_row,
-            src_len=src_len)
+            params, {"tokens": dec_toks}, single, enc_out=enc_row,
+            src_len=src_len, true_len=dec_len)
         pool = _write_slot(pool_cache, filled, slot, self._slot_axes)
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         return first, pool
 
-    def _build_prefill_encdec(self, mesh, sb: int):
-        E = self.cfg.max_slots
+    def _build_prefill_encdec(self, mesh, sb: int, nb: int,
+                              slots: Optional[int] = None):
+        E = slots or self.cfg.max_slots
+        plan = self._plan_for_slots(E)
         rules = self._rules_eff
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = (
                 NamedSharding(mesh, P()),
-                self._cache_plan.shardings(mesh, rules))
+                plan.shardings(mesh, rules))
         fn = jax.jit(self._encdec_prefill_fn, donate_argnums=(1,), **kwargs)
         act = self.model.cfg.activation_dtype
         return fn.lower(
             self._param_plan.avals(mesh, rules),
-            self._cache_plan.avals(mesh, rules),
+            plan.avals(mesh, rules),
             self._single_plan.avals(mesh, rules),
             self._vec_aval(mesh, act, (E, sb, self.model.cfg.d_model)),
             self._vec_aval(mesh, jnp.int32, ()),
             self._vec_aval(mesh, jnp.int32, ()),
             self._vec_aval(mesh, jnp.int32, ()),
+            self._vec_aval(mesh, jnp.int32, (1, nb)),
+            self._vec_aval(mesh, jnp.int32, ()),
         ).compile()
 
-    def _encode_exec(self, mesh, sb: int):
-        key = ("encdec_encode", self._cfg_key, self._mesh_fp, sb)
+    def _encode_exec(self, mesh, sb: int, kind: str = TOKENS):
+        key = ("encdec_encode", self._cfg_key, self._mesh_fp, sb, kind)
+        self._src_kinds.add(kind)
         return self._exec.get_or_build(
-            key, self._counted(lambda: self._build_encode(mesh, sb)))
+            key, self._counted(lambda: self._build_encode(mesh, sb, kind)))
 
-    def _prefill_exec_encdec(self, mesh, sb: int):
-        key = ("encdec_prefill", self._cfg_key, self._mesh_fp, sb)
+    def _prefill_exec_encdec(self, mesh, sb: int, nb: int):
+        key = ("encdec_prefill", self._cfg_key, self._mesh_fp, sb, nb)
+        self._dec_lens.add(nb)
         return self._exec.get_or_build(
-            key, self._counted(lambda: self._build_prefill_encdec(mesh, sb)))
+            key, self._counted(
+                lambda: self._build_prefill_encdec(mesh, sb, nb)))
 
-    def warm_compile(self, sub) -> int:
-        """Pre-compile decode plus every bucket's encode and prefill
-        programs for a candidate sub-accelerator (no state moves).  The
-        bucket ladder is static, so this fully covers the composition.
-        Returns the number of cold builds performed."""
-        mesh = _mesh_of(sub)
+    def warm_compile(self, sub, *, slots: Optional[int] = None,
+                     tp: Optional[int] = None, buckets=None) -> int:
+        """Pre-compile decode plus every (bucket, source kind, decoder
+        prompt length) encode/prefill program for a candidate
+        sub-accelerator — at a candidate *design point* when the keyword
+        overrides are given (prospective slot count / TP degree / bucket
+        ladder) — without moving any state.  The ladder and the observed
+        decoder-prompt lengths are finite, so this fully covers the
+        composition.  Returns the number of cold builds performed."""
+        mesh = part.tp_submesh(_mesh_of(sub),
+                               tp if tp is not None else self._tp)
+        E = slots or self.cfg.max_slots
+        key = self._config_key(E, buckets)
+        ladder = (length_buckets(buckets, self._max_src)
+                  if buckets is not None else self._src_buckets)
         fp = mesh_fingerprint(mesh)
         built = self._exec.ensure(
-            ("decode", self._cfg_key, fp),
-            self._counted(lambda: self._build_decode(mesh)))
-        for sb in self._src_buckets:
-            built += self._exec.ensure(
-                ("encdec_encode", self._cfg_key, fp, sb),
-                self._counted(lambda sb=sb: self._build_encode(mesh, sb)))
-            built += self._exec.ensure(
-                ("encdec_prefill", self._cfg_key, fp, sb),
-                self._counted(
-                    lambda sb=sb: self._build_prefill_encdec(mesh, sb)))
+            ("decode", key, fp),
+            self._counted(lambda: self._build_decode(mesh, E)))
+        # snapshots: the serving thread may add kinds/lengths while a
+        # background prewarm iterates
+        kinds = sorted(self._src_kinds)
+        dec_lens = sorted(self._dec_lens)
+        for sb in ladder:
+            for kind in kinds:
+                built += self._exec.ensure(
+                    ("encdec_encode", key, fp, sb, kind),
+                    self._counted(
+                        lambda sb=sb, kind=kind:
+                        self._build_encode(mesh, sb, kind, E)))
+            for nb in dec_lens:
+                built += self._exec.ensure(
+                    ("encdec_prefill", key, fp, sb, nb),
+                    self._counted(
+                        lambda sb=sb, nb=nb:
+                        self._build_prefill_encdec(mesh, sb, nb, E)))
         return built
 
     # ------------------------------------------------------------------
-    # admission: one batched encode per bucket group, then per-slot writes
+    # design-point knobs (serving DSE Stage 1)
+    # ------------------------------------------------------------------
+    def design(self) -> Dict[str, Any]:
+        out = super().design()
+        out["buckets"] = self._src_buckets
+        return out
+
+    def _apply_buckets(self, buckets):
+        """Swap the source-length program ladder live.  Numerics-safe:
+        encodes mask their key padding, so a job's stream is identical in
+        any bucket — only the padded-FLOP profile changes."""
+        if buckets is None:
+            return None
+        ladder = length_buckets(buckets, self._max_src)
+        if ladder == self._src_buckets:
+            return None
+        self._src_buckets = ladder
+        self._bucket_hits = {b: self._bucket_hits.get(b, 0) for b in ladder}
+        self._cfg_key = self._config_key(self.cfg.max_slots)
+        return ladder
+
+    # ------------------------------------------------------------------
+    # work ingestion: token or precomputed-frame sources, forced prefixes
+    # ------------------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 16, *,
+               prefix=None) -> int:
+        """Queue one encode→decode job; returns its rid.
+
+        ``tokens`` is the SOURCE sequence: int token ids (embedded as
+        stand-in frames — frontend STUB) or a float (S, d_model) array of
+        precomputed frame embeddings.  ``prefix`` forces decoding: the
+        decoder prompt becomes [bos] + prefix before generation starts.
+        Requests never vanish: oversized ones are rejected-but-recorded."""
+        rid = self._next_rid
+        self._next_rid += 1
+        src = np.asarray(tokens)
+        if src.ndim == 2:                      # precomputed frame embeddings
+            src = src.astype(np.dtype(self.model.cfg.activation_dtype))
+        else:
+            src = src.astype(np.int32)
+        pre = None
+        if prefix is not None and len(prefix) > 0:
+            pre = np.asarray(prefix, np.int32)
+        self._recent_lens.append(len(src))
+        self._queue.append(Request(rid, src, max_new_tokens, prefix=pre))
+        return rid
+
+    # ------------------------------------------------------------------
+    # admission: one batched encode per (bucket, kind) group, then
+    # per-slot fused prefills
     # ------------------------------------------------------------------
     def _prefill_admitted(self, reqs: List[Request]) -> None:
-        by_bucket: Dict[int, List[Request]] = {}
+        by_group: Dict[Tuple[int, str], List[Request]] = {}
         for req in reqs:
-            by_bucket.setdefault(
-                pick_bucket(self._src_buckets, len(req.tokens)),
-                []).append(req)
+            kind = FRAMES if req.tokens.ndim == 2 else TOKENS
+            sb = pick_bucket(self._src_buckets, len(req.tokens))
+            by_group.setdefault((sb, kind), []).append(req)
         E = self.cfg.max_slots
-        for sb in sorted(by_bucket):
-            group = by_bucket[sb]
+        d = self.model.cfg.d_model
+        act = np.dtype(self.model.cfg.activation_dtype)
+        for sb, kind in sorted(by_group):
+            group = by_group[(sb, kind)]
             for at in range(0, len(group), E):
                 chunk = group[at:at + E]
-                toks = np.zeros((E, sb), np.int32)
+                if kind == FRAMES:
+                    src = np.zeros((E, sb, d), act)
+                else:
+                    src = np.zeros((E, sb), np.int32)
+                lens = np.zeros((E,), np.int32)
                 for i, req in enumerate(chunk):
-                    toks[i, :len(req.tokens)] = req.tokens
-                enc = self._encode_exec(self.mesh, sb)(self.params, toks)
-                exe = self._prefill_exec_encdec(self.mesh, sb)
+                    src[i, :len(req.tokens)] = req.tokens
+                    lens[i] = len(req.tokens)
+                enc = self._encode_exec(self.mesh, sb, kind)(
+                    self.params, src, lens)
                 for i, req in enumerate(chunk):
                     self._bucket_hits[sb] += 1
+                    dec = self._dec_prompt(req)
+                    nb = self._dec_bucket(len(dec))
+                    toks = np.zeros((1, nb), np.int32)
+                    toks[0, :len(dec)] = dec
+                    exe = self._prefill_exec_encdec(self.mesh, sb, nb)
                     first_dev, self.cache = exe(
                         self.params, self.cache, self._single, enc,
                         np.int32(i), np.int32(len(req.tokens)),
-                        np.int32(req.slot))
+                        np.int32(req.slot), toks, np.int32(len(dec)))
                     first = int(jax.device_get(first_dev))
                     req.out_tokens.append(first)
                     req.scheduled = 1

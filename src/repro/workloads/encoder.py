@@ -18,21 +18,23 @@ Design (throughput-oriented):
   step groups its jobs by each job's OWN smallest fitting bucket and runs
   one batched forward per group, cutting the padded FLOPs of short
   embedding jobs.  The bucket ladder is static, so ``warm_compile`` still
-  fully covers a candidate composition, and a job's embedding never
-  depends on what it was co-batched with: the bucket — hence the row
-  padding a bidirectional stack sees — is a function of the job's length
-  alone, and attention mixes positions, never batch rows.  ``stats()``
-  reports per-bucket hit counts (jobs served per bucket);
+  fully covers a candidate composition — and the ladder is a *runtime
+  design knob*: ``reconfigure(buckets=...)`` swaps it live (the serving-side
+  DSE Stage 1 picks it from observed job lengths).  ``stats()`` reports
+  per-bucket hit counts (jobs served per bucket);
 * each job's output is the masked mean over its valid positions of
   :meth:`Model.encode` hidden states, in fp32 — a (d_model,) embedding.
   Causal stacks are padding-proof by construction; bidirectional encoder
-  stacks see their own right-padding only, deterministically.
+  stacks mask each row's own key padding (``Model.encode(lens=...)``), so a
+  job's embedding is bit-identical across bucket ladders — which is what
+  makes the live ladder swap numerics-safe.
 
 Jobs longer than ``max_len`` are rejected-but-recorded (empty embedding),
 mirroring the decode engine's contract that requests never vanish.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -85,11 +87,12 @@ class EncoderEngine(EngineTelemetry):
                 "model.init(...) without strip() when rules are given")
         self._exec = exec_cache if exec_cache is not None else ExecutableCache()
         self._own_builds = 0
+        self._tp: Optional[int] = None
+        self._granted = None
+        self._recent_lens: collections.deque = collections.deque(maxlen=256)
         self._buckets = length_buckets(cfg.len_buckets, cfg.max_len)
         self._bucket_hits: Dict[int, int] = {b: 0 for b in self._buckets}
-        self._cfg_key = (self.workload_class, model.cfg,
-                         cfg.max_slots, cfg.max_len, self._buckets,
-                         _rules_fp(rules))
+        self._cfg_key = self._config_key(cfg.max_slots)
         self._queue: List[EncodeJob] = []
         self._finished: Dict[int, List[float]] = {}
         self.finished_cap = 10_000
@@ -99,12 +102,23 @@ class EncoderEngine(EngineTelemetry):
         self.reshard_to(mesh)
         self.reshard_count = 0         # construction placement isn't a move
 
+    def _config_key(self, slots: int, buckets=None) -> Tuple:
+        """Shared-executable-cache config fingerprint at a (possibly
+        prospective) design point — batch size and bucket ladder shape the
+        compiled programs, so both are in the key."""
+        ladder = (length_buckets(buckets, self.cfg.max_len)
+                  if buckets is not None else self._buckets)
+        return (self.workload_class, self.model.cfg, slots,
+                self.cfg.max_len, ladder, _rules_fp(self.rules))
+
     # ------------------------------------------------------------------
     def reshard_to(self, sub) -> None:
         """Move the engine onto a new composed sub-accelerator.  Encoder
         jobs complete within the step that runs them, so the only device
-        state is the params pytree — one sharded→sharded device_put."""
-        mesh = _mesh_of(sub)
+        state is the params pytree — one sharded→sharded device_put (onto
+        the grant restricted to the engine's TP degree)."""
+        self._granted = _mesh_of(sub)
+        mesh = part.tp_submesh(self._granted, self._tp)
         self.mesh = mesh
         self._mesh_fp = mesh_fingerprint(mesh)
         if mesh is not None:
@@ -117,20 +131,65 @@ class EncoderEngine(EngineTelemetry):
         jax.block_until_ready(self.params)
 
     # ------------------------------------------------------------------
+    # live design-point reconfiguration (serving DSE Stage 1's knobs)
+    # ------------------------------------------------------------------
+    def design(self) -> Dict[str, Any]:
+        """Currently applied design point: TP degree (None = whole grant),
+        batch slots per step, and the sequence-length bucket ladder."""
+        return {"tp": self._tp, "slots": self.cfg.max_slots,
+                "buckets": self._buckets}
+
+    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
+                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
+        """Apply a design-point delta live.  Encoder jobs hold no
+        cross-step device state, so every knob is a host-side swap (plus a
+        params reshard for ``sub``/``tp``): ``slots`` resizes the batched
+        program's job count per step, ``buckets`` swaps the padded-length
+        program ladder (numerics-safe — encodes mask their key padding, so
+        embeddings are bucket-invariant).  Returns the applied knobs."""
+        applied: Dict[str, Any] = {}
+        if tp is not None and tp != (self._tp or 0):
+            self._tp = max(int(tp), 1)
+            applied["tp"] = self._tp
+        if sub is not None or "tp" in applied:
+            self.reshard_to(sub if sub is not None else self._granted)
+        if slots is not None and int(slots) != self.cfg.max_slots:
+            self.cfg = dataclasses.replace(self.cfg,
+                                           max_slots=max(int(slots), 1))
+            applied["slots"] = self.cfg.max_slots
+        if buckets is not None:
+            ladder = length_buckets(buckets, self.cfg.max_len)
+            if ladder != self._buckets:
+                self._buckets = ladder
+                self._bucket_hits = {b: self._bucket_hits.get(b, 0)
+                                     for b in ladder}
+                applied["buckets"] = ladder
+        if applied:
+            self._cfg_key = self._config_key(self.cfg.max_slots)
+        return applied
+
+    def recent_lengths(self) -> Tuple[int, ...]:
+        """Recently submitted job lengths (bounded window) — what the
+        serving DSE's Stage-1 bucket-ladder search optimizes against."""
+        return tuple(self._recent_lens)
+
+    # ------------------------------------------------------------------
     # compiled executable: one fixed-shape batched encode per mesh
     # (build counting: EngineTelemetry)
     # ------------------------------------------------------------------
     def _encode_fn(self, params, tokens, lens):
         """(B, S) padded tokens + (B,) valid lengths -> (B, d) fp32 masked
-        mean-pooled embeddings."""
-        x = self.model.encode(params, {"tokens": tokens})
+        mean-pooled embeddings.  ``lens`` both masks the mean-pool AND (on
+        bidirectional stacks) the attention's key padding, so a job's
+        embedding is independent of the bucket it ran in."""
+        x = self.model.encode(params, {"tokens": tokens}, lens=lens)
         S = x.shape[1]
         mask = (jnp.arange(S)[None, :] < lens[:, None]).astype(jnp.float32)
         pooled = jnp.einsum("bsd,bs->bd", x.astype(jnp.float32), mask)
         return pooled / jnp.maximum(lens, 1).astype(jnp.float32)[:, None]
 
-    def _build_encode(self, mesh, sb: int):
-        B, S = self.cfg.max_slots, sb
+    def _build_encode(self, mesh, sb: int, slots: Optional[int] = None):
+        B, S = slots or self.cfg.max_slots, sb
         kwargs = {}
         if mesh is not None:
             kwargs["out_shardings"] = NamedSharding(mesh, P())
@@ -153,16 +212,24 @@ class EncoderEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_encode(mesh, sb)))
 
-    def warm_compile(self, sub) -> int:
+    def warm_compile(self, sub, *, slots: Optional[int] = None,
+                     tp: Optional[int] = None, buckets=None) -> int:
         """Pre-compile the batched encode program of every sequence-length
-        bucket for a candidate sub-accelerator.  The ladder is static, so
-        this fully covers the composition.  Returns cold builds performed."""
-        mesh = _mesh_of(sub)
+        bucket for a candidate sub-accelerator — at a candidate design
+        point when the keyword overrides are given.  The ladder is finite,
+        so this fully covers the composition.  Returns cold builds
+        performed."""
+        mesh = part.tp_submesh(_mesh_of(sub),
+                               tp if tp is not None else self._tp)
+        B = slots or self.cfg.max_slots
+        key = self._config_key(B, buckets)
+        ladder = (length_buckets(buckets, self.cfg.max_len)
+                  if buckets is not None else self._buckets)
         fp = mesh_fingerprint(mesh)
         return sum(self._exec.ensure(
-            ("encode", self._cfg_key, fp, sb),
-            self._counted(lambda sb=sb: self._build_encode(mesh, sb)))
-            for sb in self._buckets)
+            ("encode", key, fp, sb),
+            self._counted(lambda sb=sb: self._build_encode(mesh, sb, B)))
+            for sb in ladder)
 
     # ------------------------------------------------------------------
     # load signals
@@ -203,6 +270,7 @@ class EncoderEngine(EngineTelemetry):
             "compile_builds": self.compile_builds,
             "seqs_done": self._seqs_done,
             "bucket_hits": {str(b): n for b, n in self._bucket_hits.items()},
+            "design": self.design(),
         }
 
     # ------------------------------------------------------------------
@@ -212,7 +280,9 @@ class EncoderEngine(EngineTelemetry):
         del max_new_tokens
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(EncodeJob(rid, np.asarray(tokens, np.int32)))
+        toks = np.asarray(tokens, np.int32)
+        self._recent_lens.append(len(toks))
+        self._queue.append(EncodeJob(rid, toks))
         return rid
 
     def step(self) -> List[Tuple[int, List[float]]]:
@@ -235,9 +305,9 @@ class EncoderEngine(EngineTelemetry):
         if not batch:
             return emitted
         # group by each job's OWN smallest fitting bucket (NOT the batch
-        # max): a bidirectional stack attends its row's padding, so the
-        # bucket must be a function of the job alone or its embedding would
-        # depend on what it was co-batched with
+        # max) so a short job never pays a co-batched long job's padded
+        # FLOPs; numerically the bucket doesn't matter — encode masks each
+        # row's key padding, so embeddings are bucket-invariant
         groups: Dict[int, List[EncodeJob]] = {}
         for job in batch:
             groups.setdefault(pick_bucket(self._buckets, len(job.tokens)),

@@ -88,30 +88,35 @@ def _load(pending, active=1, util=0.0):
                       active=active, arena_utilization=util)
 
 
+def _cus(points):
+    """Design-point dict -> {tenant: CU count} (composed tenants only)."""
+    return {t: p.cus for t, p in points.items() if p.cus > 0}
+
+
 def test_policy_gives_lone_busy_tenant_the_fabric():
     from repro.configs import get_reduced
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     pol = AnalyticalPolicy()
-    sizes, reason = pol.decide({"a": _load(100), "b": _load(0)},
-                               cfgs, {"a": 4, "b": 4}, 8)
-    assert sizes == {"a": 8} and reason == "unify"
+    points, reason = pol.decide({"a": _load(100), "b": _load(0)},
+                                cfgs, {"a": 4, "b": 4}, 8)
+    assert _cus(points) == {"a": 8} and reason == "unify"
 
 
 def test_policy_hysteresis_keeps_balanced_split():
     from repro.configs import get_reduced
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     pol = AnalyticalPolicy()
-    sizes, reason = pol.decide({"a": _load(50), "b": _load(50)},
-                               cfgs, {"a": 4, "b": 4}, 8)
-    assert sizes == {"a": 4, "b": 4} and reason == "hysteresis"
+    points, reason = pol.decide({"a": _load(50), "b": _load(50)},
+                                cfgs, {"a": 4, "b": 4}, 8)
+    assert _cus(points) == {"a": 4, "b": 4} and reason == "hysteresis"
 
 
 def test_policy_admits_parked_tenant_with_new_work():
     from repro.configs import get_reduced
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
-    sizes, reason = AnalyticalPolicy().decide(
+    points, reason = AnalyticalPolicy().decide(
         {"a": _load(10), "b": _load(10)}, cfgs, {"a": 8, "b": 0}, 8)
-    assert reason == "admit" and sizes.get("b", 0) >= 1
+    assert reason == "admit" and _cus(points).get("b", 0) >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -182,9 +182,11 @@ def test_encdec_rejects_decoder_only_archs():
 
 def test_encdec_stream_matches_monolithic_forward(seamless):
     """Cross-attention cache correctness: the engine's pooled-slot decode —
-    bucketed batched encode, per-slot cross K/V write, masked per-row
-    src_len — must emit the exact token stream of a monolithic Model
-    prefill + decode_step loop over the same (bucket-padded) inputs."""
+    bucketed batched encode (key padding masked per row), per-slot cross
+    K/V write, masked per-row src_len — must emit the exact token stream of
+    a monolithic Model prefill + decode_step loop over the EXACT-LENGTH
+    inputs: the padding mask makes bucketed encodes bit-identical to
+    unpadded ones, so the reference needs no bucket knowledge at all."""
     cfg, model, params = seamless
     sc = ServeConfig(max_slots=1, max_len=16, eos_id=-1, max_src_len=12,
                      len_buckets=(8,))
@@ -197,11 +199,8 @@ def test_encdec_stream_matches_monolithic_forward(seamless):
     assert eng.stats()["bucket_hits"] == {"8": 2, "12": 1}
 
     for s, rid in zip(srcs, rids):
-        sb = pick_bucket(eng._src_buckets, len(s))
-        toks = np.zeros((1, sb), np.int32)
-        toks[0, :len(s)] = s
-        enc = model.encode(params, {"tokens": jnp.asarray(toks)})
-        cache = strip(model.init_cache(1, sc.max_len, src_len=sb))
+        enc = model.encode(params, {"tokens": jnp.asarray(s[None])})
+        cache = strip(model.init_cache(1, sc.max_len, src_len=len(s)))
         logits, cache = model.prefill(
             params, {"tokens": jnp.full((1, 1), sc.bos_id, jnp.int32)},
             cache, enc_out=enc, src_len=len(s))
@@ -242,6 +241,93 @@ def test_encdec_admission_backpressure_on_source_cache(seamless):
                     max_new_tokens=2)
     out = eng.run_to_completion(50)
     assert out[r3] == []
+
+
+def test_encoder_embeddings_bucket_invariant(seamless):
+    """ROADMAP-flagged bugfix: the bidirectional encoder masks each row's
+    own bucket padding, so the same job's embedding is BIT-identical across
+    different bucket ladders (before the fix, the padded program shape
+    leaked into the numerics)."""
+    cfg, model, params = seamless
+    job = np.arange(1, 6) % cfg.vocab_size
+
+    def run(buckets):
+        eng = EncoderEngine(model, params,
+                            ServeConfig(max_slots=2, max_len=32,
+                                        len_buckets=buckets))
+        rid = eng.submit(job)
+        eng.run_to_completion(10)
+        return eng.results()[rid]
+
+    a, b, full = run((8,)), run((16,)), run(())
+    assert a == b == full, \
+        "bucket ladder changed a bidirectional embedding bit-for-bit"
+
+
+def test_encdec_forced_decode_matches_monolithic(seamless):
+    """Forced decoding: a target prefix threads through submit and the
+    fused slot-prefill program — the stream must equal a monolithic Model
+    prefill over [bos]+prefix (exact lengths) + greedy decode_step loop."""
+    cfg, model, params = seamless
+    sc = ServeConfig(max_slots=2, max_len=24, eos_id=-1, max_src_len=12,
+                     len_buckets=(8,))
+    eng = EncDecEngine(model, params, sc)
+    rng = np.random.default_rng(0)
+    src = rng.integers(1, cfg.vocab_size, size=7)
+    prefix = rng.integers(1, cfg.vocab_size, size=4)
+    rid = eng.submit(src, max_new_tokens=6, prefix=prefix)
+    plain = eng.submit(src, max_new_tokens=6)        # BOS-only co-resident
+    out = eng.run_to_completion(200)
+
+    dec = np.concatenate([[sc.bos_id], prefix]).astype(np.int32)
+    enc = model.encode(params, {"tokens": jnp.asarray(src[None])})
+    cache = strip(model.init_cache(1, sc.max_len, src_len=len(src)))
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(dec[None])},
+                                  cache, enc_out=enc, src_len=len(src))
+    stream = [int(jnp.argmax(logits[0]))]
+    for _ in range(5):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[stream[-1]]], jnp.int32))
+        stream.append(int(jnp.argmax(logits[0])))
+    assert out[rid] == stream, "forced decode diverged from monolithic"
+    assert out[plain] != out[rid], \
+        "prefix had no effect on the decoder stream"
+    # arena accounting covers the prefix rows: src + (1+prefix) + budget
+    from repro.workloads.decode import Request
+    req = Request(0, src, 6, prefix=np.asarray(prefix, np.int32))
+    assert eng._slot_rows(req) == len(src) + 1 + len(prefix) + 6
+    # a prefix that overflows the decoder slot is a hard reject
+    assert eng._oversized(Request(1, src, sc.max_len,
+                                  prefix=np.asarray(prefix, np.int32)))
+
+
+def test_encdec_accepts_precomputed_frames(seamless):
+    """A real frontend's precomputed (S, d_model) frame embeddings enter
+    submit directly — no token re-embedding — and (the STUB embedding
+    being jnp.take on the embed table) produce the token path's exact
+    stream; the embedded rows pay the same arena rows as token sources."""
+    cfg, model, params = seamless
+    sc = ServeConfig(max_slots=2, max_len=24, eos_id=-1, max_src_len=12,
+                     len_buckets=(8,))
+    eng = EncDecEngine(model, params, sc)
+    rng = np.random.default_rng(0)
+    src = rng.integers(1, cfg.vocab_size, size=7)
+    frames = np.asarray(params["embed"])[src]         # the STUB's embedding
+    r_tok = eng.submit(src, max_new_tokens=6)
+    r_frm = eng.submit(frames, max_new_tokens=6)
+    # both jobs admitted: the frame job's arena view covers its frame rows
+    eng.step()
+    assert eng.active_count == 2
+    views = {req.rid: req.view for req in eng._active.values()}
+    assert views[r_frm].rows == views[r_tok].rows == 7 + 1 + 6
+    out = eng.run_to_completion(200)
+    assert out[r_frm] == out[r_tok], \
+        "precomputed frames diverged from the token-embedding path"
+    # oversized frame sources reject-but-record like token sources
+    r_big = eng.submit(np.zeros((13, cfg.d_model), np.float32),
+                       max_new_tokens=2)
+    out = eng.run_to_completion(50)
+    assert out[r_big] == []
 
 
 # ---------------------------------------------------------------------------
@@ -398,6 +484,10 @@ def _load(pending, active=1, util=0.0):
                       active=active, arena_utilization=util)
 
 
+def _cus(points):
+    return {t: p.cus for t, p in points.items() if p.cus > 0}
+
+
 def test_mixed_fleet_split_shifts_toward_owed_class():
     """The split search allocates CUs toward the class with owed work,
     under each class's own cost model."""
@@ -406,16 +496,18 @@ def test_mixed_fleet_split_shifts_toward_owed_class():
     classes = {"dec": DECODE, "ssm": SSM, "enc": ENCODER}
     pol = AnalyticalPolicy()
     # the encoder tenant owes a large prefill backlog; others trickle
-    sizes, reason = pol.decide(
+    points, reason = pol.decide(
         {"dec": _load(5), "ssm": _load(5), "enc": _load(5000)},
         cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+    sizes = _cus(points)
     assert reason in ("rebalance", "admit")
     assert sizes["enc"] > 2, f"expected encoder to gain CUs, got {sizes}"
     assert sizes["enc"] > sizes["dec"] and sizes["enc"] > sizes["ssm"]
     # now the SSM tenant owes the work
-    sizes2, reason2 = pol.decide(
+    points2, reason2 = pol.decide(
         {"dec": _load(5), "ssm": _load(5000), "enc": _load(5)},
         cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+    sizes2 = _cus(points2)
     assert sizes2["ssm"] >= sizes2["dec"] and sizes2["ssm"] >= sizes2["enc"]
     assert sizes2["ssm"] > 3 or reason2 == "hysteresis"
 
@@ -423,13 +515,13 @@ def test_mixed_fleet_split_shifts_toward_owed_class():
 def test_policy_exposes_runner_up():
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     pol = AnalyticalPolicy()
-    sizes, reason = pol.decide({"a": _load(50), "b": _load(50)},
-                               cfgs, {"a": 4, "b": 4}, 8)
+    points, reason = pol.decide({"a": _load(50), "b": _load(50)},
+                                cfgs, {"a": 4, "b": 4}, 8)
     assert reason == "hysteresis"
-    # staying put: the runner-up is the best alternative split, the one the
-    # fabric speculatively prewarms during idle decide intervals
+    # staying put: the runner-up is the best alternative design, the one
+    # the fabric speculatively prewarms during idle decide intervals
     assert pol.runner_up is not None
-    assert sum(pol.runner_up.values()) == 8
+    assert sum(_cus(pol.runner_up).values()) == 8
     pol.decide({"a": _load(0), "b": _load(0)}, cfgs, {"a": 4, "b": 4}, 8)
     assert pol.runner_up is None       # idle fabric: nothing worth warming
 
@@ -606,6 +698,61 @@ def test_encdec_streams_invariant_across_recomposition():
     assert res["dyn"], "mid-stream TP degree change altered enc-dec streams"
 
 
+def test_live_reconfigure_stream_invariance():
+    """Serving-DSE acceptance pin: mid-stream ``reconfigure`` — a
+    slot-count change AND a TP-degree change on a FIXED CU grant — leaves
+    pinned decode streams bit-identical vs a never-reconfigured run, for
+    both the transformer decode and the SSM engine (live slots are
+    migrated into the resized pool; the TP move is a sharded device_put)."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.models import build_model
+    from repro.serve import serve_engine_rules
+    from repro.workloads import DecodeEngine, SSMEngine, ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    rules = serve_engine_rules()
+    out = {}
+    for arch, cls in (("minitron-4b", DecodeEngine),
+                      ("falcon-mamba-7b", SSMEngine)):
+        cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab_size, size=L)
+                   for L in (5, 9, 7)]
+        grant = comp.submesh(range(4), "fixed")      # the grant never moves
+
+        def run(script=None):
+            eng = cls(model, params, sc, mesh=grant, rules=rules)
+            for p in prompts:
+                eng.submit(p, max_new_tokens=10)
+            step = 0
+            while eng.has_work:
+                if script and step in script:
+                    eng.reconfigure(**script[step])
+                eng.step()
+                step += 1
+                assert step < 300
+            return eng, {str(r): t for r, t in eng.results().items()}
+
+        _, ref = run()
+        eng, dyn = run({2: {"slots": 4}, 5: {"tp": 2},
+                        8: {"slots": 2, "tp": 4}})
+        out[arch] = {"match": dyn == ref,
+                     "design": {k: (list(v) if isinstance(v, tuple) else v)
+                                for k, v in eng.design().items()}}
+    print(json.dumps(out))
+    """)
+    for arch, r in res.items():
+        assert r["match"], \
+            f"mid-stream reconfigure altered {arch} decode streams"
+        assert r["design"]["tp"] == 4 and r["design"]["slots"] >= 2
+
+
 def test_mixed_fleet_end_to_end_with_live_class_moves():
     """Acceptance: a mixed fleet (transformer decode + mamba + encoder +
     seamless enc-dec) runs end-to-end through ComposedServer with >=1 live
@@ -685,14 +832,18 @@ def test_speculative_runner_up_prewarm():
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
+    # min_gain pinned sky-high: every decide is a hysteresis tick, so the
+    # test exercises exactly the idle-interval speculative path (at the
+    # default gain the two-stage policy would commit a rebalance first)
     srv = ComposedServer(mesh, [
         TenantSpec("a", "minitron-4b", serve=sc),
         TenantSpec("b", "minitron-4b", seed=1, serve=sc),
-    ], policy=AnalyticalPolicy(), decide_every=2, prewarm_async=True)
+    ], policy=AnalyticalPolicy(min_gain=100.0), decide_every=2,
+       prewarm_async=True)
     rng = np.random.default_rng(0)
     vocab = srv.cfgs["a"].vocab_size
     # balanced load: the policy stays put (hysteresis) but exposes a
-    # runner-up, which the idle ticks compile in the background
+    # runner-up design, which the idle ticks compile in the background
     for t in ("a", "b"):
         srv.submit(t, rng.integers(1, vocab, size=8), max_new_tokens=20)
     steps = 0
