@@ -21,7 +21,11 @@ the serving path makes:
 * the ``two_stage_dse`` ablation: the same mixed fleet with
   under-provisioned slots, served by the two-stage policy (per-tenant
   design-point Stage 1 + split search Stage 2) vs ``--split-only`` (raw CU
-  splits) — predicted and measured makespan/throughput side by side.
+  splits) — predicted and measured makespan/throughput side by side;
+* the ``dp_replicas`` record: steady-state tokens/s on one fixed 4-CU
+  grant with the Stage-1-chosen design (which must pick ``dp > 1`` — the
+  engine batch is slot-capped, so extra CUs only pay as data-parallel
+  replica tiles) vs the same search pinned to a single engine.
 
 Each scenario is the launcher itself (``repro.launch.serve``) run in a
 subprocess because it fakes 8 host devices and the device count is locked
@@ -62,6 +66,11 @@ _DSE_MIXED = [sys.executable, "-m", "repro.launch.serve", "--fabric",
               "--max-slots", "2", "--max-new-tokens", "12", "--seed", "0"]
 _DSE_SPLIT = _DSE_MIXED + ["--split-only"]
 _DSE_REQUESTS = 10
+# data-parallel replica tiling: Stage-1-chosen dp > 1 on a fixed 4-CU grant
+# vs the same search pinned to one engine (dp_cap=1); the engine batch is
+# slot-capped, so replicas are the only way the grant widens concurrency
+_DP = [sys.executable, "-m", "repro.launch.serve", "--dp-bench",
+       "--scale-steps", "10", "--seed", "0"]
 
 
 def _run(cmd):
@@ -73,7 +82,9 @@ def _run(cmd):
     if out.returncode != 0:
         raise RuntimeError(f"scenario {cmd[3:]} failed:\n"
                            f"{out.stdout[-2000:]}\n{out.stderr[-4000:]}")
-    return json.loads(out.stdout[out.stdout.index("{"):])
+    # some scenarios print a human-readable verdict after the JSON record
+    return json.JSONDecoder().raw_decode(
+        out.stdout[out.stdout.index("{"):])[0]
 
 
 def _stalls(stats):
@@ -120,7 +131,8 @@ def _predicted_units_per_s(stats):
             wclass=wc, max_len=128, max_src=128 if wc == "encdec" else 0,
             base_slots=d["slots"], base_buckets=buckets or ())
         point = DesignPoint(cus=2, tp=min(d["tp"] or 2, 2),
-                            slots=d["slots"], buckets=buckets)
+                            slots=d["slots"], buckets=buckets,
+                            dp=min(d.get("dp", 1), 2))
         cost = pol.stage1.cost_of(cfg, space, _DSE_REQUESTS, point,
                                   src_cap=128)
         total += 1.0 / cost
@@ -151,6 +163,7 @@ def main() -> None:
     scaling = _run(_SCALING)
     dse_two = _run(_DSE_MIXED)
     dse_split = _run(_DSE_SPLIT)
+    dp = _run(_DP)
 
     wall_s = warm["wall_s"]
     recompose_s = [e["seconds"] for e in warm["events"]]
@@ -231,6 +244,20 @@ def main() -> None:
                 _predicted_units_per_s(dse_two)
                 >= _predicted_units_per_s(dse_split),
         },
+        # data-parallel replica tiling on one fixed grant: tokens/s with the
+        # Stage-1-chosen dp (> 1; the engine batch is slot-capped, so extra
+        # CUs only pay as replicas) vs the same grant forced to one engine
+        "dp_replicas": {
+            "model": dp["bench_model"],
+            "grant_cus": dp["grant_cus"],
+            "slot_cap": dp["slot_cap"],
+            "chosen_point": dp["chosen"],
+            "forced_point": dp["forced"],
+            "tokens_per_s_dp": dp["tokens_per_s_dp"],
+            "tokens_per_s_dp1": dp["tokens_per_s_dp1"],
+            "speedup": dp["speedup"],
+            "dp_wins": dp["ok"],
+        },
         # measured counterpart of the policy's analytical speedup: decode
         # tokens/s as the same tenant's sub-mesh grows
         "scaling_curve": {
@@ -262,6 +289,12 @@ def main() -> None:
           f"{dse['two_stage_wins_measured']}")
     print(f"serve_fabric,dse_two_stage_wins_predicted,"
           f"{dse['two_stage_wins_predicted']}")
+    dpr = record["dp_replicas"]
+    print(f"serve_fabric,dp_chosen,{dpr['chosen_point']['dp']}")
+    print(f"serve_fabric,dp_tokens_per_s,{dpr['tokens_per_s_dp']}")
+    print(f"serve_fabric,dp1_tokens_per_s,{dpr['tokens_per_s_dp1']}")
+    print(f"serve_fabric,dp_speedup,{dpr['speedup']}")
+    print(f"serve_fabric,dp_wins,{dpr['dp_wins']}")
     for cus, tps in record["scaling_curve"]["tokens_per_s_by_cus"].items():
         print(f"serve_fabric,scaling_tokens_per_s[{cus}cu],{tps}")
     print(f"serve_fabric,scaling_monotone,"

@@ -203,6 +203,20 @@ def layer_latency(cfg: AccelConfig, platform: PlatformProfile,
 # and Stage 1 correctly picks tp < cus.
 ICI_HOP_LATENCY_S = 1.0e-6
 
+# per-step host cost of each extra data-parallel engine replica in a grant.
+# Replica slices execute concurrently on disjoint CUs, but the fabric
+# dispatches their steps from one host thread, so every replica past the
+# first adds one serialized launch (same scale as LAUNCH_OVERHEAD_S) — the
+# COAC-style switching tax that keeps Stage 1 from tiling a grant into
+# replicas the queue cannot fill.
+REPLICA_DISPATCH_OVERHEAD_S = 2.0e-6
+
+
+def dp_dispatch_overhead(replicas: int) -> float:
+    """Per-step host serialization cost of running ``replicas`` engine
+    replicas of one tenant inside a grant (zero at dp=1)."""
+    return max(int(replicas) - 1, 0) * REPLICA_DISPATCH_OVERHEAD_S
+
 
 def tp_collective_latency(platform: PlatformProfile, degree: int,
                           bytes_per_device: float) -> float:

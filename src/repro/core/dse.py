@@ -49,8 +49,13 @@ class DesignPoint:
 
     * ``tp``      — tensor-parallel degree over the sub-mesh (<= cus; the
       analytical all-reduce cost can make ``tp < cus`` optimal);
-    * ``slots``   — concurrent decode/SSM slots (batch per step, priced via
-      ``batch`` in the analytical step cost, memory-feasibility-bounded);
+    * ``dp``      — data-parallel replica count inside the grant: the grant
+      is tiled into ``dp`` disjoint ``tp``-wide slices, each running an
+      independent engine replica (Herald-style configuration tiling; the
+      serving fabric's ``ReplicaGroup`` owns the replicas);
+    * ``slots``   — concurrent decode/SSM slots **per replica** (batch per
+      step, priced via ``batch`` in the analytical step cost,
+      memory-feasibility-bounded by one replica slice's HBM);
     * ``buckets`` — padded-length program ladder for encode phases
       (encoder / enc-dec tenants), chosen from observed job lengths.
 
@@ -62,6 +67,7 @@ class DesignPoint:
     tp: Optional[int] = None
     slots: Optional[int] = None
     buckets: Optional[Tuple[int, ...]] = None
+    dp: Optional[int] = None
     cost: float = 0.0
 
     def knobs(self) -> dict:
@@ -69,6 +75,8 @@ class DesignPoint:
         out = {}
         if self.tp is not None:
             out["tp"] = self.tp
+        if self.dp is not None:
+            out["dp"] = self.dp
         if self.slots is not None:
             out["slots"] = self.slots
         if self.buckets is not None:
@@ -87,6 +95,22 @@ def tp_candidates(cus: int) -> Tuple[int, ...]:
         out.append(p)
         p *= 2
     out.append(cus)
+    return tuple(out)
+
+
+def dp_candidates(cus: int, tp: int) -> Tuple[int, ...]:
+    """Candidate data-parallel replica counts for ``tp``-wide replicas on a
+    ``cus``-CU grant: powers of two plus the maximum packing, subject to
+    ``tp * dp <= cus`` (replica slices are disjoint)."""
+    if cus <= 0 or tp <= 0 or tp > cus:
+        return ()
+    cap = cus // tp
+    out = []
+    p = 1
+    while p < cap:
+        out.append(p)
+        p *= 2
+    out.append(cap)
     return tuple(out)
 
 

@@ -279,6 +279,30 @@ def tp_submesh(mesh: Optional[Mesh], degree: Optional[int],
     return Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
 
 
+def replica_submesh(mesh: Optional[Mesh], index: int, replicas: int,
+                    axis: str = "model") -> Optional[Mesh]:
+    """Slice ``mesh`` into ``replicas`` disjoint equal-width tiles along
+    ``axis`` and return tile ``index`` (the data-parallel counterpart of
+    :func:`tp_submesh`: a ``ReplicaGroup`` runs one independent engine per
+    tile).  Columns past ``replicas * (size // replicas)`` are left idle
+    when the axis does not divide evenly; ``replicas`` <= 1 returns the
+    mesh unchanged, and meshes without ``axis`` are returned as-is."""
+    if mesh is None or replicas <= 1 or axis not in mesh.axis_names:
+        return mesh
+    ax = mesh.axis_names.index(axis)
+    width = mesh.devices.shape[ax] // replicas
+    if width < 1:
+        raise ValueError(
+            f"cannot tile {mesh.devices.shape[ax]} '{axis}' columns into "
+            f"{replicas} replica slices")
+    if not 0 <= index < replicas:
+        raise ValueError(f"replica index {index} out of range for "
+                         f"{replicas} replicas")
+    idx = [slice(None)] * mesh.devices.ndim
+    idx[ax] = slice(index * width, (index + 1) * width)
+    return Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
     """The sharding-relevant skeleton of a pytree — treedef plus per-leaf

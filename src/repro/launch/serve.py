@@ -50,8 +50,10 @@ from repro.configs.base import ModelConfig
 from repro.core.composer import MeshComposer
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.serve import (AnalyticalPolicy, ComposedServer, ServeConfig,
-                         ServeEngine, TenantSpec, serve_engine_rules)
+from repro.serve import (AnalyticalPolicy, ComposedServer, ReplicaGroup,
+                         ServeConfig, ServeEngine, TenantDesignSpace,
+                         TenantSpec, serve_engine_rules)
+from repro.workloads import DECODE
 
 
 # the heterogeneous fleet --scenario mixed serves: one tenant per workload
@@ -225,22 +227,29 @@ def run_dse_smoke(args) -> int:
     Stage 1 must pick at least one non-default design point (slot count
     above the provisioned default, or a TP degree below the grant) and the
     fabric must apply it live (a recomposition event carrying design
-    deltas) while every stream completes.  Fast CI guard that the two-stage
-    path actually optimizes rather than echoing the engine defaults."""
+    deltas) while every stream completes.  Tenant "a" is a small model
+    whose engine batch is structurally capped (``slot_cap``), so on a
+    multi-CU grant Stage 1 must also pick ``dp > 1`` — data-parallel
+    replica tiling, applied live through the ReplicaGroup's
+    drain-and-rebalance.  Fast CI guard that the two-stage path actually
+    optimizes rather than echoing the engine defaults."""
     if jax.device_count() < 4:
         print("dse-smoke needs >= 4 devices "
               "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         return 2
     mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
-    tenants = [TenantSpec("a", "minitron-4b", serve=sc),
+    # a: small model, batch capped at 4 slots/engine -> a deep queue on a
+    # wide grant is only servable by replica tiling (the dp axis)
+    sc_a = dataclasses.replace(sc, slot_cap=4)
+    tenants = [TenantSpec("a", "minitron-4b", serve=sc_a),
                TenantSpec("b", "qwen2.5-32b", seed=1, serve=sc)]
     server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
                             decide_every=3)
     rng = np.random.default_rng(args.seed)
-    for t in ("a", "b"):
+    for t, n in (("a", 16), ("b", 6)):     # queue depth >> default slots
         vocab = server.cfgs[t].vocab_size
-        for _ in range(6):                 # queue depth 6 >> 2 default slots
+        for _ in range(n):
             server.submit(t, rng.integers(1, vocab, size=8),
                           max_new_tokens=10)
     out = server.drain(max_steps=500)
@@ -250,18 +259,111 @@ def run_dse_smoke(args) -> int:
         t: d for t, d in stats["design_points"].items()
         if d["slots"] != sc.max_slots
         or (d["tp"] is not None and 0 < d["tp"] < d["cus"])}
+    # dp > 1 is a steady-load design: once the fleet drains, the policy
+    # folds "a" back to one engine — so assert over the event history
+    dp_picked = any(e.design.get("a", {}).get("dp", 1) > 1
+                    and e.sizes_after.get("a", 0) >= 4
+                    for e in server.events)
     complete = all(len(toks) == 10
                    for streams in out.values() for toks in streams.values())
-    ok = bool(nondefault) and bool(applied) and complete
+    ok = bool(nondefault) and bool(applied) and dp_picked and complete
     print(json.dumps({"design_points": stats["design_points"],
                       "applied_deltas": applied,
                       "nondefault": sorted(nondefault),
+                      "dp_picked": dp_picked,
                       "complete": complete, "ok": ok}))
     if not ok:
         print("DSE smoke FAILED: Stage 1 never picked (or the fabric never "
-              "applied) a non-default design point")
+              "applied) a non-default design point with dp > 1")
         return 1
-    print("DSE smoke OK: non-default design point chosen and applied live")
+    print("DSE smoke OK: non-default design point (dp > 1) chosen and "
+          "applied live")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# dp bench: Stage-1-chosen replica tiling vs the same grant forced to dp=1
+# ---------------------------------------------------------------------------
+
+def run_dp_bench(args) -> int:
+    """Steady-state decode tokens/s on one fixed grant, Stage-1-chosen
+    design (which must pick ``dp > 1``) vs the same search with the tenant
+    pinned to a single engine (``dp_cap=1``).
+
+    The engine's step program is batch-capped (``slot_cap``), so the
+    single-engine arm can shard its (small, weights-bound) batch over the
+    whole grant but never widen it — while the replica-tiled arm decodes
+    ``dp`` independent capped batches concurrently.  The measured gap is
+    the serving counterpart of the paper's reconfigurable-tiling win.
+
+    Both arms are built up front and their timed loops interleave
+    (A,B,A,B,...) with best-of per arm, so slow drift in host load hits
+    both the same way instead of whichever arm happens to run last."""
+    if jax.device_count() < 4:
+        print("dp-bench needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    # deep-narrow at a long context: per-sublayer compute is tiny next to
+    # the 2(p-1) collective phases a tp=4 step pays, while the long padded
+    # KV read keeps tp=4 the best *single-engine* design — exactly the
+    # regime where the grant only buys throughput as replicas.  Fixed
+    # max_len (not --max-len): the regime is the benchmark.
+    cfg = bench_config(512, 6, 4096)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    comp = MeshComposer(mesh)
+    grant, queue, M, reps = 4, 16, args.scale_steps, 3
+    sc = ServeConfig(max_slots=4, max_len=4096, eos_id=-1, slot_cap=4)
+    pol = AnalyticalPolicy()
+
+    def arm(dp_cap):
+        space = TenantDesignSpace(wclass=DECODE, max_len=sc.max_len,
+                                  base_slots=sc.max_slots,
+                                  slot_cap=sc.slot_cap, dp_cap=dp_cap)
+        best = pol.stage1.best(cfg, space, queue, grant)
+        grp = ReplicaGroup(DECODE, model, params, sc,
+                           sub=comp.submesh(range(grant), f"dpb{dp_cap}"),
+                           rules=serve_engine_rules())
+        grp.apply(None, best)
+        rng = np.random.default_rng(args.seed)
+        for _ in range(queue):
+            grp.submit(rng.integers(1, cfg.vocab_size, size=16),
+                       max_new_tokens=reps * M + 8)
+        for _ in range(3):                  # prefill + warm the executables
+            grp.step()
+        grp.sync()
+        return best, grp
+
+    chosen, grp_dp = arm(dp_cap=64)
+    forced, grp_one = arm(dp_cap=1)
+    toks_dp = toks_one = 0.0
+    for _ in range(reps):
+        for grp, which in ((grp_dp, "dp"), (grp_one, "one")):
+            n, t0 = 0, time.perf_counter()
+            for _ in range(M):
+                n += len(grp.step())
+            grp.sync()
+            tput = round(n / (time.perf_counter() - t0), 2)
+            if which == "dp":
+                toks_dp = max(toks_dp, tput)
+            else:
+                toks_one = max(toks_one, tput)
+    ok = (chosen.dp or 1) > 1 and (forced.dp or 1) == 1 \
+        and toks_dp > toks_one
+    print(json.dumps({
+        "bench_model": cfg.name, "grant_cus": grant, "queue": queue,
+        "measured_steps": M, "timed_reps": reps, "slot_cap": sc.slot_cap,
+        "chosen": {"dp": chosen.dp, "tp": chosen.tp, "slots": chosen.slots},
+        "forced": {"dp": forced.dp, "tp": forced.tp, "slots": forced.slots},
+        "tokens_per_s_dp": toks_dp, "tokens_per_s_dp1": toks_one,
+        "speedup": round(toks_dp / max(toks_one, 1e-9), 3), "ok": ok,
+    }))
+    if not ok:
+        print("dp bench FAILED: Stage 1 did not pick dp > 1, or replica "
+              "tiling did not beat the single-engine arm")
+        return 1
+    print("dp bench OK: Stage-1-chosen replica tiling beats dp=1")
     return 0
 
 
@@ -363,13 +465,19 @@ def main(argv=None) -> int:
                          "behavior; the two_stage_dse benchmark ablation)")
     ap.add_argument("--dse-smoke", action="store_true",
                     help="assert the two-stage policy picks and applies a "
-                         "non-default per-tenant design point")
+                         "non-default per-tenant design point (dp > 1 for "
+                         "the batch-capped small-model tenant)")
+    ap.add_argument("--dp-bench", action="store_true",
+                    help="measure Stage-1-chosen replica tiling (dp > 1) vs "
+                         "the same grant forced to one engine (dp_cap=1)")
     args = ap.parse_args(argv)
 
     if args.tp_smoke:
         return run_tp_smoke(args)
     if args.dse_smoke:
         return run_dse_smoke(args)
+    if args.dp_bench:
+        return run_dp_bench(args)
     if args.scaling_curve:
         return run_scaling(args)
     if args.scenario == "mixed":

@@ -1,11 +1,16 @@
 from repro.core.dse import DesignPoint
-from repro.serve.compile_cache import ExecutableCache
 from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
-from repro.serve.engine import DecodeEngine, Request, ServeConfig, ServeEngine
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
-                                RecompositionEvent, TenantLoad, TenantSpec,
+                                RecompositionEvent, ReplicaGroup, TenantLoad,
+                                TenantObservation, TenantSpec,
                                 serve_engine_rules)
-from repro.workloads import EncDecEngine, EncoderEngine, SSMEngine
+from repro.workloads import (DecodeEngine, EncDecEngine, EncoderEngine,
+                             ExecutableCache, Request, ServeConfig, SSMEngine)
+
+# the PR-1/2 serving engine is the transformer decode workload class; the
+# name stays public (engines live in repro.workloads — the old
+# repro.serve.engine / repro.serve.compile_cache shims are gone)
+ServeEngine = DecodeEngine
 
 __all__ = [
     "ExecutableCache",
@@ -20,9 +25,11 @@ __all__ = [
     "ComposedServer",
     "DesignPoint",
     "RecompositionEvent",
+    "ReplicaGroup",
     "Stage1Optimizer",
     "TenantDesignSpace",
     "TenantLoad",
+    "TenantObservation",
     "TenantSpec",
     "serve_engine_rules",
 ]

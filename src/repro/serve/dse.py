@@ -7,17 +7,19 @@ parameters (Stage 1) and then schedules over the resulting mode tables
 (Stage 2).  The serving fabric runs the same split at tenant granularity:
 
 * **Stage 1 (here)** — for each candidate CU grant ``c``, pick the tenant's
-  best *engine configuration* with the analytical model: tensor-parallel
-  degree over the sub-mesh (the all-reduce cost can make ``tp < c``
-  optimal), decode/SSM slot count (batch per step, memory-feasibility
-  bounded, priced via ``batch`` in the step cost), and the encoder/enc-dec
-  bucket ladder (fit to observed job lengths).  The result is a
-  per-(tenant, c) :class:`~repro.core.dse.DesignPoint` memo;
+  best *engine configuration* with the analytical model: data-parallel
+  replica count (the grant tiled into ``dp`` independent ``tp``-wide
+  slices, Herald-style), tensor-parallel degree over one slice (the
+  all-reduce cost can make ``tp < c`` optimal), per-replica decode/SSM
+  slot count (batch per step, memory-feasibility bounded, priced via
+  ``batch`` in the step cost), and the encoder/enc-dec bucket ladder (fit
+  to observed job lengths).  The result is a per-(tenant, c)
+  :class:`~repro.core.dse.DesignPoint` memo;
 * **Stage 2** — :class:`~repro.serve.fabric.AnalyticalPolicy`'s split
   search minimizes predicted makespan over compositions of those
   Stage-1-optimal points instead of raw CU counts, and
   :class:`~repro.serve.fabric.ComposedServer` applies the winning points
-  live (``Engine.reconfigure``).
+  live (``Engine.apply``).
 
 This is the Herald/COAC point (PAPERS.md): matching each workload to its
 own sub-accelerator *configuration* — not just a CU share — and
@@ -30,8 +32,8 @@ from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.common.platform import PlatformProfile, TPU_V5E
 from repro.configs.base import ModelConfig
-from repro.core.analytical import tp_collective_latency
-from repro.core.dse import DesignPoint, tp_candidates
+from repro.core.analytical import dp_dispatch_overhead, tp_collective_latency
+from repro.core.dse import DesignPoint, dp_candidates, tp_candidates
 from repro.workloads.base import (DECODE, ENCDEC, ENCODER, SSM,
                                   length_buckets, pick_bucket)
 
@@ -50,9 +52,11 @@ class TenantDesignSpace:
     base_slots: int = 4                  # currently applied slot count
     base_buckets: Tuple[int, ...] = ()   # currently applied bucket ladder
     base_tp: Optional[int] = None        # applied TP degree (None = grant)
+    base_dp: int = 1                     # applied replica count
     per_slot_elems: int = 0              # arena elements one slot pins
     tp_allowed: bool = True              # False on replicated fabrics
     slot_cap: int = 64                   # hard slot-count ceiling
+    dp_cap: int = 64                     # hard replica-count ceiling
 
 
 def padded_factor(ladder: Sequence[int], lengths: Sequence[int]) -> float:
@@ -137,11 +141,20 @@ class Stage1Optimizer:
                 lengths: Sequence[int] = (), src_cap: int = 0) -> float:
         """Predicted seconds per unit of owed work at a pinned design point
         (the hysteresis baseline: what the *currently applied* point costs
-        under the current load)."""
+        under the current load).
+
+        ``point.dp`` replicas tile the grant into ``cus // dp``-CU slices,
+        each running an independent engine at ``slots`` slots: throughput
+        multiplies by the replicas the queue can fill (``min(dp*slots,
+        k)``), the TP degree is clamped to one slice's width, and every
+        replica past the first pays the host dispatch serialization tax
+        (:func:`~repro.core.analytical.dp_dispatch_overhead`)."""
         c = point.cus
         if c <= 0:
             return float("inf")
-        p = min(point.tp or c, c)
+        d = max(1, min(point.dp or space.base_dp, c))
+        w = max(c // d, 1)                     # CUs per replica slice
+        p = min(point.tp or w, w)
         slots = point.slots or space.base_slots
         ladder = length_buckets(point.buckets if point.buckets is not None
                                 else space.base_buckets,
@@ -150,14 +163,14 @@ class Stage1Optimizer:
         if space.wclass == ENCODER:
             per_tok = self.step_cost(cfg, slots, p, ENCODER)
             coll = self.collective_s(cfg, 1, p, space)
-            return per_tok * padded_factor(ladder, lengths) + coll
+            return (per_tok * padded_factor(ladder, lengths) + coll) / d
         if space.wclass == ENCDEC:
             src = self._expected_src(space, ladder, lengths, src_cap)
             base = self.step_cost(cfg, slots, p, ENCDEC, src_len=src)
         else:
             base = self.step_cost(cfg, slots, p, space.wclass)
-        return (base + self.collective_s(cfg, slots, p, space)) \
-            / min(slots, k)
+        return (base + self.collective_s(cfg, slots, p, space)
+                + dp_dispatch_overhead(d)) / min(d * slots, k)
 
     # -- the search --------------------------------------------------------
     def _slot_candidates(self, space: TenantDesignSpace, concurrency: int,
@@ -197,36 +210,47 @@ class Stage1Optimizer:
              concurrency: int, cus: int, lengths: Sequence[int] = (),
              src_cap: int = 0) -> DesignPoint:
         """Stage 1 proper: the tenant's cheapest design point on a
-        ``cus``-CU grant.  Ties break toward the currently applied knobs
+        ``cus``-CU grant, searched jointly over ``(dp, tp, slots,
+        buckets)``.  Ties break toward the currently applied knobs
         (stability: a reconfiguration must buy something)."""
         if cus <= 0:
             return DesignPoint(cus=0, cost=float("inf"))
-        tps = tp_candidates(cus) if space.tp_allowed else (cus,)
         has_encode = space.wclass in (ENCODER, ENCDEC)
         ladders = (self._ladder_candidates(space, lengths) if has_encode
                    else (None,))
         base_ladder = length_buckets(space.base_buckets,
                                      space.max_src or space.max_len)
-        # what the engine would run at on THIS grant if nothing changed
-        applied_tp = min(space.base_tp or cus, cus)
+        dps = tuple(d for d in dp_candidates(cus, 1)
+                    if d <= max(space.dp_cap, 1)) or (1,)
+        applied_dp = max(1, min(space.base_dp, cus))
+        k = max(concurrency, 1)
         best = None
-        for tp in tps:
-            slot_cands = ((space.base_slots,) if space.wclass == ENCODER
-                          else self._slot_candidates(space, concurrency, tp))
-            for slots in slot_cands:
-                for ladder in ladders:
-                    point = DesignPoint(cus=cus, tp=tp, slots=slots,
-                                        buckets=ladder)
-                    cost = self.cost_of(cfg, space, concurrency, point,
-                                        lengths, src_cap)
-                    # deviation from the applied knobs: tie-break only
-                    # (reconfiguring must buy something, so ties never
-                    # trigger a gratuitous reshard/resize/ladder swap)
-                    dev = ((0 if tp == applied_tp else 1)
-                           + (0 if slots == space.base_slots else 1)
-                           + (0 if ladder in (None, base_ladder) else 1))
-                    cand = (cost, dev, dataclasses.replace(point, cost=cost))
-                    if best is None or cand[:2] < best[:2]:
-                        best = cand
+        for dp in dps:
+            w = max(cus // dp, 1)              # CUs per replica slice
+            tps = tp_candidates(w) if space.tp_allowed else (w,)
+            # what the engine would run at on THIS slice if nothing changed
+            applied_tp = min(space.base_tp or w, w)
+            per_k = -(-k // dp)                # per-replica queue share
+            for tp in tps:
+                slot_cands = ((space.base_slots,)
+                              if space.wclass == ENCODER
+                              else self._slot_candidates(space, per_k, tp))
+                for slots in slot_cands:
+                    for ladder in ladders:
+                        point = DesignPoint(cus=cus, tp=tp, slots=slots,
+                                            buckets=ladder, dp=dp)
+                        cost = self.cost_of(cfg, space, concurrency, point,
+                                            lengths, src_cap)
+                        # deviation from the applied knobs: tie-break only
+                        # (reconfiguring must buy something, so ties never
+                        # trigger a gratuitous reshard/resize/ladder swap)
+                        dev = ((0 if dp == applied_dp else 1)
+                               + (0 if tp == applied_tp else 1)
+                               + (0 if slots == space.base_slots else 1)
+                               + (0 if ladder in (None, base_ladder) else 1))
+                        cand = (cost, dev,
+                                dataclasses.replace(point, cost=cost))
+                        if best is None or cand[:2] < best[:2]:
+                            best = cand
         assert best is not None
         return best[2]

@@ -7,7 +7,11 @@ engine of its *workload class* (transformer decode / SSM recurrent decode /
 encoder embedding / enc-dec encode→decode — :mod:`repro.workloads`) on a
 :class:`~repro.core.composer.MeshComposer` sub-accelerator, tensor-parallel
 over its sub-mesh's model axis (``serve_engine_rules``), so a tenant's
-measured throughput actually tracks the CUs it holds.  Between decode steps
+measured throughput actually tracks the CUs it holds.  A tenant's engine is
+really a :class:`ReplicaGroup` — ``dp`` independent same-design engine
+replicas tiling the grant (the DesignPoint ``dp`` axis), so a memory-capped
+small-model tenant on a wide grant batches in parallel across tiles instead
+of sharding an unchanged batch.  Between decode steps
 the controller samples per-tenant load (queue depth, owed work, arena
 pressure) and asks a policy — by default the analytical model driving the
 DSE Stage-2 search, pricing each tenant by its class's bound resource — for
@@ -31,7 +35,8 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -46,9 +51,10 @@ from repro.distribution import partitioning as part
 from repro.models import build_model
 from repro.models.ssm import dims as ssm_dims
 from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
-from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, Engine,
-                             ExecutableCache, ServeConfig, build_engine,
-                             workload_class_of)
+from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, DecodeEngine,
+                             Engine, ExecutableCache, ServeConfig,
+                             build_engine, workload_class_of)
+from repro.workloads.decode import _mesh_of
 
 
 def serve_engine_rules() -> part.ShardingRules:
@@ -81,16 +87,43 @@ class TenantSpec:
     # "encoder" is an explicit tenant choice — any arch can serve
     # prefill-only/embedding traffic
     workload: str = "auto"
+    # ceiling on the tenant's data-parallel replica count (Stage-1 dp axis);
+    # 1 pins the tenant to a single engine per grant
+    dp_cap: int = 64
 
 
 @dataclasses.dataclass(frozen=True)
 class TenantLoad:
-    """Observed load signals the policy decides on."""
+    """Observed load signals only (the PR-5 ``decide`` input; superseded by
+    :class:`TenantObservation`, which folds in the side-channel keywords)."""
 
     pending_tokens: int              # decode steps of work owed
     queue_depth: int                 # requests awaiting admission
     active: int                      # live decode slots
     arena_utilization: float         # KV arena pressure, 0..1
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantObservation:
+    """Everything the policy needs to know about one tenant, in one record.
+
+    Built by the fabric each decide tick (:meth:`ComposedServer.observe`)
+    and passed as ``decide(observations={tenant: TenantObservation(...)})``
+    — replacing the PR-5 keyword sprawl (``classes=``, ``src_lens=``,
+    ``lengths=``, ``spaces=`` riding alongside a ``TenantLoad`` mapping),
+    which is kept one release behind a ``DeprecationWarning``.
+    """
+
+    # load signals (sampled from the tenant's engine / replica group)
+    pending_tokens: int = 0          # owed work units (steps / prompt toks)
+    queue_depth: int = 0             # requests awaiting admission
+    active: int = 0                  # live decode slots (all replicas)
+    arena_utilization: float = 0.0   # KV-arena pressure, 0..1
+    # workload identity + observed traffic (Stage-1 inputs)
+    wclass: Optional[str] = None     # workload class (None: derive from cfg)
+    recent_lengths: Tuple[int, ...] = ()   # recently observed job lengths
+    src_len: int = 0                 # enc-dec per-slot source capacity
+    space: Optional[TenantDesignSpace] = None   # Stage-1 search bounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,7 +314,48 @@ class AnalyticalPolicy:
         return self._cost_cache[key]
 
     # -- the two-stage search ----------------------------------------------
-    def decide(self, loads: Mapping[str, TenantLoad],
+    @staticmethod
+    def _as_observations(observations, classes, src_lens, lengths, spaces
+                         ) -> Dict[str, TenantObservation]:
+        """Normalize ``decide``'s inputs to per-tenant TenantObservations.
+
+        The PR-5 form — a ``TenantLoad`` mapping with the Stage-1 inputs
+        riding as parallel keyword mappings — folds in behind a
+        ``DeprecationWarning`` (kept one release)."""
+        legacy = (any(m is not None for m in (classes, src_lens, lengths,
+                                              spaces))
+                  or any(not isinstance(o, TenantObservation)
+                         for o in observations.values()))
+        if not legacy:
+            return dict(observations)
+        warnings.warn(
+            "AnalyticalPolicy.decide(loads, classes=, src_lens=, lengths=, "
+            "spaces=) is deprecated; pass observations="
+            "{tenant: TenantObservation(...)}",
+            DeprecationWarning, stacklevel=3)
+        classes = dict(classes or {})
+        src_lens = dict(src_lens or {})
+        lengths = dict(lengths or {})
+        spaces = dict(spaces or {})
+        out = {}
+        for t, o in observations.items():
+            if isinstance(o, TenantObservation):
+                out[t] = dataclasses.replace(
+                    o, wclass=classes.get(t, o.wclass),
+                    src_len=src_lens.get(t, o.src_len),
+                    recent_lengths=tuple(lengths.get(t, o.recent_lengths)),
+                    space=spaces.get(t, o.space))
+            else:
+                out[t] = TenantObservation(
+                    pending_tokens=o.pending_tokens,
+                    queue_depth=o.queue_depth, active=o.active,
+                    arena_utilization=o.arena_utilization,
+                    wclass=classes.get(t), src_len=src_lens.get(t, 0),
+                    recent_lengths=tuple(lengths.get(t, ())),
+                    space=spaces.get(t))
+        return out
+
+    def decide(self, observations: Mapping[str, TenantObservation],
                cfgs: Mapping[str, ModelConfig],
                current: Mapping[str, object],
                num_cus: int,
@@ -293,24 +367,31 @@ class AnalyticalPolicy:
         """Return (per-tenant design points, reason).
 
         Each returned :class:`DesignPoint` carries the tenant's CU grant
-        plus its Stage-1-optimal engine knobs (TP degree / slots / bucket
-        ladder — ``None`` knobs mean "keep").  Tenants with no load are
-        parked (cus 0); returning the ``current`` points means "leave the
-        fabric alone".
+        plus its Stage-1-optimal engine knobs (TP degree / replica count /
+        slots / bucket ladder — ``None`` knobs mean "keep").  Tenants with
+        no load are parked (cus 0); returning the ``current`` points means
+        "leave the fabric alone".
 
-        ``current`` maps tenant -> applied CU count (int) or applied
-        DesignPoint.  ``classes`` maps tenant -> workload class; omitted
-        tenants derive from their config (encoder tenancy can't be derived,
-        so mixed fabrics pass it explicitly).  ``src_lens`` maps enc-dec
-        tenants to their per-slot source capacity (prices the per-step
-        cross-attention read).  ``lengths`` maps tenants to recently
-        observed job/source lengths and ``spaces`` to their Stage-1 design
-        spaces — both fabric-supplied; without a space a tenant is priced
-        split-only (its CU count is the whole design point)."""
-        classes = dict(classes or {})
-        src_lens = dict(src_lens or {})
-        lengths = dict(lengths or {})
-        spaces = dict(spaces or {})
+        ``observations`` maps tenant -> :class:`TenantObservation`: the
+        sampled load signals plus workload class (``None`` derives from the
+        tenant's config; encoder tenancy can't be derived, so mixed fabrics
+        set it), enc-dec source capacity (prices the per-step
+        cross-attention read), recently observed job lengths and the
+        tenant's Stage-1 design space — without a space a tenant is priced
+        split-only (its CU count is the whole design point).  ``current``
+        maps tenant -> applied CU count (int) or applied DesignPoint.
+
+        The remaining keywords are the deprecated PR-5 calling convention
+        (``loads`` + parallel mappings), kept one release behind a
+        ``DeprecationWarning``."""
+        loads = self._as_observations(observations, classes, src_lens,
+                                      lengths, spaces)
+        classes = {t: o.wclass for t, o in loads.items()
+                   if o.wclass is not None}
+        src_lens = {t: o.src_len for t, o in loads.items() if o.src_len}
+        lengths = {t: o.recent_lengths for t, o in loads.items()}
+        spaces = {t: o.space for t, o in loads.items()
+                  if o.space is not None}
         for t in cfgs:
             classes.setdefault(t, workload_class_of(cfgs[t]))
         # arena pressure inflates demand: a hot arena means queued work the
@@ -465,6 +546,420 @@ def _candidate_splits(num_cus: int, busy: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
+# data-parallel replica groups: N independent engines inside one grant
+# ---------------------------------------------------------------------------
+
+class _Replica:
+    """One engine instance inside a :class:`ReplicaGroup`, plus its rid
+    translation — engine rids are per-engine and restart on adoption, so
+    the group owns the stable rid a caller sees (``to_group`` maps the
+    engine's rid to it)."""
+
+    __slots__ = ("engine", "to_group", "index")
+
+    def __init__(self, engine: Engine, index: int = 0):
+        self.engine = engine
+        self.to_group: Dict[int, int] = {}
+        self.index = index
+
+
+class ReplicaGroup:
+    """``dp`` independent same-design engines tiling one tenant's CU grant
+    (the DesignPoint ``dp`` axis — Herald-style replica tiling).
+
+    One decode step's batched GEMV cannot use more slots than fit one
+    replica's KV arena, so on a wide grant a memory-capped tenant is better
+    served by N narrow engines on disjoint ``replica_submesh`` tiles, each
+    decoding its own batch concurrently, than by one wide engine whose
+    extra CUs shard an unchanged (memory-bound) batch.  The group IS the
+    tenant's engine as far as the fabric is concerned — same Engine
+    protocol — and owns:
+
+    * **routing**: ``submit`` places each request on the least-loaded
+      replica (fewest owed tokens, then shallowest queue, then lowest
+      index — deterministic);
+    * **merged load signals**: queue depth / active / owed tokens sum
+      across replicas, arena pressure averages, ``recent_lengths`` is the
+      union — so the policy observes the tenant, not a replica;
+    * **the dp retune** (``apply`` with a changed ``point.dp``): retiring
+      replicas are drained via :meth:`~DecodeEngine.evacuate` and their
+      live requests adopted by survivors through exact cache-row copies
+      (never re-prefilled — a different reduction order could flip an
+      argmax), queues rebalance across the new replica set, and every
+      request keeps its stable group rid, so per-request streams are
+      bit-identical across the retune;
+    * **warm compile across tiles**: every replica slice has its own mesh
+      fingerprint, so ``warm_compile`` warms each of the ``dp`` slices
+      through the shared executable cache (slices of equal width still
+      share programs whenever their fingerprints coincide).
+
+    Replicas at the same TP degree run identical XLA programs — the slices
+    differ only in device ids — so which replica serves a request never
+    changes its tokens (pinned by tests/test_fabric.py).
+    """
+
+    def __init__(self, wclass: str, model, params, serve_cfg: ServeConfig,
+                 *, sub=None, rules: Optional[part.ShardingRules] = None,
+                 exec_cache: Optional[ExecutableCache] = None,
+                 cu_axis: str = "model"):
+        self._wclass = wclass
+        self.workload_class = wclass
+        self._model = model
+        self._params = params            # annotated: grows fresh replicas
+        self._serve_cfg = serve_cfg
+        self._rules = rules
+        self._exec = (exec_cache if exec_cache is not None
+                      else ExecutableCache())
+        self._cu_axis = cu_axis
+        self._granted = _mesh_of(sub)    # the group's full grant (unsliced)
+        self._dp = 1
+        self._next_rid = 0
+        # harvested from retired replicas so results()/telemetry survive a
+        # dp shrink
+        self._retired_results: Dict[int, Any] = {}
+        self._retired_builds = 0
+        self._retired_reshards = 0
+        self._replicas: List[_Replica] = [_Replica(build_engine(
+            wclass, model, params, serve_cfg, mesh=self._granted,
+            rules=rules, exec_cache=self._exec))]
+
+    # -- grant geometry -------------------------------------------------
+    def _grant_width(self, granted) -> Optional[int]:
+        if granted is None or self._cu_axis not in granted.axis_names:
+            return None
+        ax = granted.axis_names.index(self._cu_axis)
+        return granted.devices.shape[ax]
+
+    @property
+    def dp(self) -> int:
+        """Live replica count."""
+        return self._dp
+
+    @property
+    def replicas(self) -> Tuple[Engine, ...]:
+        """The member engines, replica index order (tests/telemetry)."""
+        return tuple(r.engine for r in self._replicas)
+
+    # -- work ingestion / progress --------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 16, **kwargs) -> int:
+        """Route one request to the least-loaded replica (owed tokens,
+        then queue depth, then replica index — deterministic tie-break);
+        returns its stable group rid."""
+        rep = min(self._replicas,
+                  key=lambda r: (r.engine.pending_tokens(),
+                                 r.engine.queue_depth, r.index))
+        erid = rep.engine.submit(tokens, max_new_tokens, **kwargs)
+        grid = self._next_rid
+        self._next_rid += 1
+        rep.to_group[erid] = grid
+        return grid
+
+    def step(self) -> List[Tuple[int, Any]]:
+        """Step every replica; emitted (rid, unit) pairs carry group rids."""
+        out: List[Tuple[int, Any]] = []
+        for rep in self._replicas:
+            out.extend((rep.to_group[erid], v) for erid, v in
+                       rep.engine.step())
+        return out
+
+    def results(self) -> Dict[int, Any]:
+        out = dict(self._retired_results)
+        for rep in self._replicas:
+            out.update((rep.to_group[erid], v) for erid, v in
+                       rep.engine.results().items())
+        return out
+
+    def snapshot(self) -> Dict[int, Any]:
+        out = dict(self._retired_results)
+        for rep in self._replicas:
+            out.update((rep.to_group[erid], v) for erid, v in
+                       rep.engine.snapshot().items())
+        return out
+
+    def run_to_completion(self, max_steps: int = 1000) -> Dict[int, Any]:
+        """Step until idle (or ``max_steps``); returns ``snapshot()``."""
+        for _ in range(max_steps):
+            if not self.has_work:
+                break
+            self.step()
+        return self.snapshot()
+
+    # -- merged load signals --------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return sum(r.engine.queue_depth for r in self._replicas)
+
+    @property
+    def active_count(self) -> int:
+        return sum(r.engine.active_count for r in self._replicas)
+
+    @property
+    def has_work(self) -> bool:
+        return any(r.engine.has_work for r in self._replicas)
+
+    def pending_tokens(self) -> int:
+        return sum(r.engine.pending_tokens() for r in self._replicas)
+
+    def arena_utilization(self) -> float:
+        return (sum(r.engine.arena_utilization() for r in self._replicas)
+                / max(len(self._replicas), 1))
+
+    def recent_lengths(self) -> Tuple[int, ...]:
+        return tuple(itertools.chain.from_iterable(
+            r.engine.recent_lengths() for r in self._replicas))
+
+    # -- pass-throughs the fabric's DSE plumbing reads ------------------
+    @property
+    def cfg(self) -> ServeConfig:
+        return self._replicas[0].engine.cfg
+
+    @property
+    def params(self):
+        """Replica 0's device-resident params (tests/telemetry: replicas
+        share one design, so one replica's placement is the tenant's)."""
+        return self._replicas[0].engine.params
+
+    @property
+    def arena(self):
+        """Replica 0's admission arena (slots are a per-replica knob, so
+        per-slot sizing reads one replica); None for arena-less classes."""
+        return getattr(self._replicas[0].engine, "arena", None)
+
+    @property
+    def _max_src(self) -> int:
+        return getattr(self._replicas[0].engine, "_max_src", 0)
+
+    # -- telemetry -------------------------------------------------------
+    @property
+    def reshard_count(self) -> int:
+        return self._retired_reshards + sum(r.engine.reshard_count
+                                            for r in self._replicas)
+
+    @property
+    def compile_builds(self) -> int:
+        return self._retired_builds + sum(r.engine.compile_builds
+                                          for r in self._replicas)
+
+    def stats(self) -> Dict[str, Any]:
+        """Group-merged snapshot (sums / averages across replicas), plus
+        each replica's own ``stats()`` under ``per_replica``.
+
+        A superset of one engine's ``stats()``: engine-specific keys the
+        group doesn't know about (``bucket_hits``, ``seqs_done``, ...)
+        pass through merged — numerics sum, dicts of numerics sum
+        key-wise — so telemetry consumers see the tenant, not a wrapper.
+        """
+        per = [r.engine.stats() for r in self._replicas]
+        merged: Dict[str, Any] = {}
+        for key in per[0]:
+            vals = [s[key] for s in per if key in s]
+            head = vals[0]
+            if isinstance(head, bool):
+                merged[key] = head
+            elif isinstance(head, (int, float)):
+                merged[key] = type(head)(sum(vals))
+            elif isinstance(head, dict) and all(
+                    isinstance(v, (int, float)) and not isinstance(v, bool)
+                    for d in vals for v in d.values()):
+                tot: Dict[Any, Any] = {}
+                for d in vals:
+                    for k, v in d.items():
+                        tot[k] = tot.get(k, 0) + v
+                merged[key] = tot
+            else:
+                merged[key] = head       # replicas share one design
+        merged.update({
+            "workload_class": self.workload_class,
+            "dp": self._dp,
+            "queue_depth": self.queue_depth,
+            "active": self.active_count,
+            "pending_tokens": self.pending_tokens(),
+            "arena_utilization": round(self.arena_utilization(), 4),
+            "reshard_count": self.reshard_count,
+            "compile_builds": self.compile_builds,
+            "design": self.design(),
+            "per_replica": per,
+        })
+        return merged
+
+    # -- recomposition / design-point reconfiguration -------------------
+    def design(self) -> Dict[str, Any]:
+        """The group's applied design point: replica 0's engine knobs
+        (replicas share one design) plus the replica count."""
+        d = dict(self._replicas[0].engine.design())
+        d["dp"] = self._dp
+        return d
+
+    def sync(self) -> None:
+        for rep in self._replicas:
+            rep.engine.sync()
+
+    def reshard_to(self, sub) -> None:
+        """Move the whole group onto a new grant, each replica onto its
+        tile (current dp kept)."""
+        self._granted = _mesh_of(sub)
+        for rep in self._replicas:
+            rep.engine.reshard_to(part.replica_submesh(
+                self._granted, rep.index, self._dp, self._cu_axis))
+
+    def apply(self, sub=None,
+              point: Optional[DesignPoint] = None) -> Dict[str, Any]:
+        """Apply a design-point delta group-wide (``None`` fields = keep).
+
+        ``point.dp`` is consumed here: an unchanged dp fans the
+        per-replica knobs out to every member engine (each on its
+        ``replica_submesh`` tile of the — possibly new — grant); a changed
+        dp runs the drain-and-rebalance retune (:meth:`_retarget_dp`),
+        which preserves every request's stable rid and exact token stream.
+        Returns the knobs actually applied (replica 0's view, plus ``dp``
+        when it changed)."""
+        point = point if point is not None else DesignPoint(cus=0)
+        granted = _mesh_of(sub) if sub is not None else self._granted
+        dp = point.dp if point.dp is not None else self._dp
+        dp = max(int(dp), 1)
+        width = self._grant_width(granted)
+        if width is not None:
+            dp = min(dp, width)
+        eng_point = dataclasses.replace(point, dp=None)
+        if dp != self._dp:
+            applied = self._retarget_dp(granted, dp, eng_point)
+            applied["dp"] = dp
+        else:
+            applied = {}
+            for rep in self._replicas:
+                s = (part.replica_submesh(granted, rep.index, dp,
+                                          self._cu_axis)
+                     if sub is not None else None)
+                out = rep.engine.apply(s, eng_point)
+                if rep.index == 0:
+                    applied = out
+        self._granted = granted
+        return applied
+
+    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
+                    tp: Optional[int] = None, buckets=None,
+                    dp: Optional[int] = None) -> Dict[str, Any]:
+        """Deprecated keyword form of :meth:`apply` (kept one release)."""
+        warnings.warn(
+            "ReplicaGroup.reconfigure(sub, slots=, tp=, buckets=, dp=) is "
+            "deprecated; use ReplicaGroup.apply(sub, DesignPoint(...))",
+            DeprecationWarning, stacklevel=2)
+        return self.apply(sub, DesignPoint(
+            cus=0, tp=tp, slots=slots,
+            buckets=tuple(buckets) if buckets is not None else None, dp=dp))
+
+    def _retarget_dp(self, granted, dp: int,
+                     eng_point: DesignPoint) -> Dict[str, Any]:
+        """Change the replica count live: drain, re-tile, rebalance.
+
+        Retiring replicas are stripped of ALL work (live slots exported as
+        exact host cache blocks, queues handed back) and their finished
+        records / telemetry harvested; surviving replicas give up their
+        queues too, then move onto their new ``replica_submesh`` tiles with
+        their slot pools pre-grown to fit planned adoptions; growth
+        replicas are built fresh on theirs.  Orphaned live requests are
+        then adopted least-loaded-first via exact cache-row copies (bit-
+        identical streams — never re-prefilled) and queues redistribute by
+        the same order, every request keeping its stable group rid."""
+        keep, retire = self._replicas[:dp], self._replicas[dp:]
+        live: List[Tuple[int, Any, Any]] = []
+        queued: List[Tuple[int, Any]] = []
+        for rep in retire:
+            l_reqs, q_reqs = rep.engine.evacuate()
+            live.extend((rep.to_group[r.rid], r, blk) for r, blk in l_reqs)
+            queued.extend((rep.to_group[r.rid], r) for r in q_reqs)
+            for erid, v in rep.engine.results().items():
+                if erid in rep.to_group:
+                    self._retired_results[rep.to_group[erid]] = v
+            self._retired_builds += rep.engine.compile_builds
+            self._retired_reshards += rep.engine.reshard_count
+        for rep in keep:
+            queued.extend((rep.to_group[r.rid], r)
+                          for r in rep.engine.export_queued())
+        # plan live adoptions before any engine moves: least-loaded target
+        # first, replica-index tie-break (deterministic)
+        occupancy = {i: (keep[i].engine.active_count if i < len(keep) else 0)
+                     for i in range(dp)}
+        placed: Dict[int, List] = {i: [] for i in range(dp)}
+        for item in live:
+            i = min(range(dp),
+                    key=lambda j: (occupancy[j] + len(placed[j]), j))
+            placed[i].append(item)
+        applied: Dict[str, Any] = {}
+        reps: List[_Replica] = []
+        for i in range(dp):
+            tile = part.replica_submesh(granted, i, dp, self._cu_axis)
+            if i < len(keep):
+                rep = keep[i]
+                need = rep.engine.active_count + len(placed[i])
+                slots = (eng_point.slots if eng_point.slots is not None
+                         else rep.engine.design()["slots"])
+                out = rep.engine.apply(tile, dataclasses.replace(
+                    eng_point, slots=max(slots, need, 1)))
+                if i == 0:
+                    applied = out
+            else:
+                rep = _Replica(self._build_replica(
+                    tile, eng_point, min_slots=len(placed[i])))
+            rep.index = i
+            reps.append(rep)
+        self._replicas, self._dp = reps, dp
+        for i, items in placed.items():
+            rep = reps[i]
+            for grid, req, block in items:
+                rep.to_group[rep.engine.adopt_request(req, block)] = grid
+        for grid, req in queued:
+            rep = min(reps, key=lambda r: (r.engine.pending_tokens(),
+                                           r.engine.queue_depth, r.index))
+            rep.to_group[rep.engine.adopt_queued(req)] = grid
+        return applied
+
+    def _build_replica(self, mesh, eng_point: DesignPoint,
+                       min_slots: int = 0) -> Engine:
+        """A fresh member engine on ``mesh`` at the group's design (dp
+        grow) — sized to at least ``min_slots`` so planned adoptions fit."""
+        d0 = self._replicas[0].engine.design()
+        slots = (eng_point.slots if eng_point.slots is not None
+                 else d0["slots"])
+        cfg = dataclasses.replace(self._serve_cfg,
+                                  max_slots=max(slots, min_slots, 1))
+        ladder = (eng_point.buckets if eng_point.buckets is not None
+                  else d0["buckets"])
+        if ladder:
+            cfg = dataclasses.replace(cfg, len_buckets=tuple(ladder))
+        eng = build_engine(self._wclass, self._model, self._params, cfg,
+                           mesh=mesh, rules=self._rules,
+                           exec_cache=self._exec)
+        tp = eng_point.tp if eng_point.tp is not None else d0["tp"]
+        if tp is not None:
+            eng.apply(None, DesignPoint(cus=0, tp=tp))
+        return eng
+
+    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
+                     slots: Optional[int] = None, tp: Optional[int] = None,
+                     buckets=None) -> int:
+        """Pre-compile a candidate design point's programs for every
+        replica tile of a candidate grant (``point.dp``, defaulting to the
+        live dp), through the shared executable cache — each tile has its
+        own mesh fingerprint, so warming replica 0's programs alone would
+        leave the sibling tiles cold.  Returns cold builds performed."""
+        point = DecodeEngine._warm_point(point, slots, tp, buckets)
+        granted = _mesh_of(sub) if sub is not None else self._granted
+        dp = point.dp if point.dp is not None else self._dp
+        dp = max(int(dp), 1)
+        width = self._grant_width(granted)
+        if width is not None:
+            dp = min(dp, width)
+        eng_point = dataclasses.replace(point, dp=None)
+        eng0 = self._replicas[0].engine
+        if granted is None:
+            return eng0.warm_compile(None, eng_point)
+        return sum(eng0.warm_compile(
+            part.replica_submesh(granted, i, dp, self._cu_axis), eng_point)
+            for i in range(dp))
+
+
+# ---------------------------------------------------------------------------
 # the controller
 # ---------------------------------------------------------------------------
 
@@ -482,12 +977,19 @@ class ComposedServer:
 
     With a two-stage :class:`AnalyticalPolicy` (the default) the fabric
     runs the paper's full DSE in the serving loop: each decide tick it
-    snapshots per-tenant design spaces and observed job lengths, the policy
-    returns Stage-1-optimal design points per tenant (CUs + TP degree +
-    slots + bucket ladder), and ``recompose`` applies the deltas live —
-    CU moves via ``reshard_to``-style migration, knob changes via
-    ``Engine.reconfigure`` (retunes), both re-entering the shared AOT cache
-    under the new fingerprints so warm-compile covers the new programs.
+    builds per-tenant :class:`TenantObservation` records (``observe``), the
+    policy returns Stage-1-optimal design points per tenant (CUs + TP
+    degree + replica count + slots + bucket ladder), and ``recompose``
+    applies the deltas live — CU moves via ``reshard_to``-style migration,
+    knob changes via ``Engine.apply`` (retunes; a changed ``dp`` triggers
+    the ReplicaGroup's drain-and-rebalance), both re-entering the shared
+    AOT cache under the new fingerprints so warm-compile covers the new
+    programs.
+
+    Each tenant's engine is a :class:`ReplicaGroup`: ``dp`` independent
+    same-design engines tiling the tenant's grant, with requests routed to
+    the least-loaded replica and load signals merged — at ``dp=1`` (the
+    default) the group is a transparent wrapper over one engine.
 
     tp: shard each tenant's engine (params + pooled state) over its
         sub-mesh with ``serve_engine_rules`` so granted CUs buy measured
@@ -543,7 +1045,7 @@ class ComposedServer:
         self.cfgs: Dict[str, ModelConfig] = {}
         self.classes: Dict[str, str] = {}
         self.src_lens: Dict[str, int] = {}
-        self.engines: Dict[str, Engine] = {}
+        self.engines: Dict[str, ReplicaGroup] = {}
         for spec in tenants:
             cfg = (get_reduced(spec.arch) if spec.reduced
                    else get_config(spec.arch))
@@ -557,10 +1059,10 @@ class ComposedServer:
                 # prices the per-step cross-attention source-cache read
                 self.src_lens[spec.name] = (spec.serve.max_src_len
                                             or spec.serve.max_len)
-            self.engines[spec.name] = build_engine(
+            self.engines[spec.name] = ReplicaGroup(
                 wclass, model, params, spec.serve,
-                mesh=self.subs[spec.name], rules=self.rules,
-                exec_cache=self.exec_cache)
+                sub=self.subs[spec.name], rules=self.rules,
+                exec_cache=self.exec_cache, cu_axis=cu_axis)
 
     # ------------------------------------------------------------------
     def submit(self, tenant: str, tokens, max_new_tokens: int = 16,
@@ -576,10 +1078,28 @@ class ComposedServer:
                 for t in self.engines}
 
     def loads(self) -> Dict[str, TenantLoad]:
-        """Per-tenant load signals sampled from the engines (the policy's
-        ``decide`` inputs)."""
+        """Per-tenant load signals sampled from the engines (group-merged
+        across replicas).  Kept for telemetry/examples; the policy's
+        ``decide`` input is :meth:`observe`."""
         return {t: TenantLoad(eng.pending_tokens(), eng.queue_depth,
                               eng.active_count, eng.arena_utilization())
+                for t, eng in self.engines.items()}
+
+    def observe(self) -> Dict[str, TenantObservation]:
+        """Per-tenant :class:`TenantObservation` — the one record
+        ``AnalyticalPolicy.decide`` consumes: replica-merged load signals,
+        workload class, observed job lengths, enc-dec source capacity and
+        the tenant's Stage-1 design space."""
+        spaces = self._design_spaces() or {}
+        return {t: TenantObservation(
+                    pending_tokens=eng.pending_tokens(),
+                    queue_depth=eng.queue_depth,
+                    active=eng.active_count,
+                    arena_utilization=eng.arena_utilization(),
+                    wclass=self.classes[t],
+                    recent_lengths=eng.recent_lengths(),
+                    src_len=self.src_lens.get(t, 0),
+                    space=spaces.get(t))
                 for t, eng in self.engines.items()}
 
     # ------------------------------------------------------------------
@@ -641,8 +1161,11 @@ class ComposedServer:
                 base_slots=d["slots"],
                 base_buckets=tuple(d["buckets"] or ()),
                 base_tp=d["tp"],
+                base_dp=d.get("dp", 1),
                 per_slot_elems=per_slot,
-                tp_allowed=self.rules is not None)
+                tp_allowed=self.rules is not None,
+                slot_cap=max(eng.cfg.slot_cap, 1),
+                dp_cap=max(self.specs[t].dp_cap, 1))
         return out
 
     def _applied_points(self) -> Dict[str, DesignPoint]:
@@ -654,30 +1177,50 @@ class ComposedServer:
             d = eng.design()
             out[t] = DesignPoint(
                 cus=c, tp=d["tp"], slots=d["slots"],
-                buckets=tuple(d["buckets"]) if d["buckets"] else None)
+                buckets=tuple(d["buckets"]) if d["buckets"] else None,
+                dp=d.get("dp", 1))
         return out
 
     def _knob_delta(self, t: str, p: DesignPoint) -> Dict[str, object]:
         """Engine-knob overrides that actually change tenant ``t``'s
         configuration when design point ``p`` commits (None knobs keep; a
-        slot shrink clamps at the live occupancy — streams are migrated,
-        never evicted)."""
+        slot shrink clamps at the per-replica live occupancy — streams are
+        migrated, never evicted).  TP degree and slots compare at the
+        point's replica-tile width: a group at dp computes on
+        ``cus // dp``-wide tiles, not the whole grant."""
         eng = self.engines[t]
         d = eng.design()
         out: Dict[str, object] = {}
+        dp_now = d.get("dp", 1) or 1
+        dp_want = dp_now
+        if p.dp is not None:
+            dp_want = max(1, min(p.dp, max(p.cus, 1)))
+            if dp_want != dp_now:
+                out["dp"] = dp_want
+        width = max(p.cus // max(dp_want, 1), 1)
         if p.tp is not None:
-            want = min(p.tp, p.cus)
-            would = min(d["tp"], p.cus) if d["tp"] else p.cus
+            want = min(p.tp, width)
+            would = min(d["tp"], width) if d["tp"] else width
             if want != would:
                 out["tp"] = p.tp
         if p.slots is not None:
-            want_s = max(p.slots, eng.active_count)
+            want_s = max(p.slots, -(-eng.active_count // max(dp_want, 1)))
             if want_s != d["slots"]:
                 out["slots"] = want_s
         if p.buckets is not None and d["buckets"] is not None \
                 and tuple(p.buckets) != tuple(d["buckets"]):
             out["buckets"] = tuple(p.buckets)
         return out
+
+    @staticmethod
+    def _delta_point(p: DesignPoint,
+                     knobs: Optional[Dict[str, object]]) -> DesignPoint:
+        """A knob delta as the DesignPoint handed to ``Engine.apply`` /
+        ``warm_compile`` (absent knobs become None = keep)."""
+        kn = knobs or {}
+        return DesignPoint(cus=p.cus, tp=kn.get("tp"),
+                           slots=kn.get("slots"),
+                           buckets=kn.get("buckets"), dp=kn.get("dp"))
 
     def _no_change(self, points: Mapping[str, DesignPoint]) -> bool:
         """True when applying ``points`` would change nothing: same CU
@@ -707,12 +1250,8 @@ class ComposedServer:
             return self.recompose(target, reason=reason, overlapped=True)
 
         target, reason = self.policy.decide(
-            self.loads(), self.cfgs, self._applied_points(),
-            self.composer.num_cus, classes=self.classes,
-            src_lens=self.src_lens,
-            lengths={t: eng.recent_lengths()
-                     for t, eng in self.engines.items()},
-            spaces=self._design_spaces())
+            self.observe(), self.cfgs, self._applied_points(),
+            self.composer.num_cus)
         target = {t: p for t, p in target.items() if p.cus > 0}
         if self._no_change(target):
             # idle decide interval: nothing committed — speculatively warm
@@ -735,8 +1274,9 @@ class ComposedServer:
         touched = set(delta.moved + delta.admitted)
         touched |= {t for t, p in points.items() if self._knob_delta(t, p)}
         return [self._pool().submit(
-            lambda t=t: self.engines[t].warm_compile(
-                new_subs[t], **self._knob_delta(t, points[t])))
+            lambda t=t, pt=self._delta_point(
+                points[t], self._knob_delta(t, points[t])):
+            self.engines[t].warm_compile(new_subs[t], pt))
             for t in sorted(touched)]
 
     def _speculative_prewarm(self) -> None:
@@ -763,7 +1303,7 @@ class ComposedServer:
         ru = {t: p for t, p in ru.items() if p.cus > 0}
         if not ru or self._no_change(ru):
             return
-        key = tuple(sorted((t, p.cus, p.tp, p.slots,
+        key = tuple(sorted((t, p.cus, p.tp, p.slots, p.dp,
                             tuple(p.buckets or ())) for t, p in ru.items()))
         if key in self._spec_warmed:
             return
@@ -793,13 +1333,15 @@ class ComposedServer:
         per-tenant design-point deltas (DSE Stage-1 knobs).
 
         ``target_sizes`` maps tenant -> CU count (int, the pre-DSE contract)
-        or DesignPoint (CUs + TP degree + slots + bucket ladder).  Only
-        moved tenants pay a state migration; unchanged ones keep their
-        devices — but a tenant whose knobs changed with its CU set intact
-        is *retuned* in place (``Engine.reconfigure``, draining nothing:
-        live slots migrate inside the resize).  With warming on, the target
-        composition's executables are compiled at the target design points
-        before any state moves, so the post-move step is stall-free."""
+        or DesignPoint (CUs + TP degree + replica count + slots + bucket
+        ladder).  Only moved tenants pay a state migration; unchanged ones
+        keep their devices — but a tenant whose knobs changed with its CU
+        set intact is *retuned* in place (``Engine.apply``, draining
+        nothing: live slots migrate inside the resize, and a dp retune
+        rebalances them across the new replica set).  With warming on, the
+        target composition's executables are compiled at the target design
+        points before any state moves, so the post-move step is
+        stall-free."""
         before = self.sizes()
         points = {t: (v if isinstance(v, DesignPoint)
                       else DesignPoint(cus=int(v)))
@@ -817,14 +1359,15 @@ class ComposedServer:
             w0 = time.monotonic()
             for t in touched:
                 warm_builds += self.engines[t].warm_compile(
-                    new_subs[t], **knobs.get(t, {}))
+                    new_subs[t],
+                    self._delta_point(points[t], knobs.get(t)))
             warm_s = time.monotonic() - w0
         t0 = time.monotonic()
         applied: Dict[str, Dict] = {}
         for t in touched:
             eng = self.engines[t]
-            out = eng.reconfigure(new_subs[t] if t in moved else None,
-                                  **knobs.get(t, {}))
+            out = eng.apply(new_subs[t] if t in moved else None,
+                            self._delta_point(points[t], knobs.get(t)))
             if out:
                 applied[t] = out
             eng.sync()
@@ -904,7 +1447,8 @@ class ComposedServer:
             "design_points": {
                 t: {"cus": len(self.subs[t].cu_ids) if t in self.subs else 0,
                     "tp": d["tp"], "slots": d["slots"],
-                    "buckets": list(d["buckets"]) if d["buckets"] else None}
+                    "buckets": list(d["buckets"]) if d["buckets"] else None,
+                    "dp": d.get("dp", 1)}
                 for t, d in ((t, eng.design())
                              for t, eng in self.engines.items())},
             "retunes": sum(len(e.retuned) for e in self.events),

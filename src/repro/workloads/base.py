@@ -28,10 +28,11 @@ it — any object with these methods can be a tenant.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Protocol, Sequence, Tuple, \
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, \
     runtime_checkable
 
 from repro.configs.base import ModelConfig
+from repro.core.dse import DesignPoint
 
 # canonical workload-class ids
 DECODE = "decode"
@@ -111,11 +112,16 @@ class Engine(Protocol):
     def arena_utilization(self) -> float: ...
 
     # -- real-time recomposition / design-point reconfiguration ---------
+    # ``apply`` moves the engine onto a new composed sub-accelerator and/or
+    # retunes its runtime knobs in one call; the knobs ride a
+    # :class:`~repro.core.dse.DesignPoint` (``None`` fields = keep).  The
+    # PR-5 ``reconfigure(sub, slots=, tp=, buckets=)`` keyword form remains
+    # one release behind a ``DeprecationWarning``.
     def reshard_to(self, sub) -> None: ...
-    def reconfigure(self, sub=None, *, slots: int = None, tp: int = None,
-                    buckets=None) -> Dict[str, Any]: ...
-    def warm_compile(self, sub, *, slots: int = None, tp: int = None,
-                     buckets=None) -> int: ...
+    def apply(self, sub=None,
+              point: Optional[DesignPoint] = None) -> Dict[str, Any]: ...
+    def warm_compile(self, sub,
+                     point: Optional[DesignPoint] = None) -> int: ...
     def sync(self) -> None: ...
 
     # -- serving-DSE inputs/outputs -------------------------------------

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -47,6 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.arena import AllocationError, FlexArena, ROLE_ACT
 from repro.core.composer import mesh_fingerprint
+from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
 from repro.workloads.base import EngineTelemetry
@@ -115,6 +117,11 @@ class ServeConfig:
     # (EncoderEngine jobs / EncDecEngine sources): compile one program per
     # bucket, run each job in the smallest fitting one.  () = capacity only.
     len_buckets: Tuple[int, ...] = ()
+    # structural ceiling one engine's step program may batch to: apply()
+    # clamps slot resizes here no matter the grant width.  Past this point
+    # a grant only buys throughput via data-parallel replicas (the
+    # ReplicaGroup dp axis), not a wider batch.
+    slot_cap: int = 64
 
 
 @dataclasses.dataclass
@@ -145,7 +152,7 @@ class DecodeEngine(EngineTelemetry):
         self.reshard_count = 0
         # tensor-parallel degree over the granted sub-mesh: None = the whole
         # grant (the pre-DSE default); the serving-side DSE Stage 1 sets it
-        # per design point via reconfigure(tp=...)
+        # per design point via apply(point.tp)
         self._tp: Optional[int] = None
         self._granted = None               # last granted sub-mesh (unsliced)
         self._recent_lens: collections.deque = collections.deque(maxlen=256)
@@ -302,40 +309,57 @@ class DecodeEngine(EngineTelemetry):
         count, encode bucket ladder (None for classes without one)."""
         return {"tp": self._tp, "slots": self.cfg.max_slots, "buckets": None}
 
-    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
-                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
+    def apply(self, sub=None,
+              point: Optional[DesignPoint] = None) -> Dict[str, Any]:
         """Apply a design-point delta live — the engine-side half of the
-        serving DSE's Stage-1 → fabric loop.  Any subset of:
+        serving DSE's Stage-1 → fabric loop.  ``point`` carries the knobs
+        (``None`` fields = keep the current setting):
 
-        * ``sub``     — migrate onto a new sub-accelerator (reshard_to);
-        * ``tp``      — tensor-parallel degree over the grant: params and
-          pooled state reshard onto the first ``tp`` model-axis columns;
-        * ``slots``   — resize the pooled decode cache: live slots are
+        * ``sub``          — migrate onto a new sub-accelerator (reshard_to);
+        * ``point.tp``     — tensor-parallel degree over the grant: params
+          and pooled state reshard onto the first ``tp`` model-axis columns;
+        * ``point.slots``  — resize the pooled decode cache: live slots are
           migrated (exact device-side copy) into the new pool, so pinned
           streams are bit-identical across the resize; never shrinks below
           the current occupancy (live streams are migrated, not evicted);
-        * ``buckets`` — swap the encode-program ladder (encoder / enc-dec
-          subclasses; numerics-safe because encodes are bucket-invariant).
+        * ``point.buckets`` — swap the encode-program ladder (encoder /
+          enc-dec subclasses; numerics-safe because encodes are
+          bucket-invariant);
+        * ``point.dp``     — ignored here: replica count is a *group* knob,
+          consumed by :class:`~repro.serve.fabric.ReplicaGroup` before it
+          fans the per-replica point out to its engines.
 
         Every step re-enters the shared AOT executable cache under the new
         config/mesh fingerprint, so a preceding ``warm_compile`` with the
-        same overrides makes the first post-reconfigure step stall-free.
-        Returns the knobs actually applied (slot clamps included).
+        same point makes the first post-apply step stall-free.  Returns the
+        knobs actually applied (slot clamps included).
         """
+        point = point if point is not None else DesignPoint(cus=0)
         self._harvest()                 # in-flight tokens shaped by old pool
         applied: Dict[str, Any] = {}
-        if tp is not None and tp != (self._tp or 0):
-            self._tp = max(int(tp), 1)
+        if point.tp is not None and point.tp != (self._tp or 0):
+            self._tp = max(int(point.tp), 1)
             applied["tp"] = self._tp
         if sub is not None or "tp" in applied:
             # commit the (new) grant under the (new) degree
             self.reshard_to(sub if sub is not None else self._granted)
-        if slots is not None and int(slots) != self.cfg.max_slots:
-            applied["slots"] = self._resize_slots(int(slots))
-        b = self._apply_buckets(buckets)
+        if point.slots is not None and int(point.slots) != self.cfg.max_slots:
+            applied["slots"] = self._resize_slots(int(point.slots))
+        b = self._apply_buckets(point.buckets)
         if b is not None:
             applied["buckets"] = b
         return applied
+
+    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
+                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
+        """Deprecated keyword form of :meth:`apply` (kept one release)."""
+        warnings.warn(
+            "Engine.reconfigure(sub, slots=, tp=, buckets=) is deprecated; "
+            "use Engine.apply(sub, DesignPoint(...))",
+            DeprecationWarning, stacklevel=2)
+        return self.apply(sub, DesignPoint(
+            cus=0, tp=tp, slots=slots,
+            buckets=tuple(buckets) if buckets is not None else None))
 
     def _apply_buckets(self, buckets):
         """Bucket-ladder hook: plain decode has no encode phase."""
@@ -353,7 +377,8 @@ class DecodeEngine(EngineTelemetry):
         at the live occupancy: streams are migrated, never evicted.
         """
         live = sorted(self._active)
-        slots = max(int(slots), len(live), 1)
+        cap = max(self.cfg.slot_cap, 1)
+        slots = max(min(int(slots), cap), len(live), 1)
         if slots == self.cfg.max_slots:
             return slots
         mapping = {old: new for new, old in enumerate(live)}
@@ -392,6 +417,105 @@ class DecodeEngine(EngineTelemetry):
                                    self._per_token_elems, ROLE_ACT)
         self.arena = arena
         return slots
+
+    # ------------------------------------------------------------------
+    # cross-replica live migration (ReplicaGroup dp retune): a retiring
+    # replica's requests move to a sibling engine by exact cache-row copy —
+    # never by re-prefilling, whose different reduction order could flip an
+    # argmax and break the bit-identical-streams contract
+    # ------------------------------------------------------------------
+    def _export_slot(self, slot: int) -> PyTree:
+        """One slot's cache rows as a host-side block (slot dim kept at
+        size 1, so the block write-back is a plain dynamic_update_slice);
+        leaves without a slot axis export a scalar placeholder."""
+        idx = jnp.asarray([slot], jnp.int32)
+
+        def take(ax, leaf):
+            if ax < 0:
+                return np.zeros((), np.int32)
+            return np.asarray(jax.device_get(jnp.take(leaf, idx, axis=ax)))
+
+        return jax.tree.map(take, self._slot_axes, self.cache)
+
+    def evacuate(self) -> Tuple[List[Tuple[Request, PyTree]], List[Request]]:
+        """Strip this engine of ALL work so sibling replicas can adopt it
+        (ReplicaGroup dp shrink).  Returns ``(live, queued)``: ``live`` is
+        ``[(Request, host cache block)]`` for every active slot, ``queued``
+        the unadmitted requests.  The engine is left idle; its finished
+        records stay readable via ``results()``."""
+        self._harvest()
+        live = []
+        for slot in sorted(self._active):
+            req = self._active[slot]
+            live.append((req, self._export_slot(slot)))
+            self.arena.free_view(req.view)
+        self._active.clear()
+        self._inject.clear()
+        self._free_slots = list(range(self.cfg.max_slots))
+        queued, self._queue = self._queue, []
+        return live, queued
+
+    def _rebuild_arena(self) -> None:
+        """Re-admit every live view into a fresh arena (defragmentation:
+        adoption allocs land in an arena shaped by a different admission
+        history than a freshly resized pool's)."""
+        arena = FlexArena(self._arena_capacity())
+        for req in self._active.values():
+            req.view = arena.alloc(self._slot_rows(req),
+                                   self._per_token_elems, ROLE_ACT)
+        self.arena = arena
+
+    def adopt_request(self, req: Request, block: PyTree) -> int:
+        """Adopt a live request evacuated from a sibling replica: assign a
+        fresh rid (engine rids are per-engine; the ReplicaGroup owns the
+        stable group-level rid), write its cache block into a free slot and
+        resume decoding exactly where the source replica stopped (the last
+        emitted token is host-injected, as after any harvest)."""
+        self._harvest()
+        if not self._free_slots:
+            # callers size the pool before adopting; this is the backstop
+            self._resize_slots(self.cfg.max_slots + 1)
+        try:
+            view = self.arena.alloc(self._slot_rows(req),
+                                    self._per_token_elems, ROLE_ACT)
+        except AllocationError:
+            self._rebuild_arena()
+            view = self.arena.alloc(self._slot_rows(req),
+                                    self._per_token_elems, ROLE_ACT)
+        rid = self._next_rid
+        self._next_rid += 1
+        req.rid, req.view = rid, view
+        req.slot = self._free_slots.pop(0)
+        dev = jax.tree.map(lambda ax, b: b if ax < 0 else jnp.asarray(b),
+                           self._slot_axes, block)
+        self.cache = _write_slot(self.cache, dev, req.slot, self._slot_axes)
+        if self.mesh is not None:
+            # the AOT decode executable requires its exact input shardings;
+            # the eager block write above may have disturbed them
+            self.cache = jax.device_put(
+                self.cache,
+                self._cache_plan.shardings(self.mesh, self._rules_eff))
+        self._active[req.slot] = req
+        if req.out_tokens:
+            self._inject[req.slot] = req.out_tokens[-1]
+        return rid
+
+    def adopt_queued(self, req: Request) -> int:
+        """Adopt a queued (unadmitted) request from a sibling replica:
+        fresh engine rid, no recent-lengths double count (the group already
+        observed the submission once)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        req.rid = rid
+        req.slot, req.view = -1, None
+        self._queue.append(req)
+        return rid
+
+    def export_queued(self) -> List[Request]:
+        """Hand back the unadmitted queue (ReplicaGroup queue rebalance on
+        a dp grow); live slots stay put."""
+        queued, self._queue = self._queue, []
+        return queued
 
     # ------------------------------------------------------------------
     # compiled executables (build counting: EngineTelemetry)
@@ -469,20 +593,37 @@ class DecodeEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_prefill(mesh, nb)))
 
-    def warm_compile(self, sub, *, slots: Optional[int] = None,
-                     tp: Optional[int] = None, buckets=None) -> int:
+    @staticmethod
+    def _warm_point(point, slots, tp, buckets) -> DesignPoint:
+        """Normalize warm_compile's inputs to a DesignPoint; the PR-5
+        keyword form folds in behind a DeprecationWarning."""
+        if slots is not None or tp is not None or buckets is not None:
+            warnings.warn(
+                "warm_compile(sub, slots=, tp=, buckets=) is deprecated; "
+                "use warm_compile(sub, DesignPoint(...))",
+                DeprecationWarning, stacklevel=3)
+            return DesignPoint(
+                cus=0, tp=tp, slots=slots,
+                buckets=tuple(buckets) if buckets is not None else None)
+        return point if point is not None else DesignPoint(cus=0)
+
+    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
+                     slots: Optional[int] = None, tp: Optional[int] = None,
+                     buckets=None) -> int:
         """Pre-compile this engine's decode + known prefill executables for
         a *candidate* sub-accelerator, without moving any state.  Called by
         the fabric before committing a recomposition (possibly from a
         background thread) so the first step on the new composition hits a
-        warm executable.  The keyword overrides warm a candidate *design
-        point* (prospective slot count / TP degree / bucket ladder — the
-        serving DSE's Stage-1 knobs) rather than the engine's current
-        configuration.  Returns the number of cold builds performed."""
-        del buckets                      # no encode phase on plain decode
-        mesh = part.tp_submesh(_mesh_of(sub),
-                               tp if tp is not None else self._tp)
-        B = slots or self.cfg.max_slots
+        warm executable.  ``point`` warms a candidate *design point*
+        (prospective slot count / TP degree / bucket ladder — the serving
+        DSE's Stage-1 knobs; ``dp`` is consumed by the ReplicaGroup, which
+        warms every replica slice) rather than the engine's current
+        configuration.  Returns the number of cold builds performed.  The
+        PR-5 keyword form is deprecated (kept one release)."""
+        point = self._warm_point(point, slots, tp, buckets)
+        mesh = part.tp_submesh(
+            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+        B = point.slots or self.cfg.max_slots
         key = self._config_key(B)
         fp = mesh_fingerprint(mesh)
         built = self._exec.ensure(
@@ -758,8 +899,8 @@ def _migrate_slots(dst_cache: PyTree, src_cache: PyTree,
     """Copy ``src_slots``' rows from ``src_cache`` into slots [0, n) of
     ``dst_cache`` (pool→pool; the pools may differ in slot count but share
     every other dim).  One gather + one block write per leaf — an exact
-    device-side copy, because live slot migration during a
-    ``reconfigure(slots=...)`` resize must preserve streams bit-for-bit."""
+    device-side copy, because live slot migration during an ``apply`` slot
+    resize must preserve streams bit-for-bit."""
     idx = jnp.asarray(src_slots, jnp.int32)
 
     def cp(ax, dst, src):

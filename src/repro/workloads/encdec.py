@@ -249,21 +249,23 @@ class EncDecEngine(DecodeEngine):
             key, self._counted(
                 lambda: self._build_prefill_encdec(mesh, sb, nb)))
 
-    def warm_compile(self, sub, *, slots: Optional[int] = None,
+    def warm_compile(self, sub, point=None, *, slots: Optional[int] = None,
                      tp: Optional[int] = None, buckets=None) -> int:
         """Pre-compile decode plus every (bucket, source kind, decoder
         prompt length) encode/prefill program for a candidate
-        sub-accelerator — at a candidate *design point* when the keyword
-        overrides are given (prospective slot count / TP degree / bucket
-        ladder) — without moving any state.  The ladder and the observed
-        decoder-prompt lengths are finite, so this fully covers the
-        composition.  Returns the number of cold builds performed."""
-        mesh = part.tp_submesh(_mesh_of(sub),
-                               tp if tp is not None else self._tp)
-        E = slots or self.cfg.max_slots
-        key = self._config_key(E, buckets)
-        ladder = (length_buckets(buckets, self._max_src)
-                  if buckets is not None else self._src_buckets)
+        sub-accelerator — at a candidate *design point* when one is given
+        (prospective slot count / TP degree / bucket ladder) — without
+        moving any state.  The ladder and the observed decoder-prompt
+        lengths are finite, so this fully covers the composition.  Returns
+        the number of cold builds performed.  The PR-5 keyword form is
+        deprecated (kept one release)."""
+        point = self._warm_point(point, slots, tp, buckets)
+        mesh = part.tp_submesh(
+            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+        E = point.slots or self.cfg.max_slots
+        key = self._config_key(E, point.buckets)
+        ladder = (length_buckets(point.buckets, self._max_src)
+                  if point.buckets is not None else self._src_buckets)
         fp = mesh_fingerprint(mesh)
         built = self._exec.ensure(
             ("decode", key, fp),

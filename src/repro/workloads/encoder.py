@@ -19,7 +19,7 @@ Design (throughput-oriented):
   one batched forward per group, cutting the padded FLOPs of short
   embedding jobs.  The bucket ladder is static, so ``warm_compile`` still
   fully covers a candidate composition — and the ladder is a *runtime
-  design knob*: ``reconfigure(buckets=...)`` swaps it live (the serving-side
+  design knob*: ``apply(point.buckets)`` swaps it live (the serving-side
   DSE Stage 1 picks it from observed job lengths).  ``stats()`` reports
   per-bucket hit counts (jobs served per bucket);
 * each job's output is the masked mean over its valid positions of
@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -44,11 +45,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.composer import mesh_fingerprint
+from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
 from repro.workloads.base import EngineTelemetry, length_buckets, pick_bucket
 from repro.workloads.compile_cache import ExecutableCache
-from repro.workloads.decode import ServeConfig, _mesh_of, _rules_fp
+from repro.workloads.decode import (DecodeEngine, ServeConfig, _mesh_of,
+                                    _rules_fp)
 
 
 @dataclasses.dataclass
@@ -139,26 +142,29 @@ class EncoderEngine(EngineTelemetry):
         return {"tp": self._tp, "slots": self.cfg.max_slots,
                 "buckets": self._buckets}
 
-    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
-                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
-        """Apply a design-point delta live.  Encoder jobs hold no
-        cross-step device state, so every knob is a host-side swap (plus a
-        params reshard for ``sub``/``tp``): ``slots`` resizes the batched
-        program's job count per step, ``buckets`` swaps the padded-length
-        program ladder (numerics-safe — encodes mask their key padding, so
-        embeddings are bucket-invariant).  Returns the applied knobs."""
+    def apply(self, sub=None,
+              point: Optional[DesignPoint] = None) -> Dict[str, Any]:
+        """Apply a design-point delta live (``point`` fields of ``None`` =
+        keep).  Encoder jobs hold no cross-step device state, so every knob
+        is a host-side swap (plus a params reshard for ``sub``/``tp``):
+        ``slots`` resizes the batched program's job count per step,
+        ``buckets`` swaps the padded-length program ladder (numerics-safe —
+        encodes mask their key padding, so embeddings are bucket-invariant);
+        ``dp`` is a group knob, consumed by the ReplicaGroup.  Returns the
+        applied knobs."""
+        point = point if point is not None else DesignPoint(cus=0)
         applied: Dict[str, Any] = {}
-        if tp is not None and tp != (self._tp or 0):
-            self._tp = max(int(tp), 1)
+        if point.tp is not None and point.tp != (self._tp or 0):
+            self._tp = max(int(point.tp), 1)
             applied["tp"] = self._tp
         if sub is not None or "tp" in applied:
             self.reshard_to(sub if sub is not None else self._granted)
-        if slots is not None and int(slots) != self.cfg.max_slots:
+        if point.slots is not None and int(point.slots) != self.cfg.max_slots:
             self.cfg = dataclasses.replace(self.cfg,
-                                           max_slots=max(int(slots), 1))
+                                           max_slots=max(int(point.slots), 1))
             applied["slots"] = self.cfg.max_slots
-        if buckets is not None:
-            ladder = length_buckets(buckets, self.cfg.max_len)
+        if point.buckets is not None:
+            ladder = length_buckets(point.buckets, self.cfg.max_len)
             if ladder != self._buckets:
                 self._buckets = ladder
                 self._bucket_hits = {b: self._bucket_hits.get(b, 0)
@@ -167,6 +173,43 @@ class EncoderEngine(EngineTelemetry):
         if applied:
             self._cfg_key = self._config_key(self.cfg.max_slots)
         return applied
+
+    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
+                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
+        """Deprecated keyword form of :meth:`apply` (kept one release)."""
+        warnings.warn(
+            "Engine.reconfigure(sub, slots=, tp=, buckets=) is deprecated; "
+            "use Engine.apply(sub, DesignPoint(...))",
+            DeprecationWarning, stacklevel=2)
+        return self.apply(sub, DesignPoint(
+            cus=0, tp=tp, slots=slots,
+            buckets=tuple(buckets) if buckets is not None else None))
+
+    # ------------------------------------------------------------------
+    # cross-replica migration (ReplicaGroup dp retune): encoder jobs hold
+    # no cross-step device state, so only the host queue moves
+    # ------------------------------------------------------------------
+    def evacuate(self) -> Tuple[List, List[EncodeJob]]:
+        """Strip this engine of its queued jobs for adoption by sibling
+        replicas; the live list is always empty (jobs complete within the
+        step that runs them).  Finished records stay readable."""
+        queued, self._queue = self._queue, []
+        return [], queued
+
+    def adopt_queued(self, job: EncodeJob) -> int:
+        """Adopt a queued job from a sibling replica under a fresh engine
+        rid (the ReplicaGroup owns the stable group-level rid)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        job.rid = rid
+        self._queue.append(job)
+        return rid
+
+    def export_queued(self) -> List[EncodeJob]:
+        """Hand back the queued jobs (ReplicaGroup queue rebalance on a dp
+        grow)."""
+        queued, self._queue = self._queue, []
+        return queued
 
     def recent_lengths(self) -> Tuple[int, ...]:
         """Recently submitted job lengths (bounded window) — what the
@@ -212,19 +255,21 @@ class EncoderEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_encode(mesh, sb)))
 
-    def warm_compile(self, sub, *, slots: Optional[int] = None,
-                     tp: Optional[int] = None, buckets=None) -> int:
+    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
+                     slots: Optional[int] = None, tp: Optional[int] = None,
+                     buckets=None) -> int:
         """Pre-compile the batched encode program of every sequence-length
         bucket for a candidate sub-accelerator — at a candidate design
-        point when the keyword overrides are given.  The ladder is finite,
-        so this fully covers the composition.  Returns cold builds
-        performed."""
-        mesh = part.tp_submesh(_mesh_of(sub),
-                               tp if tp is not None else self._tp)
-        B = slots or self.cfg.max_slots
-        key = self._config_key(B, buckets)
-        ladder = (length_buckets(buckets, self.cfg.max_len)
-                  if buckets is not None else self._buckets)
+        point when one is given.  The ladder is finite, so this fully
+        covers the composition.  Returns cold builds performed.  The PR-5
+        keyword form is deprecated (kept one release)."""
+        point = DecodeEngine._warm_point(point, slots, tp, buckets)
+        mesh = part.tp_submesh(
+            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+        B = point.slots or self.cfg.max_slots
+        key = self._config_key(B, point.buckets)
+        ladder = (length_buckets(point.buckets, self.cfg.max_len)
+                  if point.buckets is not None else self._buckets)
         fp = mesh_fingerprint(mesh)
         return sum(self._exec.ensure(
             ("encode", key, fp, sb),

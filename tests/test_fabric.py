@@ -12,7 +12,8 @@ import pytest
 from repro.core.composer import (RecompositionDelta, plan_recomposition,
                                  recomposition_delta)
 from repro.serve.fabric import (AnalyticalPolicy, TenantLoad,
-                                _candidate_splits, _compositions)
+                                TenantObservation, _candidate_splits,
+                                _compositions)
 
 # ---------------------------------------------------------------------------
 # pure delta-planning tests (no devices)
@@ -84,8 +85,8 @@ def test_candidate_splits_proportional_fallback_at_pod_scale():
 # ---------------------------------------------------------------------------
 
 def _load(pending, active=1, util=0.0):
-    return TenantLoad(pending_tokens=pending, queue_depth=0,
-                      active=active, arena_utilization=util)
+    return TenantObservation(pending_tokens=pending, queue_depth=0,
+                             active=active, arena_utilization=util)
 
 
 def _cus(points):
@@ -119,6 +120,27 @@ def test_policy_admits_parked_tenant_with_new_work():
     assert reason == "admit" and _cus(points).get("b", 0) >= 1
 
 
+def test_decide_legacy_keyword_form_warns_and_matches():
+    """The PR-5 calling convention (TenantLoad values + classes=/lengths=
+    side channels) still works one release behind a DeprecationWarning,
+    and decides identically to the TenantObservation form."""
+    from repro.configs import get_reduced
+    cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
+    obs = {"a": _load(100), "b": _load(0)}
+    new_pts, new_reason = AnalyticalPolicy().decide(
+        obs, cfgs, {"a": 4, "b": 4}, 8)
+    legacy = {t: TenantLoad(o.pending_tokens, o.queue_depth, o.active,
+                            o.arena_utilization) for t, o in obs.items()}
+    with pytest.warns(DeprecationWarning):
+        old_pts, old_reason = AnalyticalPolicy().decide(
+            legacy, cfgs, {"a": 4, "b": 4}, 8)
+    assert old_reason == new_reason and _cus(old_pts) == _cus(new_pts)
+    # the keyword side channels also trip the warning on their own
+    with pytest.warns(DeprecationWarning):
+        AnalyticalPolicy().decide(obs, cfgs, {"a": 4, "b": 4}, 8,
+                                  classes={"a": "decode"})
+
+
 # ---------------------------------------------------------------------------
 # device scenarios (8 fake host devices, subprocess)
 # ---------------------------------------------------------------------------
@@ -150,7 +172,7 @@ def test_recomposition_preserves_decode_numerics():
     from repro.core.composer import MeshComposer
     from repro.distribution import strip
     from repro.models import build_model
-    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve import ServeConfig, ServeEngine
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     comp = MeshComposer(mesh)
@@ -189,7 +211,7 @@ def test_composed_server_delta_leaves_unmoved_tenant_devices():
     devices; moved tenants' params land on their new sub-mesh."""
     res = _run("""
     from repro.serve.fabric import ComposedServer, TenantSpec
-    from repro.serve.engine import ServeConfig
+    from repro.serve import ServeConfig
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
@@ -276,7 +298,7 @@ def test_warm_recompose_skips_post_move_compile():
     compiles, and the engine is actually sharded over its new sub-mesh."""
     res = _run("""
     from repro.serve.fabric import ComposedServer, TenantSpec
-    from repro.serve.engine import ServeConfig
+    from repro.serve import ServeConfig
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=32, eos_id=-1)
@@ -325,7 +347,7 @@ def test_prewarm_async_commits_after_background_compile():
     import time
     from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                     TenantSpec)
-    from repro.serve.engine import ServeConfig
+    from repro.serve import ServeConfig
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
@@ -357,6 +379,113 @@ def test_prewarm_async_commits_after_background_compile():
     assert res["lens"] == [24, 24, 24, 24]
 
 
+def test_replica_group_routing_and_merged_stats():
+    """ReplicaGroup under skewed request lengths: least-loaded routing
+    keeps owed work balanced across replicas (no replica ends up with all
+    the long streams), the group-merged load signals equal the sums over
+    ``per_replica`` stats, and every request completes with its full
+    budget under its stable group rid."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.core.dse import DesignPoint
+    from repro.models import build_model
+    from repro.serve import ReplicaGroup, ServeConfig, serve_engine_rules
+    from repro.workloads import DECODE
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    cfg = get_reduced("minitron-4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    grp = ReplicaGroup(DECODE, model, params, sc,
+                       sub=comp.submesh(range(4), "t"),
+                       rules=serve_engine_rules())
+    grp.apply(None, DesignPoint(cus=4, tp=1, dp=4))
+    rng = np.random.default_rng(0)
+    budgets = [32, 2, 32, 2, 32, 2, 32, 2]        # skewed lengths
+    rids = [grp.submit(rng.integers(1, cfg.vocab_size, size=6),
+                       max_new_tokens=b) for b in budgets]
+    owed = [r.pending_tokens() for r in grp.replicas]
+    queued = [r.queue_depth + r.active_count for r in grp.replicas]
+    st = grp.stats()
+    merged_ok = (
+        st["dp"] == 4 and len(st["per_replica"]) == 4
+        and st["pending_tokens"] == sum(owed) == grp.pending_tokens()
+        and st["queue_depth"] == sum(r.queue_depth for r in grp.replicas)
+        and st["active"] == sum(r.active_count for r in grp.replicas)
+        and abs(st["arena_utilization"]
+                - sum(r.arena_utilization() for r in grp.replicas) / 4)
+            < 1e-6)
+    out = grp.run_to_completion(400)
+    print(json.dumps({
+        "owed": owed, "queued": queued, "merged_ok": merged_ok,
+        "rids": rids,
+        "lens": {str(r): len(out[r]) for r in rids},
+    }))
+    """)
+    assert res["merged_ok"], "group stats disagree with per-replica sums"
+    assert res["rids"] == list(range(8))            # stable group rids
+    # every replica took work, and the owed spread stays below one long
+    # request (least-loaded routing: nobody hoards the 32-token streams)
+    assert min(res["queued"]) >= 1, res
+    assert max(res["owed"]) - min(res["owed"]) < 32, res
+    assert res["lens"] == {str(i): b for i, b in
+                           enumerate([32, 2, 32, 2, 32, 2, 32, 2])}
+
+
+def test_dp_replica_streams_bit_identical():
+    """Acceptance: which replica serves a request never changes its tokens.
+    dp=2 streams match the dp=1 baseline bit-exactly, and so does a run
+    whose replica count is retuned mid-stream (1 -> 2 -> 4 -> 1) while
+    requests are live — adoption copies cache rows exactly, never
+    re-prefills."""
+    res = _run("""
+    from repro.configs import get_reduced
+    from repro.core.composer import MeshComposer
+    from repro.core.dse import DesignPoint
+    from repro.models import build_model
+    from repro.serve import ReplicaGroup, ServeConfig, serve_engine_rules
+    from repro.workloads import DECODE
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    comp = MeshComposer(mesh)
+    cfg = get_reduced("minitron-4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sc = ServeConfig(max_slots=4, max_len=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(4, 12))) for _ in range(4)]
+
+    def run(dp0, script):
+        grp = ReplicaGroup(DECODE, model, params, sc,
+                           sub=comp.submesh(range(4), "t"),
+                           rules=serve_engine_rules())
+        # tp pinned at 1: the dp axis must be the ONLY thing that varies
+        grp.apply(None, DesignPoint(cus=4, tp=1, dp=dp0))
+        for p in prompts:
+            grp.submit(p, max_new_tokens=10)
+        step = 0
+        while grp.has_work:
+            if step in script:
+                grp.apply(None, DesignPoint(cus=4, dp=script[step]))
+            grp.step()
+            step += 1
+            assert step < 200
+        return {str(r): t for r, t in grp.results().items()}
+
+    ref = run(1, {})
+    dp2 = run(2, {})
+    dyn = run(1, {3: 2, 6: 4, 9: 1})
+    print(json.dumps({"n": len(ref), "dp2": dp2 == ref, "dyn": dyn == ref}))
+    """)
+    assert res["n"] == 4
+    assert res["dp2"], "dp=2 streams diverged from the dp=1 baseline"
+    assert res["dyn"], "mid-stream dp retune altered a live stream"
+
+
 @pytest.mark.slow
 def test_traffic_driven_autoscale_end_to_end():
     """Policy-driven fabric: a burst triggers at least one recomposition and
@@ -364,7 +493,7 @@ def test_traffic_driven_autoscale_end_to_end():
     res = _run("""
     from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                     TenantSpec)
-    from repro.serve.engine import ServeConfig
+    from repro.serve import ServeConfig
 
     mesh = jax.make_mesh((1, 8), ("data", "model"))
     sc = ServeConfig(max_slots=2, max_len=64, eos_id=-1)

@@ -15,20 +15,21 @@ import pytest
 import jax
 
 from repro.configs import get_reduced
-from repro.core.dse import DesignPoint, tp_candidates
+from repro.core.dse import DesignPoint, dp_candidates, tp_candidates
 from repro.core.analytical import tp_collective_latency
 from repro.common.platform import TPU_V5E
 from repro.distribution import strip
 from repro.models import build_model
 from repro.serve.dse import Stage1Optimizer, TenantDesignSpace, padded_factor
-from repro.serve.fabric import AnalyticalPolicy, TenantLoad
+from repro.serve.fabric import AnalyticalPolicy, TenantObservation
 from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, DecodeEngine,
                              ServeConfig)
 
 
-def _load(pending, active=1, util=0.0, queue=0):
-    return TenantLoad(pending_tokens=pending, queue_depth=queue,
-                      active=active, arena_utilization=util)
+def _load(pending, active=1, util=0.0, queue=0, space=None, lengths=()):
+    return TenantObservation(pending_tokens=pending, queue_depth=queue,
+                             active=active, arena_utilization=util,
+                             space=space, recent_lengths=tuple(lengths))
 
 
 def _space(**kw):
@@ -50,6 +51,17 @@ def test_tp_candidates_and_design_point_knobs():
     p = DesignPoint(cus=4, tp=2, slots=8, buckets=(8, 64))
     assert p.knobs() == {"tp": 2, "slots": 8, "buckets": [8, 64]}
     assert DesignPoint(cus=4).knobs() == {}      # split-only: no knobs
+    p2 = DesignPoint(cus=4, tp=1, slots=4, dp=4)
+    assert p2.knobs() == {"tp": 1, "slots": 4, "dp": 4}
+
+
+def test_dp_candidates():
+    assert dp_candidates(4, 1) == (1, 2, 4)
+    assert dp_candidates(6, 1) == (1, 2, 4, 6)   # max packing always in
+    assert dp_candidates(8, 2) == (1, 2, 4)      # bounded by tp * dp <= cus
+    assert dp_candidates(3, 2) == (1,)
+    assert dp_candidates(0, 1) == ()
+    assert dp_candidates(2, 4) == ()             # replica wider than grant
 
 
 def test_tp_collective_latency_shape():
@@ -85,7 +97,7 @@ def test_stage1_slots_cover_queue(stage1):
     sp = _space()
     deep = s1.best(cfg, sp, 12, 2)
     shallow = s1.best(cfg, sp, 1, 2)
-    assert deep.slots >= 8 and shallow.slots <= 2
+    assert deep.slots * (deep.dp or 1) >= 8 and shallow.slots <= 2
     assert deep.cost < s1.cost_of(cfg, sp, 12,
                                   DesignPoint(cus=2, tp=2, slots=2))
 
@@ -171,6 +183,30 @@ def test_stage1_slot_memory_feasibility(stage1):
     assert best.slots <= 3, best
 
 
+def test_stage1_dp_fills_grant_past_the_slot_cap(stage1):
+    """When one engine's step program can't batch past ``slot_cap``, a deep
+    queue on a wide grant is served by tiling the grant into data-parallel
+    replicas (the Herald trade): total concurrency multiplies by dp while
+    each replica stays at a cheap low TP degree."""
+    pol, s1 = stage1
+    cfg = get_reduced("minitron-4b")
+    sp = _space(slot_cap=4)
+    best = s1.best(cfg, sp, 16, 4)
+    assert best.dp and best.dp >= 2, best
+    assert best.slots * best.dp >= 8, best
+    forced = s1.cost_of(cfg, sp, 16,
+                        DesignPoint(cus=4, tp=4, slots=4, dp=1))
+    assert best.cost < forced
+
+
+def test_stage1_respects_dp_cap(stage1):
+    """dp_cap=1 pins the tenant to a single engine regardless of grant."""
+    pol, s1 = stage1
+    cfg = get_reduced("minitron-4b")
+    best = s1.best(cfg, _space(slot_cap=4, dp_cap=1), 16, 4)
+    assert best.dp == 1, best
+
+
 # ---------------------------------------------------------------------------
 # Stage 2: decide over design points
 # ---------------------------------------------------------------------------
@@ -178,10 +214,10 @@ def test_stage1_slot_memory_feasibility(stage1):
 def test_decide_returns_design_points_with_knobs():
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     pol = AnalyticalPolicy()
-    spaces = {t: _space() for t in cfgs}
     points, reason = pol.decide(
-        {"a": _load(100, queue=10), "b": _load(100, queue=10)}, cfgs,
-        {"a": 4, "b": 4}, 8, lengths={}, spaces=spaces)
+        {"a": _load(100, queue=10, space=_space()),
+         "b": _load(100, queue=10, space=_space())}, cfgs,
+        {"a": 4, "b": 4}, 8)
     assert all(isinstance(p, DesignPoint) for p in points.values())
     if reason != "hysteresis":
         assert any(p.slots not in (None, 2) or (p.tp or p.cus) < p.cus
@@ -198,8 +234,8 @@ def test_decide_retunes_same_split_on_knob_gain():
     sp = _space()
     current = {"a": DesignPoint(cus=8, tp=8, slots=1)}
     points, reason = pol.decide(
-        {"a": _load(200, active=1, queue=15)}, {"a": cfg},
-        current, 8, spaces={"a": sp})
+        {"a": _load(200, active=1, queue=15, space=sp)}, {"a": cfg},
+        current, 8)
     assert reason == "retune"
     assert points["a"].cus == 8 and points["a"].slots > 1
 
@@ -210,9 +246,9 @@ def test_decide_split_only_matches_pre_dse_shape():
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     pol = AnalyticalPolicy(two_stage=False)
     assert pol.stage1 is None
-    points, reason = pol.decide({"a": _load(100), "b": _load(0)},
-                                cfgs, {"a": 4, "b": 4}, 8,
-                                spaces={t: _space() for t in cfgs})
+    points, reason = pol.decide(
+        {"a": _load(100, space=_space()), "b": _load(0, space=_space())},
+        cfgs, {"a": 4, "b": 4}, 8)
     live = {t: p for t, p in points.items() if p.cus > 0}
     assert live == {"a": DesignPoint(cus=8, cost=live["a"].cost)}
     assert reason == "unify"
@@ -233,10 +269,10 @@ def test_warm_compile_covers_candidate_design_point():
     rng = np.random.default_rng(0)
     eng.submit(rng.integers(1, cfg.vocab_size, size=8), max_new_tokens=3)
     eng.run_to_completion(50)                        # seed prefill lengths
-    built = eng.warm_compile(None, slots=4)
+    built = eng.warm_compile(None, DesignPoint(cus=0, slots=4))
     assert built >= 1
     before = eng.compile_builds
-    eng.reconfigure(slots=4)
+    eng.apply(None, DesignPoint(cus=0, slots=4))
     eng.submit(rng.integers(1, cfg.vocab_size, size=8), max_new_tokens=3)
     eng.run_to_completion(50)
     assert eng.compile_builds == before, \

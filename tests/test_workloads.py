@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.models import build_model, ssm as S
 from repro.distribution import strip
-from repro.serve.fabric import AnalyticalPolicy, TenantLoad
+from repro.serve.fabric import AnalyticalPolicy, TenantObservation
 from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, DecodeEngine,
                              EncDecEngine, EncoderEngine, Engine,
                              ExecutableCache, SSMEngine, ServeConfig,
@@ -479,9 +479,10 @@ def test_step_cost_encdec_prices_cross_attention_by_src_len():
         pol.step_cost(cfg, 2, 2, DECODE)
 
 
-def _load(pending, active=1, util=0.0):
-    return TenantLoad(pending_tokens=pending, queue_depth=0,
-                      active=active, arena_utilization=util)
+def _load(pending, active=1, util=0.0, wclass=None):
+    return TenantObservation(pending_tokens=pending, queue_depth=0,
+                             active=active, arena_utilization=util,
+                             wclass=wclass)
 
 
 def _cus(points):
@@ -497,16 +498,18 @@ def test_mixed_fleet_split_shifts_toward_owed_class():
     pol = AnalyticalPolicy()
     # the encoder tenant owes a large prefill backlog; others trickle
     points, reason = pol.decide(
-        {"dec": _load(5), "ssm": _load(5), "enc": _load(5000)},
-        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+        {t: _load(p, wclass=classes[t])
+         for t, p in (("dec", 5), ("ssm", 5), ("enc", 5000))},
+        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8)
     sizes = _cus(points)
     assert reason in ("rebalance", "admit")
     assert sizes["enc"] > 2, f"expected encoder to gain CUs, got {sizes}"
     assert sizes["enc"] > sizes["dec"] and sizes["enc"] > sizes["ssm"]
     # now the SSM tenant owes the work
     points2, reason2 = pol.decide(
-        {"dec": _load(5), "ssm": _load(5000), "enc": _load(5)},
-        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8, classes=classes)
+        {t: _load(p, wclass=classes[t])
+         for t, p in (("dec", 5), ("ssm", 5000), ("enc", 5))},
+        cfgs, {"dec": 3, "ssm": 3, "enc": 2}, 8)
     sizes2 = _cus(points2)
     assert sizes2["ssm"] >= sizes2["dec"] and sizes2["ssm"] >= sizes2["enc"]
     assert sizes2["ssm"] > 3 or reason2 == "hysteresis"
@@ -699,14 +702,15 @@ def test_encdec_streams_invariant_across_recomposition():
 
 
 def test_live_reconfigure_stream_invariance():
-    """Serving-DSE acceptance pin: mid-stream ``reconfigure`` — a
+    """Serving-DSE acceptance pin: a mid-stream ``Engine.apply`` — a
     slot-count change AND a TP-degree change on a FIXED CU grant — leaves
-    pinned decode streams bit-identical vs a never-reconfigured run, for
+    pinned decode streams bit-identical vs a never-retuned run, for
     both the transformer decode and the SSM engine (live slots are
     migrated into the resized pool; the TP move is a sharded device_put)."""
     res = _run("""
     from repro.configs import get_reduced
     from repro.core.composer import MeshComposer
+    from repro.core.dse import DesignPoint
     from repro.models import build_model
     from repro.serve import serve_engine_rules
     from repro.workloads import DecodeEngine, SSMEngine, ServeConfig
@@ -733,7 +737,7 @@ def test_live_reconfigure_stream_invariance():
             step = 0
             while eng.has_work:
                 if script and step in script:
-                    eng.reconfigure(**script[step])
+                    eng.apply(None, DesignPoint(cus=0, **script[step]))
                 eng.step()
                 step += 1
                 assert step < 300
