@@ -25,7 +25,15 @@ the serving path makes:
 * the ``dp_replicas`` record: steady-state tokens/s on one fixed 4-CU
   grant with the Stage-1-chosen design (which must pick ``dp > 1`` — the
   engine batch is slot-capped, so extra CUs only pay as data-parallel
-  replica tiles) vs the same search pinned to a single engine.
+  replica tiles) vs the same search pinned to a single engine;
+* the ``ragged_kernels`` record: the same mixed fleet served with the
+  ragged decode-kernel path on (``ServeConfig.use_kernels``, the default)
+  vs off (``REPRO_USE_KERNELS=0`` in the child environment) — identical
+  traffic and seed, bit-identical token streams, so the per-tenant decode
+  p50/p95 and tokens/s delta is pure step cost (interleaved best-of-3
+  reps per arm).  Kernel-on decode p50 must sit strictly below kernel-off
+  for the attention-bearing tenants (the ragged path slices the KV/source
+  reads to the live bound).
 
 Each scenario is the launcher itself (``repro.launch.serve``) run in a
 subprocess because it fakes 8 host devices and the device count is locked
@@ -53,6 +61,14 @@ _FABRIC = [sys.executable, "-m", "repro.launch.serve", "--fabric",
 _MIXED = [sys.executable, "-m", "repro.launch.serve", "--fabric",
           "--scenario", "mixed", "--reduced", "--requests", "4",
           "--max-new-tokens", "12", "--seed", "0"]
+# ragged-kernel legs: the same mixed fleet at a KV capacity that makes the
+# padded path's capacity-shaped reads visible on a CPU host (max_len 512
+# against <= ~36 live rows per slot; at the default 128 the reduced
+# models' decode step is dispatch-bound and the ragged delta drowns in
+# timer noise), with more requests so the per-tenant p50 settles
+_KMIXED = [sys.executable, "-m", "repro.launch.serve", "--fabric",
+           "--scenario", "mixed", "--reduced", "--requests", "6",
+           "--max-new-tokens", "12", "--max-len", "512", "--seed", "0"]
 _SCALING = [sys.executable, "-m", "repro.launch.serve", "--scaling-curve",
             "--scale-sizes", "1", "2", "4", "--scale-steps", "10",
             "--seed", "0"]
@@ -73,10 +89,11 @@ _DP = [sys.executable, "-m", "repro.launch.serve", "--dp-bench",
        "--scale-steps", "10", "--seed", "0"]
 
 
-def _run(cmd):
+def _run(cmd, extra_env=None):
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.update(extra_env or {})
     out = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
                          env=env)
     if out.returncode != 0:
@@ -156,10 +173,59 @@ def _dse_arm(stats):
     }
 
 
+def _ragged_kernels(ons, offs):
+    """Kernel-on vs kernel-off decode latency + throughput on identical
+    mixed traffic, interleaved best-of-N reps per arm (the dp_replicas
+    discipline: each arm's best rep strips CPU-host scheduler noise
+    without hiding real cost).  The verdict tenants are the
+    attention-bearing classes (transformer decode + enc-dec): their ragged
+    path reads a statically sliced KV/source cache, so the step must get
+    cheaper.  The SSM tenant's fused step is reported but not gated — on a
+    CPU host its oracle dispatch runs the same math as the inline chain."""
+    def best(runs, t, q):
+        return min(r["decode_step_ms"][t][q] for r in runs)
+
+    def best_tps(runs):
+        return max(round(sum(r["tokens_emitted"].values()) / r["wall_s"], 2)
+                   for r in runs)
+
+    shared = sorted(set.intersection(
+        *[set(r["decode_step_ms"]) for r in ons + offs]))
+    per_tenant = {}
+    for t in shared:
+        p50_on, p50_off = best(ons, t, "p50"), best(offs, t, "p50")
+        per_tenant[t] = {
+            "class": ons[0]["workload_classes"][t],
+            "p50_ms_on": p50_on, "p95_ms_on": best(ons, t, "p95"),
+            "p50_ms_off": p50_off, "p95_ms_off": best(offs, t, "p95"),
+            "p50_speedup": round(p50_off / max(p50_on, 1e-9), 3),
+        }
+    gated = [t for t in shared
+             if ons[0]["workload_classes"][t] in ("decode", "encdec")]
+    return {
+        "scenario": "mixed --max-len 512 --requests 6",
+        "reps": len(ons),
+        "per_tenant": per_tenant,
+        "tokens_per_s_on": best_tps(ons),
+        "tokens_per_s_off": best_tps(offs),
+        "verdict_tenants": gated,
+        "kernels_win_p50": bool(gated) and all(
+            per_tenant[t]["p50_ms_on"] < per_tenant[t]["p50_ms_off"]
+            for t in gated),
+    }
+
+
 def main() -> None:
     warm = _run(_FABRIC)
     cold = _run(_FABRIC + ["--no-warm"])
     mixed = _run(_MIXED)
+    # ragged_kernels legs: identical traffic and seed, kernel path on
+    # (use_kernels default) vs off (padded decode forced process-wide in
+    # the child via REPRO_USE_KERNELS=0), interleaved best-of-3
+    kern_on, kern_off = [], []
+    for _ in range(3):
+        kern_on.append(_run(_KMIXED))
+        kern_off.append(_run(_KMIXED, extra_env={"REPRO_USE_KERNELS": "0"}))
     scaling = _run(_SCALING)
     dse_two = _run(_DSE_MIXED)
     dse_split = _run(_DSE_SPLIT)
@@ -244,6 +310,12 @@ def main() -> None:
                 _predicted_units_per_s(dse_two)
                 >= _predicted_units_per_s(dse_split),
         },
+        # ragged Pallas decode kernels on vs off on the mixed fleet:
+        # identical traffic (streams are bit-identical — pinned by
+        # tests/test_ragged_decode.py), so the p50/p95 split is pure
+        # per-step cost.  Kernel-on p50 must sit strictly below kernel-off
+        # for the attention-bearing tenants.
+        "ragged_kernels": _ragged_kernels(kern_on, kern_off),
         # data-parallel replica tiling on one fixed grant: tokens/s with the
         # Stage-1-chosen dp (> 1; the engine batch is slot-capped, so extra
         # CUs only pay as replicas) vs the same grant forced to one engine
@@ -289,6 +361,13 @@ def main() -> None:
           f"{dse['two_stage_wins_measured']}")
     print(f"serve_fabric,dse_two_stage_wins_predicted,"
           f"{dse['two_stage_wins_predicted']}")
+    rk = record["ragged_kernels"]
+    for t, row in rk["per_tenant"].items():
+        print(f"serve_fabric,kernels_p50_ms_on[{t}],{row['p50_ms_on']}")
+        print(f"serve_fabric,kernels_p50_ms_off[{t}],{row['p50_ms_off']}")
+    print(f"serve_fabric,kernels_tokens_per_s_on,{rk['tokens_per_s_on']}")
+    print(f"serve_fabric,kernels_tokens_per_s_off,{rk['tokens_per_s_off']}")
+    print(f"serve_fabric,kernels_win_p50,{rk['kernels_win_p50']}")
     dpr = record["dp_replicas"]
     print(f"serve_fabric,dp_chosen,{dpr['chosen_point']['dp']}")
     print(f"serve_fabric,dp_tokens_per_s,{dpr['tokens_per_s_dp']}")

@@ -236,6 +236,26 @@ def tp_collective_latency(platform: PlatformProfile, degree: int,
                      + bytes_per_device / (p * platform.ici_bw))
 
 
+def decode_kv_read_latency(cfg: AccelConfig, platform: PlatformProfile,
+                           batch: int, kv_heads: int, head_dim: int,
+                           kv_len: int, *, dtype_bytes: int = 4) -> float:
+    """Per-layer HBM seconds one decode step spends streaming a KV cache:
+    2·kv_heads·head_dim·kv_len K/V elements per live slot, pure bandwidth
+    on the composed sub-accelerator (each CU owns its HBM slice, so the
+    read scales down with the grant like every other bandwidth term).
+
+    ``kv_len`` is what the step actually reads: the full per-slot capacity
+    on the padded decode path, but only the live prefix under the ragged
+    decode kernels (``ServeConfig.use_kernels``) — the traffic difference
+    the serving DSE prices through this term.  Also prices the enc-dec
+    cross-attention source-cache read (same per-row footprint)."""
+    if kv_len <= 0:
+        return 0.0
+    kv_bytes = (dtype_bytes * max(batch, 1) * float(kv_len)
+                * 2.0 * kv_heads * head_dim)
+    return kv_bytes / (max(cfg.num_cus, 1) * platform.hbm_bw)
+
+
 def ssm_step_latency(cfg: AccelConfig, platform: PlatformProfile,
                      batch: int, d_model: int, d_inner: int, state_dim: int,
                      conv_width: int, dt_rank: int, *,

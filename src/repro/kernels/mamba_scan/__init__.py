@@ -1,5 +1,6 @@
-from repro.kernels.mamba_scan.kernel import mamba_scan
-from repro.kernels.mamba_scan.ops import selective_scan_fused
-from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.mamba_scan.kernel import mamba_scan, mamba_step_kernel
+from repro.kernels.mamba_scan.ops import mamba_step_fused, selective_scan_fused
+from repro.kernels.mamba_scan.ref import mamba_scan_ref, mamba_step_ref
 
-__all__ = ["mamba_scan", "selective_scan_fused", "mamba_scan_ref"]
+__all__ = ["mamba_scan", "mamba_step_kernel", "selective_scan_fused",
+           "mamba_step_fused", "mamba_scan_ref", "mamba_step_ref"]

@@ -51,6 +51,116 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref, *,
     y_ref[...] = y.astype(y_ref.dtype)
 
 
+def _step_kernel(live_ref, x_ref, conv_ref, h_ref, inproj_ref, convw_ref,
+                 convb_ref, xproj_ref, dtproj_ref, dtbias_ref, alog_ref,
+                 dvec_ref, outproj_ref, o_ref, nconv_ref, nh_ref, *,
+                 dt_rank, state_dim):
+    b = pl.program_id(0)
+    live = live_ref[b] != 0
+    f32 = jnp.float32
+
+    @pl.when(live)
+    def _step():
+        x = x_ref[...]                                       # (1, d_model)
+        dtype = x.dtype
+        xz = jax.lax.dot_general(
+            x, inproj_ref[...].astype(dtype), (((1,), (0,)), ((), ())))
+        d_in = xz.shape[1] // 2
+        xp, z = xz[:, :d_in], xz[:, d_in:]                   # (1, d_in)
+        window = jnp.concatenate(
+            [conv_ref[...].astype(dtype), xp], axis=0)       # (w, d_in)
+        xc = jnp.sum(window.astype(f32) * convw_ref[...].astype(f32),
+                     axis=0, keepdims=True) + convb_ref[...].astype(f32)
+        x_conv = jax.nn.silu(xc).astype(dtype)               # (1, d_in)
+        dbc = jax.lax.dot_general(
+            x_conv, xproj_ref[...].astype(dtype), (((1,), (0,)), ((), ())))
+        dt_raw = dbc[:, :dt_rank]
+        b_ssm = dbc[:, dt_rank:dt_rank + state_dim].astype(f32)
+        c_ssm = dbc[:, dt_rank + state_dim:].astype(f32)     # (1, N)
+        dt = jax.nn.softplus(
+            jax.lax.dot_general(dt_raw, dtproj_ref[...].astype(dtype),
+                                (((1,), (0,)), ((), ()))).astype(f32)
+            + dtbias_ref[...].astype(f32))                   # (1, d_in)
+        a = -jnp.exp(alog_ref[...].astype(f32))              # (d_in, N)
+        dt_col = jnp.reshape(dt, (d_in, 1))
+        da = jnp.exp(dt_col * a)
+        xcol = jnp.reshape(x_conv.astype(f32), (d_in, 1))
+        h_new = da * h_ref[...] + (dt_col * xcol) * b_ssm    # (d_in, N)
+        y = jax.lax.dot_general(h_new, c_ssm, (((1,), (1,)), ((), ())))
+        y = jnp.reshape(y, (1, d_in)) \
+            + dvec_ref[...].astype(f32) * x_conv.astype(f32)
+        y = (y * jax.nn.silu(z.astype(f32))).astype(dtype)
+        o_ref[...] = jax.lax.dot_general(
+            y, outproj_ref[...].astype(dtype), (((1,), (0,)), ((), ())))
+        nconv_ref[...] = window[1:].astype(nconv_ref.dtype)
+        nh_ref[...] = h_new
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        # empty slot: no SSM work, output zeros, state carried unchanged
+        o_ref[...] = jnp.zeros_like(o_ref)
+        nconv_ref[...] = conv_ref[...]
+        nh_ref[...] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba_step_kernel(x1, conv, h, live, in_proj, conv_w, conv_b, x_proj,
+                      dt_proj, dt_bias, a_log, d, out_proj, *,
+                      interpret: bool = False):
+    """Fused single-token Mamba step: in_proj + conv shift + selective-scan
+    update + gate + out_proj in one kernel, one row per grid step.
+
+    x1: (B, 1, d_model); conv: (B, w-1, d_in); h: (B, d_in, N) fp32;
+    live: (B,) int32 row mask -> (out (B, 1, d_model), new_conv, new_h).
+
+    Every weight rides VMEM whole, so the op is bound by
+    ``d_model * d_in``-scale weights fitting VMEM — fine for serving-sized
+    blocks, not a training kernel.  Rows with ``live == 0`` skip all work
+    and carry their state through unchanged (output rows are zero).
+    """
+    B = x1.shape[0]
+    w1, d_in = conv.shape[1], conv.shape[2]
+    n = h.shape[2]
+    dt_rank = dt_proj.shape[0]
+    full = lambda b, *_: (0, 0)
+    row3 = lambda b, *_: (b, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, 1, x1.shape[2]), row3),       # x1
+            pl.BlockSpec((None, w1, d_in), row3),             # conv window
+            pl.BlockSpec((None, d_in, n), row3),              # h
+            pl.BlockSpec(in_proj.shape, full),
+            pl.BlockSpec(conv_w.shape, full),
+            pl.BlockSpec((1, d_in), full),                    # conv_b
+            pl.BlockSpec(x_proj.shape, full),
+            pl.BlockSpec(dt_proj.shape, full),
+            pl.BlockSpec((1, d_in), full),                    # dt_bias
+            pl.BlockSpec(a_log.shape, full),
+            pl.BlockSpec((1, d_in), full),                    # D
+            pl.BlockSpec(out_proj.shape, full),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, 1, x1.shape[2]), row3),
+            pl.BlockSpec((None, w1, d_in), row3),
+            pl.BlockSpec((None, d_in, n), row3),
+        ],
+    )
+    kernel = functools.partial(_step_kernel, dt_rank=dt_rank, state_dim=n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x1.shape, x1.dtype),
+            jax.ShapeDtypeStruct(conv.shape, conv.dtype),
+            jax.ShapeDtypeStruct(h.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(live, x1, conv, h, in_proj, conv_w, conv_b.reshape(1, d_in), x_proj,
+      dt_proj, dt_bias.reshape(1, d_in), a_log, d.reshape(1, d_in), out_proj)
+
+
 @functools.partial(jax.jit, static_argnames=("bd", "bs", "interpret"))
 def mamba_scan(x, dt, b, c, a_log, d, *, bd: int = 512, bs: int = 128,
                interpret: bool = False):

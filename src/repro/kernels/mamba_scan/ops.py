@@ -1,7 +1,8 @@
-"""Public wrapper for the fused selective scan with CPU fallback."""
+"""Public wrappers for the fused selective scan / step with CPU fallback."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.mamba_scan import kernel as K
 from repro.kernels.mamba_scan import ref as R
@@ -17,3 +18,22 @@ def selective_scan_fused(x, dt, b, c, a_log, d, *, bd=512, bs=128, impl="auto"):
     interpret = impl == "interpret" or not _on_tpu()
     return K.mamba_scan(x, dt, b, c, a_log, d, bd=bd, bs=bs,
                         interpret=interpret)
+
+
+def mamba_step_fused(x1, conv, h, in_proj, conv_w, conv_b, x_proj, dt_proj,
+                     dt_bias, a_log, d, out_proj, *, live=None, impl="auto"):
+    """Fused single-token Mamba step (SSMEngine decode hot path).
+
+    x1: (B, 1, d_model) -> (out, new_conv, new_h); live optionally marks
+    empty slots (no work, state unchanged).  Live rows are bit-identical to
+    the unfused ``repro.models.ssm.mamba_step`` chain."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.mamba_step_ref(x1, conv, h, in_proj, conv_w, conv_b, x_proj,
+                                dt_proj, dt_bias, a_log, d, out_proj,
+                                live=live)
+    interpret = impl == "interpret" or not _on_tpu()
+    live_i = (jnp.ones((x1.shape[0],), jnp.int32) if live is None
+              else jnp.asarray(live).astype(jnp.int32))
+    return K.mamba_step_kernel(x1, conv, h, live_i, in_proj, conv_w, conv_b,
+                               x_proj, dt_proj, dt_bias, a_log, d, out_proj,
+                               interpret=interpret)

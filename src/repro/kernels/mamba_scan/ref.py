@@ -1,8 +1,51 @@
-"""Pure-jnp oracle for mamba_scan (materializes the state; small shapes)."""
+"""Pure-jnp oracles for mamba_scan.
+
+``mamba_scan_ref`` materializes the full state (small shapes only);
+``mamba_step_ref`` replicates the serving single-token chain in
+``repro.models.ssm.mamba_step`` op-for-op, casts included, so live rows are
+bit-identical to the unfused XLA path the engines run with kernels off.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def mamba_step_ref(x1, conv, h, in_proj, conv_w, conv_b, x_proj, dt_proj,
+                   dt_bias, a_log, d, out_proj, *, live=None):
+    """x1: (B, 1, d_model); conv: (B, w-1, d_in); h: (B, d_in, N) fp32 ->
+    (out (B, 1, d_model), new_conv, new_h).  Mirrors
+    ``repro.models.ssm.mamba_step``; rows with ``live == False`` output
+    zeros and carry their cache rows through unchanged."""
+    f32 = jnp.float32
+    dt_rank, n = dt_proj.shape[0], a_log.shape[1]
+    xz = jnp.einsum("bsd,de->bse", x1, in_proj.astype(x1.dtype))
+    x_part, z = jnp.split(xz, 2, axis=-1)                 # (B,1,Din)
+    window = jnp.concatenate([conv.astype(x1.dtype), x_part], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(f32),
+                    conv_w.astype(f32)) + conv_b.astype(f32)
+    x_conv = jax.nn.silu(xc)[:, None].astype(x1.dtype)    # (B,1,Din)
+    dbc = jnp.einsum("bsd,dk->bsk", x_conv, x_proj.astype(x1.dtype))
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, dt_proj.astype(x1.dtype))
+        .astype(f32) + dt_bias.astype(f32))[:, 0]         # (B,Din)
+    a = -jnp.exp(a_log.astype(f32))
+    deltaA = jnp.exp(dt[..., None] * a)                   # (B,Din,N)
+    deltaBx = (dt * x_conv[:, 0].astype(f32))[..., None] * \
+        b_ssm[:, 0].astype(f32)[:, None, :]
+    h_new = deltaA * h + deltaBx
+    y = jnp.einsum("bdn,bn->bd", h_new, c_ssm[:, 0].astype(f32))
+    y = y + d.astype(f32) * x_conv[:, 0].astype(f32)
+    y = (y * jax.nn.silu(z[:, 0].astype(f32)))[:, None].astype(x1.dtype)
+    out = jnp.einsum("bsd,de->bse", y, out_proj.astype(x1.dtype))
+    new_conv = window[:, 1:].astype(conv.dtype)
+    if live is not None:
+        lv = jnp.asarray(live)
+        out = jnp.where(lv[:, None, None], out, jnp.zeros_like(out))
+        new_conv = jnp.where(lv[:, None, None], new_conv, conv)
+        h_new = jnp.where(lv[:, None, None], h_new, h)
+    return out, new_conv, h_new
 
 
 def mamba_scan_ref(x, dt, b, c, a_log, d):

@@ -1,0 +1,6 @@
+from repro.kernels.ragged_decode.kernel import ragged_decode_kernel
+from repro.kernels.ragged_decode.ops import ragged_decode_attention
+from repro.kernels.ragged_decode.ref import ragged_decode_attention_ref
+
+__all__ = ["ragged_decode_kernel", "ragged_decode_attention",
+           "ragged_decode_attention_ref"]

@@ -1,0 +1,58 @@
+"""Public wrapper: ragged decode attention with CPU fallback.
+
+The serving engines call this through ``gqa_step``/``cross_step`` when
+``ServeConfig.use_kernels`` is on.  Dispatch follows the package idiom:
+
+* ``impl="auto"`` — the Pallas kernel on TPU; on CPU the pure-jnp ref,
+  whose live rows are bit-identical to the padded path (the engine-side
+  ragged win on CPU comes from the statically KV-bounded decode programs
+  that slice the cache before calling here);
+* ``impl="ref"`` — the oracle;
+* ``impl="interpret"`` — the Pallas kernel in interpreter mode (CPU CI).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ragged_decode import kernel as K
+from repro.kernels.ragged_decode import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _block(T: int, bk: int) -> int:
+    bk = min(bk, T)
+    while T % bk:
+        bk //= 2
+    return max(bk, 1)
+
+
+def ragged_decode_attention(q, k, v, lengths, *, window: int = 0,
+                            logit_cap: float = 0.0, is_global=None,
+                            live=None, impl: str = "auto", bk: int = 128):
+    """q: (B, 1, Hq, D); k, v: (B, T, Hkv, D); lengths: int32 scalar or (B,)
+    true KV lengths; live: optional (B,) bool empty-slot mask ->
+    (B, 1, Hq, D).  Live rows are bit-identical to
+    ``layers.decode_attention``; dead rows return zeros."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.ragged_decode_attention_ref(
+            q, k, v, lengths, window=window, logit_cap=logit_cap,
+            is_global=is_global, live=live)
+    interpret = impl == "interpret" or not _on_tpu()
+    B = q.shape[0]
+    T = k.shape[1]
+    lens = jnp.clip(jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,)),
+                    1, T)
+    live_i = (jnp.ones((B,), jnp.int32) if live is None
+              else jnp.asarray(live).astype(jnp.int32))
+    if is_global is None:
+        glob = jnp.zeros((1,), jnp.int32)
+    else:
+        glob = jnp.reshape(jnp.asarray(is_global).astype(jnp.int32), (1,))
+    out = K.ragged_decode_kernel(
+        q[:, 0], k, v, lens, live_i, glob, window=window,
+        logit_cap=logit_cap, bk=_block(T, bk), interpret=interpret)
+    return out[:, None]

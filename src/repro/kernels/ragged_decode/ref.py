@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for ragged decode attention.
+
+Mirrors :func:`repro.models.layers.decode_attention` op-for-op (same einsums,
+same mask order, same NEG_INF fill), so its live rows are bit-identical to
+the padded serving path — the drop-in contract the serving engines rely on
+and tests/test_ragged_decode.py pins.  On top of the padded semantics it
+adds the ragged extensions the Pallas kernel implements:
+
+* ``lengths`` may be any per-row true KV lengths (``valid_len`` for
+  self-attention, ``src_len`` for cross-attention);
+* ``live`` optionally marks empty slots: rows with ``live == False`` return
+  exact zeros (the kernel skips their KV reads entirely).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ragged_decode_attention_ref(q, k, v, lengths, *, window: int = 0,
+                                logit_cap: float = 0.0, is_global=None,
+                                live=None):
+    """q: (B, 1, Hq, D); k, v: (B, T, Hkv, D); lengths: int32 scalar or (B,)
+    valid KV entries per row (current token included); live: optional (B,)
+    bool row mask -> (B, 1, Hq, D)."""
+    B, _, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    groups = Hq // Hkv
+    lengths = jnp.broadcast_to(jnp.asarray(lengths), (B,))
+    kexp = jnp.repeat(k, groups, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q[:, 0], kexp,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    pos = jnp.arange(T)
+    mask = pos[None, None, :] < lengths[:, None, None]
+    if window:
+        w_ok = pos[None, None, :] > (lengths[:, None, None] - 1 - window)
+        if is_global is not None:
+            w_ok = w_ok | is_global
+        mask = mask & w_ok
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vexp = jnp.repeat(v, groups, axis=2)
+    out = jnp.einsum("bht,bthd->bhd", p.astype(v.dtype), vexp,
+                     preferred_element_type=jnp.float32)
+    out = out[:, None].astype(q.dtype)
+    if live is not None:
+        out = jnp.where(live[:, None, None, None], out,
+                        jnp.zeros_like(out))
+    return out

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distribution.partitioning import Annotated
+from repro.kernels.ragged_decode import ragged_decode_attention
 from repro.models import layers as L
 
 
@@ -119,9 +120,16 @@ def gqa_prefill(p, cfg: ModelConfig, x, positions, cache, *, is_global=None,
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache
 
 
-def gqa_step(p, cfg: ModelConfig, x1, cache, pos, *, is_global=None):
+def gqa_step(p, cfg: ModelConfig, x1, cache, pos, *, is_global=None,
+             use_kernels=False, kv_bound=None, live=None):
     """Decode one token.  x1: (B, 1, d); pos: int32 (B,) per-row positions
-    (continuous batching) or scalar."""
+    (continuous batching) or scalar.
+
+    use_kernels selects the ragged decode-attention path: the KV read is
+    bounded to ``kv_bound`` rows (a static bound >= every live row's
+    ``pos + 1``, threaded by the engine) and ``live`` marks empty slots.
+    Live rows stay bit-identical to the padded read; the full-size cache is
+    still written so retunes/migrations see the same state either way."""
     B = x1.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]
@@ -129,8 +137,15 @@ def gqa_step(p, cfg: ModelConfig, x1, cache, pos, *, is_global=None):
     ck = L.scatter_kv(cache["k"], k, pos)
     cv = L.scatter_kv(cache["v"], v, pos)
     window = cfg.window_size if cfg.attn_type == "sliding" else 0
-    o = L.decode_attention(q, ck, cv, pos + 1, window=window,
-                           is_global=is_global, logit_cap=cfg.logit_softcap)
+    if use_kernels:
+        kb = ck.shape[1] if kv_bound is None else kv_bound
+        o = ragged_decode_attention(
+            q, ck[:, :kb], cv[:, :kb], pos + 1, window=window,
+            is_global=is_global, logit_cap=cfg.logit_softcap, live=live)
+    else:
+        o = L.decode_attention(q, ck, cv, pos + 1, window=window,
+                               is_global=is_global,
+                               logit_cap=cfg.logit_softcap)
     y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x1.dtype))
     return y, {"k": ck, "v": cv}
 
@@ -190,11 +205,18 @@ def cross_kv(p, cfg: ModelConfig, enc_out):
     return k, v
 
 
-def cross_step(p, cfg: ModelConfig, x1, ck, cv, src_len):
+def cross_step(p, cfg: ModelConfig, x1, ck, cv, src_len, *,
+               use_kernels=False, src_bound=None, live=None):
     q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"].astype(x1.dtype))
     if cfg.qkv_bias:
         q = q + p["bq"].astype(x1.dtype)
-    o = L.decode_attention(q, ck, cv, src_len)
+    if use_kernels:
+        # bound the cross-KV read to the batch's true source lengths
+        sb = ck.shape[1] if src_bound is None else src_bound
+        o = ragged_decode_attention(q, ck[:, :sb], cv[:, :sb], src_len,
+                                    live=live)
+    else:
+        o = L.decode_attention(q, ck, cv, src_len)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x1.dtype))
 
 
@@ -304,9 +326,12 @@ def mla_prefill(p, cfg: ModelConfig, x, positions, cache, *,
     return y, new_cache
 
 
-def mla_step(p, cfg: ModelConfig, x1, cache, pos):
+def mla_step(p, cfg: ModelConfig, x1, cache, pos, *, use_kernels=False,
+             kv_bound=None):
     """Absorbed-matmul MLA decode: attends in the R-dim latent space.
-    pos: int32 (B,) per-row positions or scalar."""
+    pos: int32 (B,) per-row positions or scalar.  With use_kernels, the
+    latent read is bounded to ``kv_bound`` rows (bit-identical: the masked
+    softmax ignores the dropped zero-score suffix)."""
     m = cfg.mla
     B = x1.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -315,18 +340,21 @@ def mla_step(p, cfg: ModelConfig, x1, cache, pos):
     ckv1, kr1 = _mla_latents(p, cfg, x1, positions)
     cckv = L.scatter_kv(cache["ckv"], ckv1, pos)
     ckr = L.scatter_kv(cache["krope"], kr1, pos)
+    att_ckv, att_kr = cckv, ckr
+    if use_kernels and kv_bound is not None:
+        att_ckv, att_kr = cckv[:, :kv_bound], ckr[:, :kv_bound]
     # absorb W_uk into q: (B,H,R)
     q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x1.dtype))[:, 0]
     scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim,
                                        jnp.float32))
     s = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32),
-                    cckv.astype(jnp.float32))
+                    att_ckv.astype(jnp.float32))
          + jnp.einsum("bhk,btk->bht", q_rope[:, 0].astype(jnp.float32),
-                      ckr.astype(jnp.float32))) * scale
-    mask = jnp.arange(cckv.shape[1])[None, None, :] < (pos + 1)[:, None, None]
+                      att_kr.astype(jnp.float32))) * scale
+    mask = jnp.arange(att_ckv.shape[1])[None, None, :] < (pos + 1)[:, None, None]
     s = jnp.where(mask, s, L.NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bht,btr->bhr", w, cckv.astype(jnp.float32))  # (B,H,R)
+    o_lat = jnp.einsum("bht,btr->bhr", w, att_ckv.astype(jnp.float32))  # (B,H,R)
     o = jnp.einsum("bhr,rhk->bhk", o_lat.astype(x1.dtype), p["w_uv"].astype(x1.dtype))
     y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x1.dtype))[:, None]
     return y, {"ckv": cckv, "krope": ckr}

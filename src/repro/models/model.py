@@ -228,15 +228,26 @@ class Model:
                              attn_impl=attn_impl)
         return L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
 
-    def decode_step(self, params, cache, tokens, *, moe_dispatch: str = "einsum"):
-        """tokens: (B, 1) -> (logits (B, V), cache)."""
+    def decode_step(self, params, cache, tokens, *, moe_dispatch: str = "einsum",
+                    use_kernels: bool = False, kv_bound=None, src_bound=None,
+                    live_mask=None):
+        """tokens: (B, 1) -> (logits (B, V), cache).
+
+        use_kernels enables the ragged decode path: KV (and enc-dec
+        cross-KV) reads are bounded to the static ``kv_bound``/``src_bound``
+        prefixes the engine derives from true lengths, and ``live_mask``
+        (B,) lets kernels skip empty slots.  Live rows are bit-identical to
+        the padded path."""
         cfg = self.cfg
         x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
         src_len = cache.get("src_len") if cfg.is_encdec else None
         extra = {k: v for k, v in cache.items()
                  if k in ("prologue", "scanned", "pos")}
         x, new_cache = T.decoder_step(params["decoder"], cfg, x, extra,
-                                      src_len=src_len, moe_dispatch=moe_dispatch)
+                                      src_len=src_len, moe_dispatch=moe_dispatch,
+                                      use_kernels=use_kernels,
+                                      kv_bound=kv_bound, src_bound=src_bound,
+                                      live=live_mask)
         x = L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
         logits = self._mask_pad(jnp.einsum(
             "bd,dv->bv", x[:, 0], self._head(params).astype(x.dtype)))

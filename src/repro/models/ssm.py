@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distribution.partitioning import Annotated
+from repro.kernels.mamba_scan import mamba_step_fused
 from repro.models import layers as L
 
 
@@ -428,8 +429,19 @@ def mamba_prefill(p, cfg: ModelConfig, x, cache, *, chunk: int = 128):
     return out, new_cache
 
 
-def mamba_step(p, cfg: ModelConfig, x1, cache):
-    """One-token update. x1: (B,1,d)."""
+def mamba_step(p, cfg: ModelConfig, x1, cache, *, use_kernels=False,
+               live=None):
+    """One-token update. x1: (B,1,d).
+
+    use_kernels routes through the fused single-step op in
+    ``repro.kernels.mamba_scan`` (gate + scan + out in one kernel; empty
+    slots skip work).  Live rows are bit-identical to the inline chain."""
+    if use_kernels:
+        out, new_conv, new_h = mamba_step_fused(
+            x1, cache["conv"], cache["h"], p["in_proj"], p["conv_w"],
+            p["conv_b"], p["x_proj"], p["dt_proj"], p["dt_bias"], p["A_log"],
+            p["D"], p["out_proj"], live=live)
+        return out, {"conv": new_conv, "h": new_h}
     d_in, dt_rank, n, w = dims(cfg)
     xz = jnp.einsum("bsd,de->bse", x1, p["in_proj"].astype(x1.dtype))
     x_part, z = jnp.split(xz, 2, axis=-1)                 # (B,1,Din)

@@ -183,30 +183,41 @@ def _layer_prefill(p, cfg, x, positions, cache, *, is_global=None,
 
 
 def _layer_step(p, cfg, x1, cache, pos, *, is_global=None, src_len=None,
-                moe_dispatch="einsum"):
+                moe_dispatch="einsum", use_kernels=False, kv_bound=None,
+                src_bound=None, live=None):
     h = L.apply_norm(cfg.norm, p["ln1"], x1, cfg.norm_eps)
     new_cache = dict(cache)
     if cfg.hybrid_parallel:
         a, new_cache["attn"] = A.gqa_step(p["attn"], cfg, h, cache["attn"],
-                                          pos, is_global=is_global)
-        s, new_cache["ssm"] = S.mamba_step(p["ssm"], cfg, h, cache["ssm"])
+                                          pos, is_global=is_global,
+                                          use_kernels=use_kernels,
+                                          kv_bound=kv_bound, live=live)
+        s, new_cache["ssm"] = S.mamba_step(p["ssm"], cfg, h, cache["ssm"],
+                                           use_kernels=use_kernels, live=live)
         a = L.apply_norm("rmsnorm", p["attn_out_norm"], a, cfg.norm_eps)
         s = L.apply_norm("rmsnorm", p["ssm_out_norm"], s, cfg.norm_eps)
         x1 = x1 + 0.5 * (a + s)
     elif cfg.ssm is not None:
-        y, new_cache["ssm"] = S.mamba_step(p["ssm"], cfg, h, cache["ssm"])
+        y, new_cache["ssm"] = S.mamba_step(p["ssm"], cfg, h, cache["ssm"],
+                                           use_kernels=use_kernels, live=live)
         x1 = x1 + y
     elif cfg.mla is not None:
-        y, new_cache["attn"] = A.mla_step(p["attn"], cfg, h, cache["attn"], pos)
+        y, new_cache["attn"] = A.mla_step(p["attn"], cfg, h, cache["attn"],
+                                          pos, use_kernels=use_kernels,
+                                          kv_bound=kv_bound)
         x1 = x1 + y
     else:
         y, new_cache["attn"] = A.gqa_step(p["attn"], cfg, h, cache["attn"],
-                                          pos, is_global=is_global)
+                                          pos, is_global=is_global,
+                                          use_kernels=use_kernels,
+                                          kv_bound=kv_bound, live=live)
         x1 = x1 + y
     if "cross" in p:
         hc = L.apply_norm(cfg.norm, p["ln_cross"], x1, cfg.norm_eps)
         x1 = x1 + A.cross_step(p["cross"], cfg, hc, cache["cross_k"],
-                               cache["cross_v"], src_len)
+                               cache["cross_v"], src_len,
+                               use_kernels=use_kernels, src_bound=src_bound,
+                               live=live)
     if "moe" in p:
         h2 = L.apply_norm(cfg.norm, p["ln2"], x1, cfg.norm_eps)
         y, _ = M.moe_apply(p["moe"], cfg, h2, dispatch_impl=moe_dispatch)
@@ -382,21 +393,30 @@ def decoder_prefill(params, cfg: ModelConfig, x, positions, cache, *,
 
 
 def decoder_step(params, cfg: ModelConfig, x1, cache, *, src_len=None,
-                 moe_dispatch="einsum"):
+                 moe_dispatch="einsum", use_kernels=False, kv_bound=None,
+                 src_bound=None, live=None):
+    """use_kernels/kv_bound/src_bound/live: ragged decode hot path — the
+    serving engine threads a static KV bound covering every live row and a
+    per-row live mask; attention reads only the bounded prefix (bit-identical
+    for live rows) and kernels skip dead slots entirely."""
     n_pro, n_scan = _prologue_plan(cfg)
     pos = cache["pos"]
     new_pro = []
     for i, (lp, lc) in enumerate(zip(params["prologue"], cache["prologue"])):
         x1, nc = _layer_step(lp, cfg, x1, lc, pos,
                              is_global=jnp.asarray(i in cfg.global_attn_layers),
-                             src_len=src_len, moe_dispatch=moe_dispatch)
+                             src_len=src_len, moe_dispatch=moe_dispatch,
+                             use_kernels=use_kernels, kv_bound=kv_bound,
+                             src_bound=src_bound, live=live)
         new_pro.append(nc)
     flags = _global_flags(cfg, n_pro, n_scan)
 
     def body(h, xs):
         lp, lc, is_global = xs
         h, nc = _layer_step(lp, cfg, h, lc, pos, is_global=is_global,
-                            src_len=src_len, moe_dispatch=moe_dispatch)
+                            src_len=src_len, moe_dispatch=moe_dispatch,
+                            use_kernels=use_kernels, kv_bound=kv_bound,
+                            src_bound=src_bound, live=live)
         return h, nc
 
     x1, new_scanned = jax.lax.scan(body, x1, (params["scanned"],

@@ -57,6 +57,14 @@ class TenantDesignSpace:
     tp_allowed: bool = True              # False on replicated fabrics
     slot_cap: int = 64                   # hard slot-count ceiling
     dp_cap: int = 64                     # hard replica-count ceiling
+    # decode-side admission prefill pads prompts up to this bucket (0 =
+    # exact-length prefill, e.g. SSM/hybrid archs): Stage 1 prices the
+    # padded prefill work instead of treating prompt padding as free
+    prefill_bucket: int = 0
+    # ragged Pallas decode kernels active (ServeConfig.use_kernels): decode
+    # steps stream only the live KV/source prefix, so Stage 1 prices the
+    # expected observed length instead of the full per-slot capacity
+    use_kernels: bool = True
 
 
 def padded_factor(ladder: Sequence[int], lengths: Sequence[int]) -> float:
@@ -129,12 +137,51 @@ class Stage1Optimizer:
                       lengths: Sequence[int], src_cap: int) -> int:
         """Expected per-slot source length an enc-dec tenant's
         cross-attention reads under ``ladder`` (falls back to the capacity
-        when no lengths were observed — the pre-DSE pricing)."""
+        when no lengths were observed — the pre-DSE pricing).  With the
+        ragged kernels active the cross read is the *true* source length,
+        not the padded bucket."""
         valid = [L for L in lengths if 0 < L <= ladder[-1]]
         if not valid:
             return src_cap or space.max_src or space.max_len
+        if space.use_kernels:
+            return max(1, sum(valid) // len(valid))
         return max(1, sum(pick_bucket(ladder, L) for L in valid)
                    // len(valid))
+
+    def _expected_kv(self, space: TenantDesignSpace,
+                     lengths: Sequence[int]) -> int:
+        """Decoder-KV length a decode step streams per slot: the full
+        per-slot capacity on the padded path (masked rows still read), the
+        mean observed prompt length under the ragged kernels (no
+        observations -> capacity, so an idle tenant is never under-priced)."""
+        if not space.use_kernels:
+            return space.max_len
+        valid = [L for L in lengths if 0 < L <= space.max_len]
+        if not valid:
+            return space.max_len
+        return max(1, min(sum(valid) // len(valid), space.max_len))
+
+    def _prefill_tax(self, cfg: ModelConfig, space: TenantDesignSpace,
+                     p: int, lengths: Sequence[int]) -> float:
+        """Amortized per-step price of decode-side admission prefill: each
+        admitted prompt runs one padded full-sequence pass (length rounded
+        up to ``prefill_bucket``), paid once per request and spread over the
+        request's expected decode steps.  Previously prompt padding was
+        free to the model, so Stage 1 could never see a bucket mismatched
+        to the traffic."""
+        if space.prefill_bucket <= 0:
+            return 0.0
+        valid = [L for L in lengths if 0 < L <= space.max_len]
+        if not valid:
+            return 0.0
+        bucket = max(space.prefill_bucket, 8)
+        padded = [min(-(-L // bucket) * bucket, space.max_len)
+                  for L in valid]
+        mean_len = sum(valid) / len(valid)
+        mean_pad = sum(padded) / len(padded)
+        per_tok = self.step_cost(cfg, 1, p, ENCODER)
+        steps = max(space.max_len - mean_len, 1.0)
+        return per_tok * mean_pad / steps
 
     def cost_of(self, cfg: ModelConfig, space: TenantDesignSpace,
                 concurrency: int, point: DesignPoint,
@@ -166,11 +213,20 @@ class Stage1Optimizer:
             return (per_tok * padded_factor(ladder, lengths) + coll) / d
         if space.wclass == ENCDEC:
             src = self._expected_src(space, ladder, lengths, src_cap)
-            base = self.step_cost(cfg, slots, p, ENCDEC, src_len=src)
+            base = self.step_cost(cfg, slots, p, ENCDEC, src_len=src,
+                                  kv_len=space.max_len)
+        elif space.wclass == DECODE:
+            base = self.step_cost(cfg, slots, p, DECODE,
+                                  kv_len=self._expected_kv(space, lengths))
         else:
             base = self.step_cost(cfg, slots, p, space.wclass)
-        return (base + self.collective_s(cfg, slots, p, space)
-                + dp_dispatch_overhead(d)) / min(d * slots, k)
+        per_step = (base + self.collective_s(cfg, slots, p, space)
+                    + dp_dispatch_overhead(d)) / min(d * slots, k)
+        # decode-side prompt padding at admission is work too (satellite of
+        # the ragged-kernel hot path: the prefill bucket stops being free)
+        if space.wclass == DECODE:
+            per_step += self._prefill_tax(cfg, space, p, lengths)
+        return per_step
 
     # -- the search --------------------------------------------------------
     def _slot_candidates(self, space: TenantDesignSpace, concurrency: int,

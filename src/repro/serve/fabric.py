@@ -44,7 +44,8 @@ import numpy as np
 from repro.common.platform import TPU_V5E, PlatformProfile
 from repro.configs import get_config, get_reduced
 from repro.configs.base import ModelConfig
-from repro.core.analytical import AccelConfig, layer_latency, ssm_step_latency
+from repro.core.analytical import (AccelConfig, decode_kv_read_latency,
+                                   layer_latency, ssm_step_latency)
 from repro.core.composer import MeshComposer
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
@@ -235,13 +236,19 @@ class AnalyticalPolicy:
 
     # -- per-tenant per-step cost on a c-CU sub-accelerator ----------------
     def step_cost(self, cfg: ModelConfig, batch: int, cus: int,
-                  wclass: str = DECODE, src_len: int = 0) -> float:
+                  wclass: str = DECODE, src_len: int = 0,
+                  kv_len: int = 0) -> float:
         """Predicted seconds per unit of owed work for one tenant on a
         ``cus``-CU sub-accelerator: per decode step for decode/ssm/encdec
         tenants, per owed prompt token for encoder tenants.
 
         src_len: enc-dec tenants' per-slot source length (frames read by
         every cross-attention step); ignored for other classes.
+
+        kv_len: decoder-KV length each decode step streams per slot — the
+        full per-slot capacity on the padded path, the expected live prefix
+        under the ragged decode kernels (Stage 1 passes the estimate; 0
+        keeps the term out, the pre-kernel pricing).  Attention archs only.
         """
         if cus <= 0:
             return float("inf")
@@ -250,10 +257,11 @@ class AnalyticalPolicy:
         # stale decode-GEMM price (and full/reduced configs share a name:
         # key on the priced dims too — d_ff and the KV dims are priced, so
         # they are in the key).  src_len prices the encdec cross-attention
-        # read, so it is part of the key.
+        # read and kv_len the decoder-KV read, so both are in the key.
+        kv = kv_len if wclass in (DECODE, ENCDEC) else 0
         key = (wclass, cfg.name, cfg.num_layers, cfg.d_model,
                cfg.d_ff, cfg.num_kv_heads, cfg.resolved_head_dim,
-               max(batch, 1), cus, src_len if wclass == ENCDEC else 0)
+               max(batch, 1), cus, src_len if wclass == ENCDEC else 0, kv)
         if key not in self._cost_cache:
             accel = AccelConfig(
                 name=f"tpu-sub{cus}", num_cus=cus,
@@ -292,24 +300,32 @@ class AnalyticalPolicy:
                 lb_attn = layer_latency(accel, self.platform, b, d, d)
                 lb_mlp = layer_latency(accel, self.platform,
                                        b, d, cfg.d_ff or 4 * d)
-                src = max(src_len, 1)
-                kv_bytes = 4.0 * b * src * 2 * cfg.num_kv_heads \
-                    * cfg.resolved_head_dim
-                cross_read_s = kv_bytes / (max(cus, 1) * self.platform.hbm_bw)
+                cross_read_s = decode_kv_read_latency(
+                    accel, self.platform, b, cfg.num_kv_heads,
+                    cfg.resolved_head_dim, max(src_len, 1))
+                kv_read_s = decode_kv_read_latency(
+                    accel, self.platform, b, cfg.num_kv_heads,
+                    cfg.resolved_head_dim, kv)
                 cost = cfg.num_layers * (
                     3 * _composed_total_s(lb_attn, cus)
                     + 2 * _composed_total_s(lb_mlp, cus)
-                    + cross_read_s)
+                    + cross_read_s + kv_read_s)
             else:
                 # dominant decode GEMMs per layer: attention out/in (d x d)
-                # and the MLP pair (d x d_ff), batched over live slots
+                # and the MLP pair (d x d_ff), batched over live slots —
+                # plus the per-step decoder-KV stream when the caller
+                # prices it (kv_len > 0)
                 lb_attn = layer_latency(accel, self.platform,
                                         max(batch, 1), d, d)
                 lb_mlp = layer_latency(accel, self.platform,
                                        max(batch, 1), d, cfg.d_ff or 4 * d)
+                kv_read_s = decode_kv_read_latency(
+                    accel, self.platform, max(batch, 1), cfg.num_kv_heads,
+                    cfg.resolved_head_dim, kv)
                 cost = cfg.num_layers * (
                     2 * _composed_total_s(lb_attn, cus)
-                    + 2 * _composed_total_s(lb_mlp, cus))
+                    + 2 * _composed_total_s(lb_mlp, cus)
+                    + kv_read_s)
             self._cost_cache[key] = cost
         return self._cost_cache[key]
 
@@ -1165,7 +1181,13 @@ class ComposedServer:
                 per_slot_elems=per_slot,
                 tp_allowed=self.rules is not None,
                 slot_cap=max(eng.cfg.slot_cap, 1),
-                dp_cap=max(self.specs[t].dp_cap, 1))
+                dp_cap=max(self.specs[t].dp_cap, 1),
+                # SSM/hybrid archs prefill at exact lengths — no padding
+                # for Stage 1 to price on their admission path
+                prefill_bucket=(eng.cfg.prefill_bucket
+                                if getattr(self.cfgs[t], "ssm", None) is None
+                                else 0),
+                use_kernels=getattr(eng.cfg, "use_kernels", True))
         return out
 
     def _applied_points(self) -> Dict[str, DesignPoint]:

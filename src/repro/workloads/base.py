@@ -28,6 +28,7 @@ it — any object with these methods can be a tenant.
 """
 from __future__ import annotations
 
+import collections
 from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, \
     runtime_checkable
 
@@ -81,6 +82,91 @@ def pick_bucket(ladder: Sequence[int], length: int) -> int:
         if length <= b:
             return b
     return ladder[-1]
+
+
+class DecayedLengthEstimator:
+    """Exponentially decayed estimate of the submitted-length distribution.
+
+    Replaces the flat last-N window behind ``Engine.recent_lengths()``: a
+    flat deque weighs a 200-observation-old prompt the same as the last one,
+    so after a traffic shift the serving DSE's Stage-1 bucket-ladder search
+    keeps optimizing for the dead distribution until the stale half drains.
+    Here every new observation decays all older ones by ``decay``, giving an
+    effective window of ~1/(1-decay) observations — a shifted distribution
+    dominates the estimate within a bounded number of submissions (pinned by
+    tests/test_ragged_decode.py).
+
+    ``lengths()`` keeps the protocol's ``Tuple[int, ...]`` shape by emitting
+    a fixed-size weighted resample (largest-remainder allocation of
+    ``resolution`` copies), so downstream consumers (``padded_factor``,
+    Stage-1 candidate ladders, expected-length means) need no change.
+    Deterministic: no RNG, same observations -> same tuple.
+
+    The deque-compatible ``append``/``__iter__``/``__len__`` surface keeps
+    existing engine call sites unchanged.
+    """
+
+    def __init__(self, decay: float = 0.97, cap: int = 256,
+                 resolution: int = 64):
+        if not 0.0 < decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
+        self.decay = decay
+        self.resolution = resolution
+        # (length, weight) at a shared scale; fresh observations enter at
+        # self._scale, which grows by 1/decay per observation so older
+        # entries decay without a touch-everything pass
+        self._samples: "collections.deque" = collections.deque(maxlen=cap)
+        self._scale = 1.0
+
+    def observe(self, length: int) -> None:
+        self._scale /= self.decay
+        if self._scale > 1e9:               # keep float headroom
+            factor = self._scale
+            self._samples = collections.deque(
+                ((ln, w / factor) for ln, w in self._samples),
+                maxlen=self._samples.maxlen)
+            self._scale = 1.0
+        self._samples.append((int(length), self._scale))
+
+    # deque-compatible surface (engines call .append on submit)
+    def append(self, length: int) -> None:
+        self.observe(length)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def __iter__(self):
+        return iter(self.lengths())
+
+    def lengths(self) -> Tuple[int, ...]:
+        """Weighted resample of the observed lengths, newest-heavy: each
+        retained sample gets ``resolution``-normalized copies proportional
+        to its decayed weight (largest remainder; decayed-out samples get
+        none)."""
+        if not self._samples:
+            return ()
+        total = sum(w for _, w in self._samples)
+        n = min(self.resolution, len(self._samples) or 1)
+        quotas = [(ln, n * w / total) for ln, w in self._samples]
+        counts = [(ln, int(q)) for ln, q in quotas]
+        short = n - sum(c for _, c in counts)
+        # hand the remainder to the largest fractional parts (ties: newest)
+        order = sorted(range(len(quotas)),
+                       key=lambda i: (quotas[i][1] - int(quotas[i][1]), i),
+                       reverse=True)
+        for i in order[:short]:
+            counts[i] = (counts[i][0], counts[i][1] + 1)
+        out: List[int] = []
+        for ln, c in counts:
+            out.extend([ln] * c)
+        return tuple(out)
+
+    def mean(self) -> float:
+        """Decay-weighted mean length (0.0 when nothing observed)."""
+        if not self._samples:
+            return 0.0
+        total = sum(w for _, w in self._samples)
+        return sum(ln * w for ln, w in self._samples) / total
 
 
 @runtime_checkable

@@ -36,8 +36,10 @@ Three properties make the engine a real-time-recomposable accelerator
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import functools
+import itertools
+import os
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -51,10 +53,27 @@ from repro.core.composer import mesh_fingerprint
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
-from repro.workloads.base import EngineTelemetry
+from repro.workloads.base import DecayedLengthEstimator, EngineTelemetry
 from repro.workloads.compile_cache import ExecutableCache
 
 PyTree = Any
+
+# Ragged decode programs are specialized on a static KV upper bound (the max
+# live per-row length, rounded up).  Rounding to this block keeps the number
+# of distinct decode executables per config at most max_len / KV_BOUND_BLOCK.
+KV_BOUND_BLOCK = 32
+
+
+def _env_use_kernels() -> bool:
+    """Default for ``ServeConfig.use_kernels``: on unless REPRO_USE_KERNELS
+    is set to an off value (escape hatch for A/B runs and the kernel-off
+    benchmark leg)."""
+    return os.environ.get("REPRO_USE_KERNELS", "1").lower() not in (
+        "0", "false", "off")
+
+
+def _round_block(n: int) -> int:
+    return -(-max(n, 1) // KV_BOUND_BLOCK) * KV_BOUND_BLOCK
 
 
 def _mesh_of(sub) -> Optional[Mesh]:
@@ -122,6 +141,14 @@ class ServeConfig:
     # a grant only buys throughput via data-parallel replicas (the
     # ReplicaGroup dp axis), not a wider batch.
     slot_cap: int = 64
+    # ragged Pallas decode kernels on the hot path: decode attention reads
+    # only the live KV prefix (per-row true lengths, empty slots skipped)
+    # instead of the padded max_len cache, and SSM steps run the fused
+    # single-step scan.  Token streams are bit-identical either way (pinned
+    # by tests/test_ragged_decode.py).  Default on; REPRO_USE_KERNELS=0
+    # flips the default for A/B benchmarking without code changes.  Part of
+    # every executable-cache key (the lowered decode program differs).
+    use_kernels: bool = dataclasses.field(default_factory=_env_use_kernels)
 
 
 @dataclasses.dataclass
@@ -155,7 +182,7 @@ class DecodeEngine(EngineTelemetry):
         # per design point via apply(point.tp)
         self._tp: Optional[int] = None
         self._granted = None               # last granted sub-mesh (unsliced)
-        self._recent_lens: collections.deque = collections.deque(maxlen=256)
+        self._recent_lens = DecayedLengthEstimator()
         self._per_token_elems = self._per_token_cache_elems()
         self.arena = FlexArena(self._arena_capacity())
         self._queue: List[Request] = []
@@ -250,7 +277,8 @@ class DecodeEngine(EngineTelemetry):
         has no encode phase); the enc-dec engine extends the key with it."""
         del buckets
         return (self.workload_class, self.model.cfg, slots,
-                self.cfg.max_len, _rules_fp(self.rules))
+                self.cfg.max_len, _rules_fp(self.rules),
+                self.cfg.use_kernels)
 
     def _plan_for_slots(self, slots: int) -> part.ShardingPlan:
         """ShardingPlan of the pooled cache at ``slots`` — abstract-eval'd
@@ -527,14 +555,67 @@ class DecodeEngine(EngineTelemetry):
                                     sharding=NamedSharding(mesh, P()))
 
     def _decode_fn(self, params, cache, prev_tokens, inject_vals,
-                   inject_mask, live_mask):
+                   inject_mask, live_mask, *, kv_bound=None, src_bound=None):
         # next input token per slot: host-injected (fresh prefill / sync
         # mode) or the previous step's device-resident output (pipelined)
         toks = jnp.where(inject_mask, inject_vals, prev_tokens)[:, None]
-        logits, cache = self.model.decode_step(params, cache, toks)
+        logits, cache = self.model.decode_step(
+            params, cache, toks, use_kernels=self.cfg.use_kernels,
+            kv_bound=kv_bound, src_bound=src_bound, live_mask=live_mask)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         nxt = jnp.where(live_mask, nxt, 0)
         return nxt, cache
+
+    # ------------------------------------------------------------------
+    # ragged-kernel decode bounds: with use_kernels on, decode attention
+    # reads only cache[:, :kv_bound].  The bound — max live per-row length
+    # rounded up to KV_BOUND_BLOCK — is baked into the executable as a
+    # static slice, so the engine lowers at most max_len/KV_BOUND_BLOCK
+    # decode programs per config; retunes and dp replicas reuse them
+    # stall-free through the shared ExecutableCache.
+    # ------------------------------------------------------------------
+    def _dec_len(self, req: Request) -> int:
+        """Host-side mirror of a slot's KV occupancy for the *next*
+        dispatch: attention reads ``pos + 1 = len(prompt) + scheduled``
+        entries (the enc-dec engine overrides for its decoder prompt)."""
+        return len(req.tokens) + req.scheduled
+
+    def _kv_bound(self) -> int:
+        longest = max((self._dec_len(r) for r in self._active.values()),
+                      default=1)
+        return min(_round_block(longest), self.cfg.max_len)
+
+    def _decode_bounds(self) -> Tuple[int, ...]:
+        """Static KV bounds of the decode program about to be dispatched:
+        ``()`` when the padded path is active (or the arch holds no KV
+        cache), ``(kv_bound,)`` for self-attention; the enc-dec engine adds
+        the cross-attention source bound."""
+        if not self.cfg.use_kernels or self.model.cfg.attention_free:
+            return ()
+        return (self._kv_bound(),)
+
+    def _full_bounds(self) -> Tuple[int, ...]:
+        """Worst-case bounds (full cache capacity), warmed alongside the
+        current ones so long-running slots never hit a cold build."""
+        if not self.cfg.use_kernels or self.model.cfg.attention_free:
+            return ()
+        return (self.cfg.max_len,)
+
+    def _next_bounds(self) -> Tuple[int, ...]:
+        """The current bounds bumped one block per axis (clamped to
+        capacity) — warmed ahead so live lengths growing across the next
+        block boundary dispatch a pre-built program."""
+        return tuple(min(b + KV_BOUND_BLOCK, cap) for b, cap
+                     in zip(self._decode_bounds(), self._full_bounds()))
+
+    def _covering_bounds(self, bounds: Tuple[int, ...]) -> list:
+        """All block-quantized bounds that dominate ``bounds`` elementwise
+        (excluding itself), smallest total slack first — the fallback
+        ladder when the exact bound was never warmed."""
+        axes = [range(b, cap + 1, KV_BOUND_BLOCK)
+                for b, cap in zip(bounds, self._full_bounds())]
+        cands = sorted(itertools.product(*axes), key=lambda t: (sum(t), t))
+        return [t for t in cands if t != tuple(bounds)]
 
     def _prefill_fn(self, params, pool_cache, single, tokens, true_len, slot):
         """Prefill one prompt into the reusable single-slot cache and write
@@ -545,7 +626,8 @@ class DecodeEngine(EngineTelemetry):
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         return first, pool
 
-    def _build_decode(self, mesh, slots: Optional[int] = None):
+    def _build_decode(self, mesh, slots: Optional[int] = None,
+                      bounds: Tuple[int, ...] = ()):
         B = slots or self.cfg.max_slots
         plan = self._plan_for_slots(B)
         rules = self._rules_eff
@@ -554,7 +636,11 @@ class DecodeEngine(EngineTelemetry):
             kwargs["out_shardings"] = (
                 NamedSharding(mesh, P()),
                 plan.shardings(mesh, rules))
-        fn = jax.jit(self._decode_fn, donate_argnums=(1,), **kwargs)
+        # bounds bind as keywords so donate_argnums=(1,) keeps pointing at
+        # the cache positional
+        step = functools.partial(
+            self._decode_fn, **dict(zip(("kv_bound", "src_bound"), bounds)))
+        fn = jax.jit(step, donate_argnums=(1,), **kwargs)
         return fn.lower(
             self._param_plan.avals(mesh, rules),
             plan.avals(mesh, rules),
@@ -582,10 +668,22 @@ class DecodeEngine(EngineTelemetry):
             self._vec_aval(mesh, jnp.int32, ()),
         ).compile()
 
-    def _decode_exec(self, mesh):
-        key = ("decode", self._cfg_key, self._mesh_fp)
+    def _decode_exec(self, mesh, bounds: Tuple[int, ...] = ()):
+        key = ("decode", self._cfg_key, self._mesh_fp, bounds)
+        if bounds and not self._exec.contains(key):
+            # a bound whose program was never pre-built (live lengths grew
+            # past the warm set between warm_compile calls): dispatch the
+            # smallest WARM bound covering it — full capacity is always
+            # warm — instead of compiling on the serving path; the exact
+            # program arrives with the next warm_compile
+            for cand in self._covering_bounds(bounds):
+                ck = ("decode", self._cfg_key, self._mesh_fp, cand)
+                if self._exec.contains(ck):
+                    bounds, key = cand, ck
+                    break
         return self._exec.get_or_build(
-            key, self._counted(lambda: self._build_decode(mesh)))
+            key, self._counted(
+                lambda: self._build_decode(mesh, bounds=bounds)))
 
     def _prefill_exec(self, mesh, nb: int):
         key = ("prefill", self._cfg_key, self._mesh_fp, nb)
@@ -626,9 +724,17 @@ class DecodeEngine(EngineTelemetry):
         B = point.slots or self.cfg.max_slots
         key = self._config_key(B)
         fp = mesh_fingerprint(mesh)
-        built = self._exec.ensure(
-            ("decode", key, fp),
-            self._counted(lambda: self._build_decode(mesh, B)))
+        # warm the decode program at the bounds about to dispatch, one
+        # block above them (live lengths grow between warm_compile calls)
+        # AND at full cache capacity, so neither the first post-switch step
+        # nor a later long slot hits a cold build on the new composition
+        built = 0
+        for bounds in sorted({self._decode_bounds(), self._next_bounds(),
+                              self._full_bounds()}):
+            built += self._exec.ensure(
+                ("decode", key, fp, bounds),
+                self._counted(
+                    lambda bounds=bounds: self._build_decode(mesh, B, bounds)))
         # snapshot: the serving thread appends new prefill lengths while a
         # background prewarm iterates
         for nb in sorted(tuple(self._prefill_lens)):
@@ -668,10 +774,11 @@ class DecodeEngine(EngineTelemetry):
         return self.arena.utilization()
 
     def recent_lengths(self) -> Tuple[int, ...]:
-        """Recently submitted prompt/source lengths (bounded window) — the
-        observed-traffic signal the serving DSE's Stage-1 bucket-ladder
+        """Recently submitted prompt/source lengths, exponentially decayed
+        toward the newest traffic (a weighted resample, not a flat window) —
+        the observed-traffic signal the serving DSE's Stage-1 bucket-ladder
         search optimizes against."""
-        return tuple(self._recent_lens)
+        return self._recent_lens.lengths()
 
     def stats(self) -> Dict[str, Any]:
         """Load/telemetry snapshot: queue depth (requests), live slots,
@@ -783,7 +890,7 @@ class DecodeEngine(EngineTelemetry):
                 inject_vals[slot] = self._inject[slot]
         prev = (self._inflight.nxt if self._inflight is not None
                 else np.zeros((B,), np.int32))
-        exe = self._decode_exec(self.mesh)
+        exe = self._decode_exec(self.mesh, self._decode_bounds())
         nxt, self.cache = exe(self.params, self.cache, prev,
                               inject_vals, inject_mask, live)
         self._inject.clear()

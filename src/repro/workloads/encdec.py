@@ -59,7 +59,7 @@ from repro.models.model import Model
 from repro.workloads.base import length_buckets, pick_bucket
 from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import (DecodeEngine, Request, ServeConfig,
-                                    _mesh_of, _write_slot)
+                                    _mesh_of, _round_block, _write_slot)
 
 # source kinds a request's batched encode groups by: token ids embedded as
 # stand-in frames (frontend STUB) vs precomputed frame embeddings
@@ -159,6 +159,32 @@ class EncDecEngine(DecodeEngine):
         if length <= 1:
             return 1
         return min(self._bucketed(length), self.cfg.max_len)
+
+    # ------------------------------------------------------------------
+    # ragged-kernel decode bounds: enc-dec steps read two caches, so the
+    # decode program carries a static bound for each — decoder KV (live
+    # decoder-prompt + generated lengths) and cross-attention source cache
+    # (live source lengths)
+    # ------------------------------------------------------------------
+    def _dec_len(self, req: Request) -> int:
+        """Decoder-KV occupancy for the next dispatch: the decoder prompt
+        is [bos] + forced prefix, not the source (``req.tokens``)."""
+        return len(self._dec_prompt(req)) + req.scheduled
+
+    def _src_bound(self) -> int:
+        longest = max((len(r.tokens) for r in self._active.values()),
+                      default=1)
+        return min(_round_block(longest), self._max_src)
+
+    def _decode_bounds(self) -> Tuple[int, ...]:
+        if not self.cfg.use_kernels:
+            return ()
+        return (self._kv_bound(), self._src_bound())
+
+    def _full_bounds(self) -> Tuple[int, ...]:
+        if not self.cfg.use_kernels:
+            return ()
+        return (self.cfg.max_len, self._max_src)
 
     # ------------------------------------------------------------------
     # compiled executables: batched bucketed encode + per-slot prefill
@@ -267,9 +293,14 @@ class EncDecEngine(DecodeEngine):
         ladder = (length_buckets(point.buckets, self._max_src)
                   if point.buckets is not None else self._src_buckets)
         fp = mesh_fingerprint(mesh)
-        built = self._exec.ensure(
-            ("decode", key, fp),
-            self._counted(lambda: self._build_decode(mesh, E)))
+        built = 0
+        for bounds in sorted({self._decode_bounds(), self._next_bounds(),
+                              self._full_bounds()}):
+            built += self._exec.ensure(
+                ("decode", key, fp, bounds),
+                self._counted(
+                    lambda bounds=bounds:
+                    self._build_decode(mesh, E, bounds)))
         # snapshots: the serving thread may add kinds/lengths while a
         # background prewarm iterates
         kinds = sorted(self._src_kinds)

@@ -34,7 +34,6 @@ mirroring the decode engine's contract that requests never vanish.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
@@ -48,7 +47,8 @@ from repro.core.composer import mesh_fingerprint
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
-from repro.workloads.base import EngineTelemetry, length_buckets, pick_bucket
+from repro.workloads.base import (DecayedLengthEstimator, EngineTelemetry,
+                                  length_buckets, pick_bucket)
 from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import (DecodeEngine, ServeConfig, _mesh_of,
                                     _rules_fp)
@@ -92,7 +92,7 @@ class EncoderEngine(EngineTelemetry):
         self._own_builds = 0
         self._tp: Optional[int] = None
         self._granted = None
-        self._recent_lens: collections.deque = collections.deque(maxlen=256)
+        self._recent_lens = DecayedLengthEstimator()
         self._buckets = length_buckets(cfg.len_buckets, cfg.max_len)
         self._bucket_hits: Dict[int, int] = {b: 0 for b in self._buckets}
         self._cfg_key = self._config_key(cfg.max_slots)
@@ -212,9 +212,10 @@ class EncoderEngine(EngineTelemetry):
         return queued
 
     def recent_lengths(self) -> Tuple[int, ...]:
-        """Recently submitted job lengths (bounded window) — what the
-        serving DSE's Stage-1 bucket-ladder search optimizes against."""
-        return tuple(self._recent_lens)
+        """Recently submitted job lengths, exponentially decayed toward the
+        newest traffic — what the serving DSE's Stage-1 bucket-ladder search
+        optimizes against."""
+        return self._recent_lens.lengths()
 
     # ------------------------------------------------------------------
     # compiled executable: one fixed-shape batched encode per mesh

@@ -27,6 +27,13 @@ the constant-size state pool.  ``Model.prefill``/``Model.decode_step`` on an
 attention-free config bottom out in ``mamba_prefill``/``mamba_step`` per
 layer, and the engine prefills at the exact prompt length (padding would
 corrupt recurrent state).
+
+With ``ServeConfig.use_kernels`` on (the default), each decode step runs the
+fused single-step scan (``repro.kernels.mamba_scan.mamba_step_fused``) —
+the whole in_proj→conv→SSM→out_proj chain in one kernel per slot row
+instead of a dozen XLA dispatches.  There is no KV bound to specialize on
+(state is O(1)), so the base engine's ``_decode_bounds()`` is () and the
+``use_kernels`` flag alone distinguishes the compiled decode program.
 """
 from __future__ import annotations
 
