@@ -40,6 +40,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -66,6 +67,20 @@ MIXED_FLEET = (("decode", "minitron-4b"),
                ("encdec", "seamless-m4t-medium"))
 
 
+def _telemetry_line(server, steps: int, toks: int, dt: float) -> str:
+    """The per-interval serving summary (one line, stderr): throughput,
+    decode-step percentiles, fleet queue depth, last recompose reason."""
+    h = server.obs.registry.merged_histogram("decode_step_s")
+    p50 = h.quantile(0.5) * 1e3 if h.count else 0.0
+    p99 = h.quantile(0.99) * 1e3 if h.count else 0.0
+    qd = sum(eng.queue_depth for eng in server.engines.values())
+    reason = server.events[-1].reason if server.events else "-"
+    return (f"[serve {dt:7.1f}s step {steps:5d}] "
+            f"tok/s={toks / max(dt, 1e-9):7.1f} "
+            f"step_ms p50={p50:.2f} p99={p99:.2f} "
+            f"queue={qd} last_recompose={reason}")
+
+
 def run_fabric(args) -> int:
     """Traffic-driven multi-tenant serving on one recomposable fabric."""
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
@@ -85,7 +100,8 @@ def run_fabric(args) -> int:
     server = ComposedServer(mesh, tenants, policy=policy,
                             decide_every=args.decide_every,
                             tp=not args.no_tp, warm=not args.no_warm,
-                            prewarm_async=args.prewarm_async)
+                            prewarm_async=args.prewarm_async,
+                            telemetry=not args.no_telemetry)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     # bursty open-loop traffic: each tenant gets its requests in one burst
@@ -94,6 +110,11 @@ def run_fabric(args) -> int:
                     for t in tenants for _ in range(args.requests))
     steps = 0
     predicted = None
+    toks = 0
+    # harness-level step timing: host perf_counter around server.step(),
+    # measured identically with telemetry on or off — the benchmark's
+    # overhead comparison reads this, not the registry's own histograms
+    harness_step_ms = []
     while bursts or server.pending():
         while bursts and bursts[0][0] <= steps:
             _, name = bursts.pop(0)
@@ -101,14 +122,23 @@ def run_fabric(args) -> int:
             plen = int(rng.integers(4, 24))
             server.submit(name, rng.integers(1, vocab, size=plen),
                           max_new_tokens=args.max_new_tokens)
-        server.step()
+        s0 = time.perf_counter()
+        out = server.step()
+        harness_step_ms.append((time.perf_counter() - s0) * 1e3)
+        toks += sum(len(v) for v in out.values())
         if policy.predicted is not None:
             predicted = dict(policy.predicted)   # last busy decide's view
         steps += 1
+        if args.log_every and steps % args.log_every == 0:
+            # stderr: stdout carries exactly one JSON document (the
+            # benchmark harness parses it from the first brace)
+            print(_telemetry_line(server, steps, toks,
+                                  time.monotonic() - t0), file=sys.stderr)
         if steps > 10_000:
             break
     dt = time.monotonic() - t0
     stats = server.stats()
+    arr = np.asarray(harness_step_ms if harness_step_ms else [0.0])
     # per-class throughput: decode/ssm/encdec tenants emit tokens, encoder
     # tenants emit completed sequences (embeddings)
     throughput = {
@@ -122,6 +152,12 @@ def run_fabric(args) -> int:
         "two_stage": not args.split_only,
         "decode_steps": steps,
         "wall_s": round(dt, 2), **stats,
+        "telemetry": not args.no_telemetry,
+        "harness_step_ms": {
+            "p50": round(float(np.percentile(arr, 50)), 3),
+            "p99": round(float(np.percentile(arr, 99)), 3),
+            "n": len(harness_step_ms)},
+        "slo": server.slo_summary(),
         "per_class_throughput": throughput,
         # the last busy decide's predicted makespans (analytical, seconds):
         # what Stage 2 thought the best and the applied design cost
@@ -139,6 +175,13 @@ def run_fabric(args) -> int:
                         for t, s in e.post_step_seconds.items()}}
                    for e in server.events],
     }, indent=1))
+    if args.trace_out:
+        server.dump_trace(args.trace_out)
+        print(f"trace written: {args.trace_out}", file=sys.stderr)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(server.metrics_snapshot(), f, indent=1)
+        print(f"metrics written: {args.metrics_json}", file=sys.stderr)
     return 0
 
 
@@ -278,6 +321,93 @@ def run_dse_smoke(args) -> int:
         return 1
     print("DSE smoke OK: non-default design point (dp > 1) chosen and "
           "applied live")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# obs smoke: the telemetry pipeline must observe a real mixed-fleet run
+# ---------------------------------------------------------------------------
+
+def run_obs_smoke(args) -> int:
+    """Telemetry smoke on the heterogeneous fleet: serve a short
+    ``--scenario mixed`` run with tracing on, export the Perfetto trace,
+    and assert that
+
+    * the trace-event JSON is valid and carries at least one ``recompose``
+      span plus decode-step and warm-compile spans, and
+    * every tenant class accumulated a non-empty decode-step histogram
+      (the encoder class records its batched encode iteration under the
+      same ``decode_step_s`` name — one CI predicate covers all four).
+
+    Fast CI guard that instrumentation stays wired through the whole
+    stack: engines, replica groups, the fabric and the exporters."""
+    if jax.device_count() < 4:
+        print("obs-smoke needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    serve = ServeConfig(max_slots=2, max_len=64, eos_id=-1)
+    tenants = [TenantSpec(f"{w}-{arch}", arch, reduced=True, serve=serve,
+                          seed=i, workload=w)
+               for i, (w, arch) in enumerate(MIXED_FLEET)]
+    server = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
+                            decide_every=3)
+    rng = np.random.default_rng(args.seed)
+    for t in server.engines:
+        vocab = server.cfgs[t].vocab_size
+        for _ in range(3):
+            server.submit(t, rng.integers(1, vocab, size=8),
+                          max_new_tokens=6)
+    server.drain(max_steps=600)
+    if server.stats()["recompositions"] == 0:
+        # quiet run: force one live recomposition so the trace predicate
+        # exercises the recompose span path deterministically
+        sizes = server.sizes()
+        lo = min(sizes, key=sizes.get)
+        hi = max(sizes, key=sizes.get)
+        sizes[lo], sizes[hi] = sizes[lo] + 1, sizes[hi] - 1
+        server.recompose(sizes, reason="obs-smoke")
+        server.drain(max_steps=200)
+    trace_path = args.trace_out or "/tmp/obs_smoke_trace.json"
+    server.dump_trace(trace_path)
+    with open(trace_path) as f:
+        trace = json.load(f)
+    events = trace.get("traceEvents", [])
+    names = [e.get("name") for e in events]
+    schema_ok = all(
+        isinstance(e.get("ts"), (int, float))
+        and isinstance(e.get("dur"), (int, float))
+        and e.get("ph") == "X" and e.get("name")
+        for e in events)
+    merged = server.metrics()
+    hist_by_class = {
+        server.classes[t]:
+            merged.merged_histogram("decode_step_s", tenant=t).count
+        for t in server.engines}
+    checks = {
+        "trace_events": len(events),
+        "trace_schema_ok": bool(events) and schema_ok,
+        "recompose_spans": names.count("recompose"),
+        "decode_step_spans": sum(n in ("decode_step", "encode_step")
+                                 for n in names),
+        "warm_compile_spans": names.count("warm_compile"),
+        "decode_step_hist_by_class": hist_by_class,
+    }
+    ok = (checks["trace_schema_ok"]
+          and checks["recompose_spans"] >= 1
+          and checks["decode_step_spans"] >= 1
+          and checks["warm_compile_spans"] >= 1
+          and all(n > 0 for n in hist_by_class.values()))
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(server.metrics_snapshot(), f, indent=1)
+    print(json.dumps({**checks, "trace_path": trace_path, "ok": ok}))
+    if not ok:
+        print("obs smoke FAILED: telemetry pipeline lost spans or "
+              "histograms (see checks above)")
+        return 1
+    print("obs smoke OK: recompose/decode-step/warm-compile spans traced "
+          "and every tenant class has decode-step latency histograms")
     return 0
 
 
@@ -470,10 +600,28 @@ def main(argv=None) -> int:
     ap.add_argument("--dp-bench", action="store_true",
                     help="measure Stage-1-chosen replica tiling (dp > 1) vs "
                          "the same grant forced to one engine (dp_cap=1)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the fabric's metrics registry and span "
+                         "tracer (token streams are identical either way)")
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="write the merged metrics-registry snapshot as "
+                         "JSON after the run")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write the span ring buffer as Chrome/Perfetto "
+                         "trace-event JSON after the run")
+    ap.add_argument("--log-every", type=int, default=200, metavar="N",
+                    help="print a one-line telemetry summary to stderr "
+                         "every N fabric steps (0 disables)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="assert the telemetry pipeline traces a mixed-"
+                         "fleet run end to end (spans + per-class "
+                         "decode-step histograms)")
     args = ap.parse_args(argv)
 
     if args.tp_smoke:
         return run_tp_smoke(args)
+    if args.obs_smoke:
+        return run_obs_smoke(args)
     if args.dse_smoke:
         return run_dse_smoke(args)
     if args.dp_bench:

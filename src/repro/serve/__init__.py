@@ -1,5 +1,7 @@
 from repro.core.dse import DesignPoint
-from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
+from repro.obs import (MetricsRegistry, PredictionLedger, SpanTracer,
+                       Telemetry)
+from repro.serve.dse import Stage1Optimizer, TenantDesignSpace, design_key
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
                                 RecompositionEvent, ReplicaGroup, TenantLoad,
                                 TenantObservation, TenantSpec,
@@ -24,9 +26,14 @@ __all__ = [
     "AnalyticalPolicy",
     "ComposedServer",
     "DesignPoint",
+    "MetricsRegistry",
+    "PredictionLedger",
     "RecompositionEvent",
     "ReplicaGroup",
+    "SpanTracer",
     "Stage1Optimizer",
+    "Telemetry",
+    "design_key",
     "TenantDesignSpace",
     "TenantLoad",
     "TenantObservation",

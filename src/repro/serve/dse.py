@@ -38,7 +38,27 @@ from repro.workloads.base import (DECODE, ENCDEC, ENCODER, SSM,
                                   length_buckets, pick_bucket)
 
 __all__ = ["DesignPoint", "Stage1Optimizer", "TenantDesignSpace",
-           "padded_factor"]
+           "design_key", "padded_factor"]
+
+
+def design_key(cus: int, design: Mapping[str, object]) -> str:
+    """Compact stable identity of an *applied* design point, e.g.
+    ``"c4-tp2-dp1-s8"`` (plus ``-b128.512`` when a bucket ladder is set).
+
+    Built from a group's grant width and ``Engine.design()`` output, so two
+    tenants (or the same tenant before/after a retune) land on the same key
+    iff they run the same configuration.  The fabric's
+    :class:`repro.obs.PredictionLedger` files predicted and measured step
+    costs under this key — the per-(class, design point) axis of the
+    ``predicted_vs_measured`` summary."""
+    tp = design.get("tp")
+    dp = design.get("dp") or 1
+    buckets = design.get("buckets")
+    key = (f"c{int(cus)}-tp{int(tp) if tp else 0}-dp{int(dp)}"
+           f"-s{int(design.get('slots') or 0)}")
+    if buckets:
+        key += "-b" + ".".join(str(int(b)) for b in buckets)
+    return key
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,6 +30,7 @@ background thread (``prewarm_async``) so compilation overlaps serving.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import dataclasses
 import itertools
@@ -39,7 +40,6 @@ import warnings
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 from repro.common.platform import TPU_V5E, PlatformProfile
 from repro.configs import get_config, get_reduced
@@ -51,7 +51,8 @@ from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models import build_model
 from repro.models.ssm import dims as ssm_dims
-from repro.serve.dse import Stage1Optimizer, TenantDesignSpace
+from repro.obs import MetricsRegistry, PredictionLedger, Telemetry
+from repro.serve.dse import Stage1Optimizer, TenantDesignSpace, design_key
 from repro.workloads import (DECODE, ENCDEC, ENCODER, SSM, DecodeEngine,
                              Engine, ExecutableCache, ServeConfig,
                              build_engine, workload_class_of)
@@ -571,12 +572,16 @@ class _Replica:
     the group owns the stable rid a caller sees (``to_group`` maps the
     engine's rid to it)."""
 
-    __slots__ = ("engine", "to_group", "index")
+    __slots__ = ("engine", "to_group", "index", "obs")
 
-    def __init__(self, engine: Engine, index: int = 0):
+    def __init__(self, engine: Engine, index: int = 0, obs=None):
         self.engine = engine
         self.to_group: Dict[int, int] = {}
         self.index = index
+        # the Telemetry handle the engine records into: one registry per
+        # replica (same labels), so the group can merge histograms across
+        # replicas and harvest a retiring replica's registry on a dp shrink
+        self.obs = obs
 
 
 class ReplicaGroup:
@@ -617,7 +622,7 @@ class ReplicaGroup:
     def __init__(self, wclass: str, model, params, serve_cfg: ServeConfig,
                  *, sub=None, rules: Optional[part.ShardingRules] = None,
                  exec_cache: Optional[ExecutableCache] = None,
-                 cu_axis: str = "model"):
+                 cu_axis: str = "model", obs: Optional[Telemetry] = None):
         self._wclass = wclass
         self.workload_class = wclass
         self._model = model
@@ -630,14 +635,20 @@ class ReplicaGroup:
         self._granted = _mesh_of(sub)    # the group's full grant (unsliced)
         self._dp = 1
         self._next_rid = 0
+        # group-level telemetry: spans go to the shared tracer; each
+        # replica's engine records into a *fresh* registry under the same
+        # labels, merged on demand by metrics()
+        self._obs = obs if obs is not None else Telemetry()
         # harvested from retired replicas so results()/telemetry survive a
         # dp shrink
         self._retired_results: Dict[int, Any] = {}
         self._retired_builds = 0
         self._retired_reshards = 0
+        self._retired_metrics = MetricsRegistry()
+        rep_obs = self._obs.fresh()
         self._replicas: List[_Replica] = [_Replica(build_engine(
             wclass, model, params, serve_cfg, mesh=self._granted,
-            rules=rules, exec_cache=self._exec))]
+            rules=rules, exec_cache=self._exec, obs=rep_obs), obs=rep_obs)]
 
     # -- grant geometry -------------------------------------------------
     def _grant_width(self, granted) -> Optional[int]:
@@ -756,6 +767,37 @@ class ReplicaGroup:
         return self._retired_builds + sum(r.engine.compile_builds
                                           for r in self._replicas)
 
+    def metrics(self) -> MetricsRegistry:
+        """Merged view of every replica's metrics registry plus the
+        registries harvested from replicas retired by dp shrinks.  All
+        replicas record under identical labels into a shared fixed bucket
+        layout, so the merge is element-wise and order-independent —
+        quantiles of the merged histograms describe the *tenant*, not one
+        replica."""
+        merged = MetricsRegistry()
+        merged.merge(self._retired_metrics)
+        for rep in self._replicas:
+            if rep.obs is not None:
+                merged.merge(rep.obs.registry)
+        return merged
+
+    def latency_ms(self) -> Dict[str, Dict[str, float]]:
+        """Merged-histogram latency summary (milliseconds) for the group's
+        key per-step distributions — the compact ``stats()`` view of the
+        full ``metrics()`` registry."""
+        out: Dict[str, Dict[str, float]] = {}
+        reg = self.metrics()
+        for name in ("decode_step_s", "ttft_s", "queue_wait_s",
+                     "prefill_s", "encode_s"):
+            h = reg.merged_histogram(name)
+            if h.count:
+                out[name[:-2]] = {
+                    "p50_ms": round(h.quantile(0.5) * 1e3, 4),
+                    "p99_ms": round(h.quantile(0.99) * 1e3, 4),
+                    "n": h.count,
+                }
+        return out
+
     def stats(self) -> Dict[str, Any]:
         """Group-merged snapshot (sums / averages across replicas), plus
         each replica's own ``stats()`` under ``per_replica``.
@@ -794,6 +836,7 @@ class ReplicaGroup:
             "reshard_count": self.reshard_count,
             "compile_builds": self.compile_builds,
             "design": self.design(),
+            "latency_ms": self.latency_ms(),
             "per_replica": per,
         })
         return merged
@@ -878,6 +921,7 @@ class ReplicaGroup:
         identical streams — never re-prefilled) and queues redistribute by
         the same order, every request keeping its stable group rid."""
         keep, retire = self._replicas[:dp], self._replicas[dp:]
+        span_t0, span_src = time.perf_counter(), self._dp
         live: List[Tuple[int, Any, Any]] = []
         queued: List[Tuple[int, Any]] = []
         for rep in retire:
@@ -889,6 +933,10 @@ class ReplicaGroup:
                     self._retired_results[rep.to_group[erid]] = v
             self._retired_builds += rep.engine.compile_builds
             self._retired_reshards += rep.engine.reshard_count
+            if rep.obs is not None:
+                # histograms observed by the retiring replica stay in the
+                # tenant's merged view (parallel to results/builds above)
+                self._retired_metrics.merge(rep.obs.registry)
         for rep in keep:
             queued.extend((rep.to_group[r.rid], r)
                           for r in rep.engine.export_queued())
@@ -915,8 +963,10 @@ class ReplicaGroup:
                 if i == 0:
                     applied = out
             else:
+                rep_obs = self._obs.fresh()
                 rep = _Replica(self._build_replica(
-                    tile, eng_point, min_slots=len(placed[i])))
+                    tile, eng_point, min_slots=len(placed[i]), obs=rep_obs),
+                    obs=rep_obs)
             rep.index = i
             reps.append(rep)
         self._replicas, self._dp = reps, dp
@@ -928,10 +978,16 @@ class ReplicaGroup:
             rep = min(reps, key=lambda r: (r.engine.pending_tokens(),
                                            r.engine.queue_depth, r.index))
             rep.to_group[rep.engine.adopt_queued(req)] = grid
+        if self._obs.enabled:
+            self._obs.tracer.record(
+                "dp_rebalance", span_t0, time.perf_counter(),
+                {"src": span_src, "dst": dp, "moved": len(live),
+                 "requeued": len(queued)})
         return applied
 
     def _build_replica(self, mesh, eng_point: DesignPoint,
-                       min_slots: int = 0) -> Engine:
+                       min_slots: int = 0, obs: Optional[Telemetry] = None
+                       ) -> Engine:
         """A fresh member engine on ``mesh`` at the group's design (dp
         grow) — sized to at least ``min_slots`` so planned adoptions fit."""
         d0 = self._replicas[0].engine.design()
@@ -945,7 +1001,7 @@ class ReplicaGroup:
             cfg = dataclasses.replace(cfg, len_buckets=tuple(ladder))
         eng = build_engine(self._wclass, self._model, self._params, cfg,
                            mesh=mesh, rules=self._rules,
-                           exec_cache=self._exec)
+                           exec_cache=self._exec, obs=obs)
         tp = eng_point.tp if eng_point.tp is not None else d0["tp"]
         if tp is not None:
             eng.apply(None, DesignPoint(cus=0, tp=tp))
@@ -1023,7 +1079,8 @@ class ComposedServer:
                  policy: Optional[AnalyticalPolicy] = None,
                  decide_every: int = 4, cu_axis: str = "model",
                  tp: bool = True, warm: bool = True,
-                 prewarm_async: bool = False):
+                 prewarm_async: bool = False, telemetry: bool = True,
+                 events_cap: int = 256):
         self.composer = MeshComposer(mesh, cu_axis=cu_axis)
         self.policy = policy
         self.decide_every = decide_every
@@ -1031,8 +1088,21 @@ class ComposedServer:
         self.warm = warm
         self.prewarm_async = prewarm_async
         self.specs = {t.name: t for t in tenants}
-        self.events: List[RecompositionEvent] = []
-        self.step_seconds: Dict[str, List[float]] = {t.name: [] for t in tenants}
+        # fabric-wide telemetry (repro.obs): one tracer for every span in
+        # the stack, a fabric-level registry for step/SLO histograms, and
+        # the predicted-vs-measured ledger.  telemetry=False swaps in a
+        # disabled handle — every record call becomes a no-op; token
+        # streams are bit-identical either way (pinned by tests/test_obs).
+        self.obs = Telemetry() if telemetry else Telemetry.off()
+        self.ledger = PredictionLedger()
+        # recomposition history: bounded (a long-running fabric must not
+        # grow per event) — stats() totals below survive eviction
+        self.events: "collections.deque[RecompositionEvent]" = \
+            collections.deque(maxlen=max(int(events_cap), 1))
+        self._recompositions = 0
+        self._retunes = 0
+        self._recompose_seconds_total = 0.0
+        self._warm_compile_seconds_total = 0.0
         self._stall_probe: Dict[str, RecompositionEvent] = {}
         self._step_no = 0
         self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
@@ -1078,7 +1148,12 @@ class ComposedServer:
             self.engines[spec.name] = ReplicaGroup(
                 wclass, model, params, spec.serve,
                 sub=self.subs[spec.name], rules=self.rules,
-                exec_cache=self.exec_cache, cu_axis=cu_axis)
+                exec_cache=self.exec_cache, cu_axis=cu_axis,
+                obs=self.obs.scoped(tenant=spec.name, wclass=wclass))
+        # design-key memo for the prediction ledger's measured side (the
+        # per-step path must not rebuild design dicts per tenant per step)
+        self._design_keys: Dict[str, str] = {}
+        self._refresh_design_keys()
 
     # ------------------------------------------------------------------
     def submit(self, tenant: str, tokens, max_new_tokens: int = 16,
@@ -1139,14 +1214,22 @@ class ComposedServer:
             dt = time.monotonic() - t0
             if probe is not None:
                 probe.post_step_seconds[t] = dt
-            elif busy and eng.queue_depth == q0:
+            elif busy and eng.queue_depth == q0 and self.obs.enabled:
                 # decode percentiles only: idle no-op steps would deflate
                 # them; admission steps (blocking prefill) and probed
-                # full-sync steps would inflate them
-                times = self.step_seconds[t]
-                times.append(dt)
-                if len(times) > 10_000:
-                    del times[:5_000]
+                # full-sync steps would inflate them.  The timing rides the
+                # engines' existing pipelined-dispatch sync point — the
+                # registry/ledger writes below are host-side only.
+                reg = self.obs.registry
+                reg.histogram("decode_step_s", tenant=t).observe(dt)
+                if out:
+                    unit = dt / len(out)
+                    reg.histogram("per_token_s", tenant=t).observe(unit)
+                    self.ledger.observe(t, self._design_keys[t], unit,
+                                        wclass=self.classes[t])
+            if self.obs.enabled:
+                self.obs.registry.gauge("queue_depth", tenant=t).value = \
+                    eng.queue_depth
             self._tokens_emitted[t] += len(out)
             if out:
                 emitted[t] = out
@@ -1202,6 +1285,15 @@ class ComposedServer:
                 buckets=tuple(d["buckets"]) if d["buckets"] else None,
                 dp=d.get("dp", 1))
         return out
+
+    def _refresh_design_keys(self) -> None:
+        """Re-memoize each tenant's compact design key (``serve.dse
+        .design_key``) for the prediction ledger's per-step measured side.
+        Called at construction and after every recomposition — the hot
+        step path must not rebuild design dicts per tenant per step."""
+        for t, eng in self.engines.items():
+            cus = len(self.subs[t].cu_ids) if t in self.subs else 0
+            self._design_keys[t] = design_key(cus, eng.design())
 
     def _knob_delta(self, t: str, p: DesignPoint) -> Dict[str, object]:
         """Engine-knob overrides that actually change tenant ``t``'s
@@ -1271,9 +1363,10 @@ class ComposedServer:
                 return None
             return self.recompose(target, reason=reason, overlapped=True)
 
-        target, reason = self.policy.decide(
-            self.observe(), self.cfgs, self._applied_points(),
-            self.composer.num_cus)
+        with self.obs.span("decide", step=self._step_no):
+            target, reason = self.policy.decide(
+                self.observe(), self.cfgs, self._applied_points(),
+                self.composer.num_cus)
         target = {t: p for t, p in target.items() if p.cus > 0}
         if self._no_change(target):
             # idle decide interval: nothing committed — speculatively warm
@@ -1364,6 +1457,7 @@ class ComposedServer:
         target composition's executables are compiled at the target design
         points before any state moves, so the post-move step is
         stall-free."""
+        rc_t0 = time.perf_counter()
         before = self.sizes()
         points = {t: (v if isinstance(v, DesignPoint)
                       else DesignPoint(cus=int(v)))
@@ -1388,11 +1482,13 @@ class ComposedServer:
         applied: Dict[str, Dict] = {}
         for t in touched:
             eng = self.engines[t]
-            out = eng.apply(new_subs[t] if t in moved else None,
-                            self._delta_point(points[t], knobs.get(t)))
-            if out:
-                applied[t] = out
-            eng.sync()
+            with self.obs.span("migrate", tenant=t,
+                               kind="move" if t in moved else "retune"):
+                out = eng.apply(new_subs[t] if t in moved else None,
+                                self._delta_point(points[t], knobs.get(t)))
+                if out:
+                    applied[t] = out
+                eng.sync()
         self.subs = new_subs
         # the committed move changes device assignments, so a previously
         # prewarmed runner-up design now maps to different sub-meshes
@@ -1409,6 +1505,30 @@ class ComposedServer:
         for t in touched:
             self._stall_probe[t] = event
         self.events.append(event)
+        # fold-before-evict totals: the deque above is bounded, so stats()
+        # aggregates accumulate here instead of re-scanning the history
+        self._recompositions += 1
+        self._retunes += len(retuned)
+        self._recompose_seconds_total += seconds
+        self._warm_compile_seconds_total += warm_s
+        # predicted-vs-measured accounting: refresh the per-tenant design
+        # keys for the committed composition, then record each touched
+        # tenant's Stage-1 predicted per-unit cost next to the measured
+        # per-step histogram that accumulates under the same key
+        self._refresh_design_keys()
+        for t in touched:
+            p = points.get(t)
+            if p is not None:
+                self.ledger.commit(t, self.classes[t],
+                                   self._design_keys[t], p.cost)
+        if self.obs.enabled:
+            self.obs.tracer.record(
+                "recompose", rc_t0, time.perf_counter(),
+                {"reason": reason, "moved": list(moved),
+                 "retuned": list(retuned), "parked": list(delta.evicted),
+                 "warm_builds": warm_builds},
+                cat="recompose")
+            self.obs.inc("recompositions")
         return event
 
     def unify(self, tenant: str, *, reason: str = "unify"
@@ -1443,22 +1563,88 @@ class ComposedServer:
         return {t: eng.snapshot() for t, eng in self.engines.items()}
 
     def decode_step_ms(self) -> Dict[str, Dict[str, float]]:
-        """Per-tenant decode step latency percentiles (milliseconds)."""
+        """Per-tenant decode step latency percentiles (milliseconds), read
+        from the fabric registry's ``decode_step_s{tenant}`` histograms
+        (empty with telemetry off — latency accounting is the registry's)."""
         out = {}
-        for t, times in self.step_seconds.items():
-            if not times:
+        for t in self.engines:
+            h = self.obs.registry.merged_histogram("decode_step_s", tenant=t)
+            if h.count == 0:
                 continue
-            arr = np.asarray(times) * 1e3
-            out[t] = {"p50": round(float(np.percentile(arr, 50)), 3),
-                      "p95": round(float(np.percentile(arr, 95)), 3),
-                      "n": len(times)}
+            out[t] = {"p50": round(h.quantile(0.5) * 1e3, 3),
+                      "p95": round(h.quantile(0.95) * 1e3, 3),
+                      "n": h.count}
         return out
+
+    # ------------------------------------------------------------------
+    # telemetry export surface (repro.obs)
+    # ------------------------------------------------------------------
+    def metrics(self) -> MetricsRegistry:
+        """One merged registry across the whole stack: the fabric's own
+        step/SLO histograms plus every tenant engine's per-replica
+        registries (retired dp replicas included), with the shared
+        executable cache folded in as gauges."""
+        merged = MetricsRegistry()
+        merged.merge(self.obs.registry)
+        for eng in self.engines.values():
+            merged.merge(eng.metrics())
+        snap = self.exec_cache.snapshot()
+        for k, v in snap.items():
+            merged.gauge(f"exec_cache_{k}").set(float(v))
+        merged.counter("recompositions_total").inc(self._recompositions)
+        merged.counter("retunes_total").inc(self._retunes)
+        return merged
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """JSON-friendly dump of :meth:`metrics` (the ``--metrics-json``
+        payload)."""
+        return self.metrics().snapshot()
+
+    def dump_trace(self, path: str) -> str:
+        """Write the span ring buffer as Chrome/Perfetto trace-event JSON
+        (load in ``chrome://tracing`` or https://ui.perfetto.dev); returns
+        the path written."""
+        return self.obs.tracer.dump(path)
+
+    def slo_summary(self) -> Dict[str, object]:
+        """Per-tenant serving SLO percentiles (milliseconds): TTFT,
+        per-token latency, decode-step latency and queue wait, plus the
+        predicted-vs-measured aggregate.  TTFT/queue-wait come from the
+        engines' merged registries; per-token and step latency from the
+        fabric-level filtered histograms."""
+        merged = self.metrics()
+        per_tenant: Dict[str, Dict[str, object]] = {}
+        for t in self.engines:
+            row: Dict[str, object] = {"class": self.classes[t]}
+            for name, label in (("ttft_s", "ttft_ms"),
+                                ("queue_wait_s", "queue_wait_ms"),
+                                ("per_token_s", "per_token_ms"),
+                                ("decode_step_s", "decode_step_ms")):
+                # step latency comes from the fabric-level filtered
+                # histogram (steady-state decode only); the merged view
+                # would fold in the engines' unfiltered step timer, which
+                # includes cold-compile and admission-adjacent steps
+                src = (self.obs.registry if name in
+                       ("decode_step_s", "per_token_s") else merged)
+                h = src.merged_histogram(name, tenant=t)
+                if h.count == 0:
+                    continue
+                row[label] = {"p50": round(h.quantile(0.5) * 1e3, 4),
+                              "p99": round(h.quantile(0.99) * 1e3, 4),
+                              "n": h.count}
+            per_tenant[t] = row
+        return {"tenants": per_tenant,
+                "predicted_vs_measured":
+                    self.ledger.summary()["aggregate"]}
 
     def stats(self) -> Dict[str, object]:
         """Fabric-wide telemetry: per-tenant emitted units and classes,
         recomposition timings (seconds), per-tenant migrations and cold
         builds, shared-cache hit counts, speculative prewarms, decode step
-        latency percentiles (ms) and the current device composition."""
+        latency percentiles (ms), predicted-vs-measured accounting and the
+        current device composition.  Counts and totals come from fold
+        counters, not the bounded ``events`` deque — they stay correct
+        after old events are evicted."""
         return {
             "steps": self._step_no,
             "workload_classes": dict(self.classes),
@@ -1473,11 +1659,13 @@ class ComposedServer:
                     "dp": d.get("dp", 1)}
                 for t, d in ((t, eng.design())
                              for t, eng in self.engines.items())},
-            "retunes": sum(len(e.retuned) for e in self.events),
-            "recompositions": len(self.events),
-            "recompose_seconds": [round(e.seconds, 4) for e in self.events],
-            "warm_compile_seconds": [round(e.warm_compile_seconds, 4)
-                                     for e in self.events],
+            "retunes": self._retunes,
+            "recompositions": self._recompositions,
+            "recompose_seconds": round(self._recompose_seconds_total, 4),
+            "warm_compile_seconds": round(self._warm_compile_seconds_total,
+                                          4),
+            "recompose_seconds_recent": [round(e.seconds, 4)
+                                         for e in self.events],
             "reshards_per_tenant": {t: eng.reshard_count
                                     for t, eng in self.engines.items()},
             "compile_builds": {t: eng.compile_builds
@@ -1486,6 +1674,7 @@ class ComposedServer:
                                   "hits": self.exec_cache.hits},
             "speculative_prewarms": self.speculative_prewarms,
             "decode_step_ms": self.decode_step_ms(),
+            "predicted_vs_measured": self.ledger.summary(),
             "composition": {t: list(self.subs[t].cu_ids)
                             for t in self.subs},
         }

@@ -237,10 +237,24 @@ class EngineTelemetry:
         return self._own_builds
 
     def _counted(self, builder):
-        """Wrap a cold-build closure so per-engine telemetry sees it."""
+        """Wrap a cold-build closure so per-engine telemetry sees it.
+
+        Besides the ``_own_builds`` count, the build is timed into the
+        engine's obs registry (``compile_build_s`` histogram +
+        ``compile_builds`` counter) and recorded as a ``compile_build``
+        span — builds running on the speculative-prewarm thread land on
+        their own trace row, which is what makes compile/dispatch overlap
+        visible in the exported trace."""
+        obs = getattr(self, "_obs", None)
+
         def run():
             self._own_builds += 1
-            return builder()
+            if obs is None or not obs.enabled:
+                return builder()
+            with obs.timed("compile_build", "compile_build_s"):
+                result = builder()
+            obs.inc("compile_builds")
+            return result
         return run
 
     def _evict_finished(self) -> None:
@@ -251,13 +265,18 @@ class EngineTelemetry:
 
 
 def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,
-                 rules=None, exec_cache=None):
+                 rules=None, exec_cache=None, obs=None):
     """Construct the engine serving ``wclass`` traffic for ``model``.
 
     ``exec_cache`` is the fabric-level shared AOT executable cache: engines
     key their programs by (config fingerprint, mesh fingerprint, shapes), so
     same-config tenants share warm executables instead of each compiling its
     own copy.
+
+    ``obs`` is a :class:`repro.obs.Telemetry` handle (labels typically
+    already scoped to the tenant + workload class; one *fresh* registry per
+    dp replica so the group can merge them).  ``None`` gives the engine a
+    private enabled handle, so standalone engines are observable too.
     """
     from repro.workloads.decode import DecodeEngine
     from repro.workloads.encdec import EncDecEngine
@@ -270,4 +289,4 @@ def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,
         raise KeyError(f"unknown workload class {wclass!r}; "
                        f"known: {WORKLOAD_CLASSES}")
     return classes[wclass](model, params, serve_cfg, mesh=mesh, rules=rules,
-                           exec_cache=exec_cache)
+                           exec_cache=exec_cache, obs=obs)

@@ -71,6 +71,15 @@ class ExecutableCache:
         self._insert(key, builder())
         return 1
 
+    def snapshot(self) -> dict:
+        """Telemetry view: cache-wide cold builds, warm hits, occupancy.
+        Consumed by the fabric's metrics snapshot (the registry's
+        ``exec_cache_*`` gauges) — per-engine build attribution stays with
+        :attr:`EngineTelemetry.compile_builds`."""
+        with self._lock:
+            return {"builds": self.builds, "hits": self.hits,
+                    "size": len(self._exe), "capacity": self.capacity}
+
     def _insert(self, key: Hashable, exe: Any) -> None:
         with self._lock:
             if key not in self._exe:

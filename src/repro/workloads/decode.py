@@ -40,6 +40,7 @@ import dataclasses
 import functools
 import itertools
 import os
+import time
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -53,6 +54,7 @@ from repro.core.composer import mesh_fingerprint
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.workloads.base import DecayedLengthEstimator, EngineTelemetry
 from repro.workloads.compile_cache import ExecutableCache
 
@@ -112,6 +114,10 @@ class Request:
     # enc-dec forced decoding: target-prefix token ids prepended (after BOS)
     # to the decoder prompt; None decodes from BOS alone
     prefix: Optional[np.ndarray] = None
+    # perf_counter() at submit — SLO telemetry (queue wait, TTFT).  Rides
+    # the request record so a dp rebalance that adopts a queued request
+    # keeps its original arrival time.  0.0 = unknown (synthetic request).
+    submitted_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,9 +177,15 @@ class DecodeEngine(EngineTelemetry):
 
     def __init__(self, model: Model, params: PyTree, cfg: ServeConfig,
                  mesh=None, rules: Optional[part.ShardingRules] = None,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 obs: Optional[Telemetry] = None):
         self.model = model
         self.cfg = cfg
+        # telemetry handle: histograms/spans for this engine's hot path.
+        # Always present (a private registry when the fabric didn't pass
+        # one) so instrumentation below never branches on None; recording
+        # is a no-op when the handle is disabled.
+        self._obs = obs if obs is not None else Telemetry()
         self.rules = rules
         self._rules_eff = rules or part.ShardingRules(rules={})
         self.reshard_count = 0
@@ -305,23 +317,25 @@ class DecodeEngine(EngineTelemetry):
         pins across 1/2/4-way TP).
         """
         self._harvest()                 # inflight tokens live on the old mesh
-        self._granted = _mesh_of(sub)
-        # the engine computes on the grant restricted to its TP degree (the
-        # serving DSE's per-tenant design knob); None = the whole grant
-        mesh = part.tp_submesh(self._granted, self._tp)
-        self.mesh = mesh
-        # hot-path executable-cache key: recomputing the device-id tuple per
-        # dispatch is a per-step O(devices) Python loop on a pod-scale mesh
-        self._mesh_fp = mesh_fingerprint(mesh)
-        if mesh is not None:
-            rules = self._rules_eff
-            self.params = jax.device_put(
-                self.params, self._param_plan.shardings(mesh, rules))
-            self.cache = jax.device_put(
-                self.cache, self._cache_plan.shardings(mesh, rules))
-            self._single = jax.device_put(
-                self._single, self._single_plan.shardings(mesh, rules))
+        with self._obs.span("reshard"):
+            self._granted = _mesh_of(sub)
+            # the engine computes on the grant restricted to its TP degree
+            # (the serving DSE's per-tenant design knob); None = whole grant
+            mesh = part.tp_submesh(self._granted, self._tp)
+            self.mesh = mesh
+            # hot-path executable-cache key: recomputing the device-id tuple
+            # per dispatch is a per-step O(devices) loop on a pod-scale mesh
+            self._mesh_fp = mesh_fingerprint(mesh)
+            if mesh is not None:
+                rules = self._rules_eff
+                self.params = jax.device_put(
+                    self.params, self._param_plan.shardings(mesh, rules))
+                self.cache = jax.device_put(
+                    self.cache, self._cache_plan.shardings(mesh, rules))
+                self._single = jax.device_put(
+                    self._single, self._single_plan.shardings(mesh, rules))
         self.reshard_count += 1
+        self._obs.inc("reshards")
 
     def sync(self) -> None:
         """Block until this engine's device state (params + pooled cache) is
@@ -409,6 +423,13 @@ class DecodeEngine(EngineTelemetry):
         slots = max(min(int(slots), cap), len(live), 1)
         if slots == self.cfg.max_slots:
             return slots
+        with self._obs.timed("slot_migration", "slot_migration_s",
+                             src=self.cfg.max_slots, dst=slots,
+                             live=len(live)):
+            self._do_resize_slots(slots, live)
+        return slots
+
+    def _do_resize_slots(self, slots: int, live: List[int]) -> None:
         mapping = {old: new for new, old in enumerate(live)}
         new_ann = self._init_cache_ann(slots)
         new_plan = part.ShardingPlan.of(new_ann)
@@ -444,7 +465,6 @@ class DecodeEngine(EngineTelemetry):
             req.view = arena.alloc(self._slot_rows(req),
                                    self._per_token_elems, ROLE_ACT)
         self.arena = arena
-        return slots
 
     # ------------------------------------------------------------------
     # cross-replica live migration (ReplicaGroup dp retune): a retiring
@@ -719,28 +739,33 @@ class DecodeEngine(EngineTelemetry):
         configuration.  Returns the number of cold builds performed.  The
         PR-5 keyword form is deprecated (kept one release)."""
         point = self._warm_point(point, slots, tp, buckets)
-        mesh = part.tp_submesh(
-            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
-        B = point.slots or self.cfg.max_slots
-        key = self._config_key(B)
-        fp = mesh_fingerprint(mesh)
-        # warm the decode program at the bounds about to dispatch, one
-        # block above them (live lengths grow between warm_compile calls)
-        # AND at full cache capacity, so neither the first post-switch step
-        # nor a later long slot hits a cold build on the new composition
-        built = 0
-        for bounds in sorted({self._decode_bounds(), self._next_bounds(),
-                              self._full_bounds()}):
-            built += self._exec.ensure(
-                ("decode", key, fp, bounds),
-                self._counted(
-                    lambda bounds=bounds: self._build_decode(mesh, B, bounds)))
-        # snapshot: the serving thread appends new prefill lengths while a
-        # background prewarm iterates
-        for nb in sorted(tuple(self._prefill_lens)):
-            built += self._exec.ensure(
-                ("prefill", key, fp, nb),
-                self._counted(lambda nb=nb: self._build_prefill(mesh, nb, B)))
+        with self._obs.timed("warm_compile", "warm_compile_s") as sp:
+            mesh = part.tp_submesh(
+                _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+            B = point.slots or self.cfg.max_slots
+            key = self._config_key(B)
+            fp = mesh_fingerprint(mesh)
+            # warm the decode program at the bounds about to dispatch, one
+            # block above them (live lengths grow between warm_compile
+            # calls) AND at full cache capacity, so neither the first
+            # post-switch step nor a later long slot hits a cold build on
+            # the new composition
+            built = 0
+            for bounds in sorted({self._decode_bounds(), self._next_bounds(),
+                                  self._full_bounds()}):
+                built += self._exec.ensure(
+                    ("decode", key, fp, bounds),
+                    self._counted(lambda bounds=bounds:
+                                  self._build_decode(mesh, B, bounds)))
+            # snapshot: the serving thread appends new prefill lengths while
+            # a background prewarm iterates
+            for nb in sorted(tuple(self._prefill_lens)):
+                built += self._exec.ensure(
+                    ("prefill", key, fp, nb),
+                    self._counted(
+                        lambda nb=nb: self._build_prefill(mesh, nb, B)))
+            if sp is not None:
+                sp["builds"] = built
         return built
 
     # ------------------------------------------------------------------
@@ -803,7 +828,9 @@ class DecodeEngine(EngineTelemetry):
         self._next_rid += 1
         toks = np.asarray(tokens, np.int32)
         self._recent_lens.append(len(toks))
-        self._queue.append(Request(rid, toks, max_new_tokens))
+        self._queue.append(Request(rid, toks, max_new_tokens,
+                                   submitted_s=time.perf_counter()))
+        self._obs.inc("requests_submitted")
         return rid
 
     # ------------------------------------------------------------------
@@ -832,7 +859,14 @@ class DecodeEngine(EngineTelemetry):
             self._active[req.slot] = req
             admitted.append(req)
         if admitted:
-            self._prefill_admitted(admitted)
+            obs = self._obs
+            if obs.enabled:
+                now = time.perf_counter()
+                for req in admitted:
+                    if req.submitted_s > 0.0:
+                        obs.observe("queue_wait_s", now - req.submitted_s)
+            with obs.span("admit", n=len(admitted)):
+                self._prefill_admitted(admitted)
 
     def _prefill_admitted(self, reqs: List[Request]) -> None:
         """Prefill the requests just admitted (hook: the enc-dec engine
@@ -856,13 +890,23 @@ class DecodeEngine(EngineTelemetry):
         nb = self._bucketed(L) if self.model.cfg.ssm is None else L
         toks = np.zeros((1, nb), np.int32)
         toks[0, :L] = req.tokens
-        exe = self._prefill_exec(self.mesh, nb)
-        first_dev, self.cache = exe(self.params, self.cache, self._single,
-                                    toks, np.int32(L), np.int32(req.slot))
-        first = int(jax.device_get(first_dev))
+        # the device_get of the first token is an existing sync point, so
+        # the prefill span/histogram and TTFT cost no extra synchronization
+        with self._obs.timed("prefill", "prefill_s", len=L):
+            exe = self._prefill_exec(self.mesh, nb)
+            first_dev, self.cache = exe(self.params, self.cache, self._single,
+                                        toks, np.int32(L), np.int32(req.slot))
+            first = int(jax.device_get(first_dev))
         req.out_tokens.append(first)
         req.scheduled = 1
         self._inject[req.slot] = first
+        self._record_ttft(req)
+
+    def _record_ttft(self, req: Request) -> None:
+        """First token just landed on the host: record time-to-first-token
+        against the request's original submit stamp."""
+        if req.submitted_s > 0.0 and self._obs.enabled:
+            self._obs.observe("ttft_s", time.perf_counter() - req.submitted_s)
 
     # ------------------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
@@ -875,6 +919,20 @@ class DecodeEngine(EngineTelemetry):
         if not self._active:
             self._harvest()
             return self._drain_emitted()
+        # span + histogram around the dispatch/harvest pair: the harvest's
+        # device_get of the PREVIOUS dispatch is the existing sync point the
+        # host-side timing rides on — no extra syncs, pipelining preserved
+        with self._obs.timed("decode_step", "decode_step_s"):
+            self._step_dispatch()
+        out = self._drain_emitted()
+        obs = self._obs
+        if obs.enabled:
+            obs.set_gauge("slot_utilization",
+                          len(self._active) / max(self.cfg.max_slots, 1))
+            obs.set_gauge("arena_utilization", self.arena.utilization())
+        return out
+
+    def _step_dispatch(self) -> None:
         B = self.cfg.max_slots
         pipelined = self.cfg.pipeline_decode and self.cfg.eos_id < 0
         inject_vals = np.zeros((B,), np.int32)
@@ -921,7 +979,6 @@ class DecodeEngine(EngineTelemetry):
             # a draining engine flushes so callers see complete streams as
             # soon as queue+active are empty
             self._harvest()
-        return self._drain_emitted()
 
     def _harvest(self, register_inject: bool = True) -> None:
         """Read one in-flight dispatch's tokens back to the host.
@@ -953,6 +1010,8 @@ class DecodeEngine(EngineTelemetry):
 
     def _drain_emitted(self) -> List[Tuple[int, int]]:
         out, self._emit_buf = self._emit_buf, []
+        if out:
+            self._obs.inc("tokens_emitted", len(out))
         return out
 
     def _record_finished(self, req: Request) -> None:

@@ -46,6 +46,7 @@ does on KV pressure.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -78,7 +79,8 @@ class EncDecEngine(DecodeEngine):
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  mesh=None, rules: Optional[part.ShardingRules] = None,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 obs=None):
         mc = model.cfg
         if not (mc.is_encdec and mc.cross_attention):
             raise ValueError(
@@ -98,7 +100,7 @@ class EncDecEngine(DecodeEngine):
         self._dec_lens = {1}
         self._src_kinds = {TOKENS}
         super().__init__(model, params, cfg, mesh=mesh, rules=rules,
-                         exec_cache=exec_cache)
+                         exec_cache=exec_cache, obs=obs)
         # the token-bucketed prefill programs of the base engine never
         # dispatch (enc-dec prefills through the fused slot-prefill
         # program), so warm_compile must not burn time building them
@@ -286,38 +288,41 @@ class EncDecEngine(DecodeEngine):
         the number of cold builds performed.  The PR-5 keyword form is
         deprecated (kept one release)."""
         point = self._warm_point(point, slots, tp, buckets)
-        mesh = part.tp_submesh(
-            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
-        E = point.slots or self.cfg.max_slots
-        key = self._config_key(E, point.buckets)
-        ladder = (length_buckets(point.buckets, self._max_src)
-                  if point.buckets is not None else self._src_buckets)
-        fp = mesh_fingerprint(mesh)
-        built = 0
-        for bounds in sorted({self._decode_bounds(), self._next_bounds(),
-                              self._full_bounds()}):
-            built += self._exec.ensure(
-                ("decode", key, fp, bounds),
-                self._counted(
-                    lambda bounds=bounds:
-                    self._build_decode(mesh, E, bounds)))
-        # snapshots: the serving thread may add kinds/lengths while a
-        # background prewarm iterates
-        kinds = sorted(self._src_kinds)
-        dec_lens = sorted(self._dec_lens)
-        for sb in ladder:
-            for kind in kinds:
+        with self._obs.timed("warm_compile", "warm_compile_s") as sp:
+            mesh = part.tp_submesh(
+                _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+            E = point.slots or self.cfg.max_slots
+            key = self._config_key(E, point.buckets)
+            ladder = (length_buckets(point.buckets, self._max_src)
+                      if point.buckets is not None else self._src_buckets)
+            fp = mesh_fingerprint(mesh)
+            built = 0
+            for bounds in sorted({self._decode_bounds(), self._next_bounds(),
+                                  self._full_bounds()}):
                 built += self._exec.ensure(
-                    ("encdec_encode", key, fp, sb, kind),
+                    ("decode", key, fp, bounds),
                     self._counted(
-                        lambda sb=sb, kind=kind:
-                        self._build_encode(mesh, sb, kind, E)))
-            for nb in dec_lens:
-                built += self._exec.ensure(
-                    ("encdec_prefill", key, fp, sb, nb),
-                    self._counted(
-                        lambda sb=sb, nb=nb:
-                        self._build_prefill_encdec(mesh, sb, nb, E)))
+                        lambda bounds=bounds:
+                        self._build_decode(mesh, E, bounds)))
+            # snapshots: the serving thread may add kinds/lengths while a
+            # background prewarm iterates
+            kinds = sorted(self._src_kinds)
+            dec_lens = sorted(self._dec_lens)
+            for sb in ladder:
+                for kind in kinds:
+                    built += self._exec.ensure(
+                        ("encdec_encode", key, fp, sb, kind),
+                        self._counted(
+                            lambda sb=sb, kind=kind:
+                            self._build_encode(mesh, sb, kind, E)))
+                for nb in dec_lens:
+                    built += self._exec.ensure(
+                        ("encdec_prefill", key, fp, sb, nb),
+                        self._counted(
+                            lambda sb=sb, nb=nb:
+                            self._build_prefill_encdec(mesh, sb, nb, E)))
+            if sp is not None:
+                sp["builds"] = built
         return built
 
     # ------------------------------------------------------------------
@@ -365,7 +370,9 @@ class EncDecEngine(DecodeEngine):
         if prefix is not None and len(prefix) > 0:
             pre = np.asarray(prefix, np.int32)
         self._recent_lens.append(len(src))
-        self._queue.append(Request(rid, src, max_new_tokens, prefix=pre))
+        self._queue.append(Request(rid, src, max_new_tokens, prefix=pre,
+                                   submitted_s=time.perf_counter()))
+        self._obs.inc("requests_submitted")
         return rid
 
     # ------------------------------------------------------------------
@@ -393,23 +400,32 @@ class EncDecEngine(DecodeEngine):
                 for i, req in enumerate(chunk):
                     src[i, :len(req.tokens)] = req.tokens
                     lens[i] = len(req.tokens)
-                enc = self._encode_exec(self.mesh, sb, kind)(
-                    self.params, src, lens)
+                # dispatch-only span: the batched encode syncs later, at
+                # each request's fused-prefill device_get (existing sync
+                # point), so the encode_s histogram lives on the prefill
+                # side and this span only attributes the dispatch
+                with self._obs.span("encode", bucket=sb, kind=kind,
+                                    n=len(chunk)):
+                    enc = self._encode_exec(self.mesh, sb, kind)(
+                        self.params, src, lens)
                 for i, req in enumerate(chunk):
                     self._bucket_hits[sb] += 1
                     dec = self._dec_prompt(req)
                     nb = self._dec_bucket(len(dec))
                     toks = np.zeros((1, nb), np.int32)
                     toks[0, :len(dec)] = dec
-                    exe = self._prefill_exec_encdec(self.mesh, sb, nb)
-                    first_dev, self.cache = exe(
-                        self.params, self.cache, self._single, enc,
-                        np.int32(i), np.int32(len(req.tokens)),
-                        np.int32(req.slot), toks, np.int32(len(dec)))
-                    first = int(jax.device_get(first_dev))
+                    with self._obs.timed("prefill", "prefill_s",
+                                         src=len(req.tokens)):
+                        exe = self._prefill_exec_encdec(self.mesh, sb, nb)
+                        first_dev, self.cache = exe(
+                            self.params, self.cache, self._single, enc,
+                            np.int32(i), np.int32(len(req.tokens)),
+                            np.int32(req.slot), toks, np.int32(len(dec)))
+                        first = int(jax.device_get(first_dev))
                     req.out_tokens.append(first)
                     req.scheduled = 1
                     self._inject[req.slot] = first
+                    self._record_ttft(req)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:

@@ -35,6 +35,7 @@ mirroring the decode engine's contract that requests never vanish.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -47,6 +48,7 @@ from repro.core.composer import mesh_fingerprint
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.workloads.base import (DecayedLengthEstimator, EngineTelemetry,
                                   length_buckets, pick_bucket)
 from repro.workloads.compile_cache import ExecutableCache
@@ -63,6 +65,9 @@ class EncodeJob:
     tokens: np.ndarray
     embedding: Optional[List[float]] = None
     done: bool = False
+    # perf_counter() at submit — SLO telemetry (queue wait / time-to-result);
+    # survives adoption by a sibling replica.  0.0 = unknown.
+    submitted_s: float = 0.0
 
 
 class EncoderEngine(EngineTelemetry):
@@ -76,10 +81,12 @@ class EncoderEngine(EngineTelemetry):
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  mesh=None, rules: Optional[part.ShardingRules] = None,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 obs: Optional[Telemetry] = None):
         self.model = model
         self.cfg = cfg
         self.rules = rules
+        self._obs = obs if obs is not None else Telemetry()
         self._rules_eff = rules or part.ShardingRules(rules={})
         self.reshard_count = 0
         self._param_plan = part.ShardingPlan.of(params)
@@ -120,14 +127,17 @@ class EncoderEngine(EngineTelemetry):
         jobs complete within the step that runs them, so the only device
         state is the params pytree — one sharded→sharded device_put (onto
         the grant restricted to the engine's TP degree)."""
-        self._granted = _mesh_of(sub)
-        mesh = part.tp_submesh(self._granted, self._tp)
-        self.mesh = mesh
-        self._mesh_fp = mesh_fingerprint(mesh)
-        if mesh is not None:
-            self.params = jax.device_put(
-                self.params, self._param_plan.shardings(mesh, self._rules_eff))
+        with self._obs.span("reshard"):
+            self._granted = _mesh_of(sub)
+            mesh = part.tp_submesh(self._granted, self._tp)
+            self.mesh = mesh
+            self._mesh_fp = mesh_fingerprint(mesh)
+            if mesh is not None:
+                self.params = jax.device_put(
+                    self.params,
+                    self._param_plan.shardings(mesh, self._rules_eff))
         self.reshard_count += 1
+        self._obs.inc("reshards")
 
     def sync(self) -> None:
         """No in-flight device state: step() already syncs on device_get."""
@@ -265,17 +275,21 @@ class EncoderEngine(EngineTelemetry):
         covers the composition.  Returns cold builds performed.  The PR-5
         keyword form is deprecated (kept one release)."""
         point = DecodeEngine._warm_point(point, slots, tp, buckets)
-        mesh = part.tp_submesh(
-            _mesh_of(sub), point.tp if point.tp is not None else self._tp)
-        B = point.slots or self.cfg.max_slots
-        key = self._config_key(B, point.buckets)
-        ladder = (length_buckets(point.buckets, self.cfg.max_len)
-                  if point.buckets is not None else self._buckets)
-        fp = mesh_fingerprint(mesh)
-        return sum(self._exec.ensure(
-            ("encode", key, fp, sb),
-            self._counted(lambda sb=sb: self._build_encode(mesh, sb, B)))
-            for sb in ladder)
+        with self._obs.timed("warm_compile", "warm_compile_s") as sp:
+            mesh = part.tp_submesh(
+                _mesh_of(sub), point.tp if point.tp is not None else self._tp)
+            B = point.slots or self.cfg.max_slots
+            key = self._config_key(B, point.buckets)
+            ladder = (length_buckets(point.buckets, self.cfg.max_len)
+                      if point.buckets is not None else self._buckets)
+            fp = mesh_fingerprint(mesh)
+            built = sum(self._exec.ensure(
+                ("encode", key, fp, sb),
+                self._counted(lambda sb=sb: self._build_encode(mesh, sb, B)))
+                for sb in ladder)
+            if sp is not None:
+                sp["builds"] = built
+        return built
 
     # ------------------------------------------------------------------
     # load signals
@@ -328,7 +342,9 @@ class EncoderEngine(EngineTelemetry):
         self._next_rid += 1
         toks = np.asarray(tokens, np.int32)
         self._recent_lens.append(len(toks))
-        self._queue.append(EncodeJob(rid, toks))
+        self._queue.append(EncodeJob(rid, toks,
+                                     submitted_s=time.perf_counter()))
+        self._obs.inc("requests_submitted")
         return rid
 
     def step(self) -> List[Tuple[int, List[float]]]:
@@ -350,6 +366,12 @@ class EncoderEngine(EngineTelemetry):
             batch.append(job)
         if not batch:
             return emitted
+        obs = self._obs
+        if obs.enabled:
+            now = time.perf_counter()
+            for job in batch:
+                if job.submitted_s > 0.0:
+                    obs.observe("queue_wait_s", now - job.submitted_s)
         # group by each job's OWN smallest fitting bucket (NOT the batch
         # max) so a short job never pays a co-batched long job's padded
         # FLOPs; numerically the bucket doesn't matter — encode masks each
@@ -359,21 +381,35 @@ class EncoderEngine(EngineTelemetry):
             groups.setdefault(pick_bucket(self._buckets, len(job.tokens)),
                               []).append(job)
         B = self.cfg.max_slots
-        for sb in sorted(groups):
-            jobs = groups[sb]
-            self._bucket_hits[sb] += len(jobs)
-            toks = np.zeros((B, sb), np.int32)
-            lens = np.zeros((B,), np.int32)
-            for i, job in enumerate(jobs):
-                toks[i, :len(job.tokens)] = job.tokens
-                lens[i] = len(job.tokens)
-            exe = self._encode_exec(self.mesh, sb)
-            emb = np.asarray(jax.device_get(exe(self.params, toks, lens)))
-            for i, job in enumerate(jobs):
-                job.embedding = [float(v) for v in emb[i]]
-                job.done = True
-                self._record_finished(job)
-                emitted.append((job.rid, job.embedding))
+        # the encoder's "decode step" is its batched encode iteration — the
+        # uniform decode_step_s metric keeps per-class step latency
+        # comparable across the fleet; each group's device_get is an
+        # existing sync point, so the timings add no synchronization
+        with obs.timed("encode_step", "decode_step_s", jobs=len(batch)):
+            for sb in sorted(groups):
+                jobs = groups[sb]
+                self._bucket_hits[sb] += len(jobs)
+                toks = np.zeros((B, sb), np.int32)
+                lens = np.zeros((B,), np.int32)
+                for i, job in enumerate(jobs):
+                    toks[i, :len(job.tokens)] = job.tokens
+                    lens[i] = len(job.tokens)
+                with obs.timed("encode", "encode_s", bucket=sb, n=len(jobs)):
+                    exe = self._encode_exec(self.mesh, sb)
+                    emb = np.asarray(
+                        jax.device_get(exe(self.params, toks, lens)))
+                for i, job in enumerate(jobs):
+                    job.embedding = [float(v) for v in emb[i]]
+                    job.done = True
+                    self._record_finished(job)
+                    emitted.append((job.rid, job.embedding))
+        if obs.enabled:
+            done = time.perf_counter()
+            for job in batch:
+                if job.submitted_s > 0.0:
+                    obs.observe("ttft_s", done - job.submitted_s)
+            obs.set_gauge("slot_utilization", len(batch) / max(B, 1))
+            obs.inc("tokens_emitted", len(batch))
         self._seqs_done += len(batch)
         return emitted
 

@@ -42,6 +42,7 @@ from typing import Optional
 from repro.distribution import partitioning as part
 from repro.models import ssm as S
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.workloads.compile_cache import ExecutableCache
 from repro.workloads.decode import DecodeEngine, Request, ServeConfig
 
@@ -51,7 +52,8 @@ class SSMEngine(DecodeEngine):
 
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  mesh=None, rules: Optional[part.ShardingRules] = None,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 obs: Optional[Telemetry] = None):
         mc = model.cfg
         if mc.ssm is None or not mc.attention_free:
             raise ValueError(
@@ -59,7 +61,7 @@ class SSMEngine(DecodeEngine):
                 f"family={mc.family!r} (use DecodeEngine for archs with a "
                 "KV cache, including hybrids)")
         super().__init__(model, params, cfg, mesh=mesh, rules=rules,
-                         exec_cache=exec_cache)
+                         exec_cache=exec_cache, obs=obs)
 
     # ------------------------------------------------------------------
     # constant-size state pool: admission accounting hooks

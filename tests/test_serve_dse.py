@@ -277,3 +277,75 @@ def test_warm_compile_covers_candidate_design_point():
     eng.run_to_completion(50)
     assert eng.compile_builds == before, \
         "reconfigured engine re-compiled a program warm_compile had built"
+
+
+# ---------------------------------------------------------------------------
+# predicted-vs-measured accounting: a dse-driven retune must leave a ledger
+# entry pairing Stage 1's predicted unit cost with the measured step p50
+# (8 fake host devices, subprocess — device count is fixed at first init)
+# ---------------------------------------------------------------------------
+
+def test_design_key_is_compact_and_total():
+    from repro.serve.dse import design_key
+    assert design_key(4, {"tp": 2, "dp": 1, "slots": 8,
+                          "buckets": None}) == "c4-tp2-dp1-s8"
+    assert design_key(2, {"tp": None, "dp": None, "slots": 4,
+                          "buckets": (128, 512)}) == "c2-tp0-dp1-s4-b128.512"
+
+
+def test_predicted_vs_measured_after_dse_retune():
+    import json
+    import subprocess
+    import sys
+    import textwrap
+    prelude = (
+        "import os\n"
+        'os.environ["XLA_FLAGS"] = '
+        '"--xla_force_host_platform_device_count=8"\n'
+        "import sys\n"
+        'sys.path.insert(0, "src")\n'
+        "import json\n"
+        "import jax\n"
+        "import numpy as np\n")
+    body = textwrap.dedent("""
+    import dataclasses
+    from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
+                                    TenantSpec)
+    from repro.serve import ServeConfig
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    sc = ServeConfig(max_slots=2, max_len=48, eos_id=-1)
+    tenants = [TenantSpec("a", "minitron-4b",
+                          serve=dataclasses.replace(sc, slot_cap=4)),
+               TenantSpec("b", "qwen2.5-32b", seed=1, serve=sc)]
+    srv = ComposedServer(mesh, tenants, policy=AnalyticalPolicy(),
+                         decide_every=3)
+    rng = np.random.default_rng(0)
+    for t, n in (("a", 16), ("b", 6)):      # queue depth >> default slots
+        vocab = srv.cfgs[t].vocab_size
+        for _ in range(n):
+            srv.submit(t, rng.integers(1, vocab, size=8), max_new_tokens=10)
+    srv.drain(max_steps=500)
+    pvm = srv.stats()["predicted_vs_measured"]
+    committed = {k: e for k, e in pvm["entries"].items()
+                 if e["commits"] > 0 and e["ratio"] is not None}
+    print(json.dumps({
+        "recompositions": srv.stats()["recompositions"],
+        "n_entries": len(pvm["entries"]),
+        "n_committed_with_ratio": len(committed),
+        "classes": sorted({e["class"] for e in committed.values()}),
+        "ratios_finite": all(e["ratio"] > 0 for e in committed.values()),
+        "agg": pvm["aggregate"],
+    }))
+    """)
+    out = subprocess.run([sys.executable, "-c", prelude + body],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["recompositions"] >= 1
+    # at least one policy-committed design point accumulated measured
+    # steps under the same key -> a predicted/measured ratio exists
+    assert res["n_committed_with_ratio"] >= 1
+    assert res["ratios_finite"]
+    assert res["agg"]["entries_with_both"] >= 1
+    assert res["agg"]["mean_abs_log2_error"] >= 0

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Validate and summarize a serving-fabric Perfetto trace.
+
+The fabric's span tracer (``repro.obs.SpanTracer``) exports Chrome
+trace-event JSON — ``ComposedServer.dump_trace(path)`` or the launcher's
+``--trace-out``.  This tool checks the file actually loads in a trace
+viewer (schema validation) and prints a per-span-name summary, so CI can
+gate on "the run produced recompose spans" without opening a UI:
+
+  python tools/export_trace.py trace.json
+  python tools/export_trace.py trace.json --require-span recompose \
+      --require-span decode_step
+
+Exit codes: 0 valid (and all required spans present), 1 schema violation
+or a required span missing, 2 unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def validate(trace: dict) -> list:
+    """Schema check: the subset of the Chrome trace-event format the
+    tracer emits (complete events, microsecond timestamps).  Returns a
+    list of violations (empty = loadable in chrome://tracing/Perfetto)."""
+    errors = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        if e.get("ph") != "X":
+            errors.append(f"event {i}: ph={e.get('ph')!r} (expected 'X')")
+        if not e.get("name"):
+            errors.append(f"event {i}: missing name")
+        for k in ("ts", "dur"):
+            if not isinstance(e.get(k), (int, float)):
+                errors.append(f"event {i}: {k} not numeric")
+        for k in ("pid", "tid"):
+            if not isinstance(e.get(k), int):
+                errors.append(f"event {i}: {k} not an int")
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+    return errors
+
+
+def summarize(events: list) -> dict:
+    """Per-span-name counts and total/max duration (milliseconds)."""
+    out: dict = defaultdict(lambda: {"count": 0, "total_ms": 0.0,
+                                     "max_ms": 0.0})
+    for e in events:
+        row = out[e["name"]]
+        dur_ms = e["dur"] / 1e3
+        row["count"] += 1
+        row["total_ms"] = round(row["total_ms"] + dur_ms, 3)
+        row["max_ms"] = round(max(row["max_ms"], dur_ms), 3)
+    return dict(sorted(out.items()))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace-event JSON file "
+                                  "(ComposedServer.dump_trace output)")
+    ap.add_argument("--require-span", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless at least one span with this name is "
+                         "present (repeatable)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable trace {args.trace}: {e}", file=sys.stderr)
+        return 2
+
+    errors = validate(trace)
+    if errors:
+        for e in errors:
+            print(f"schema: {e}", file=sys.stderr)
+        return 1
+    events = trace["traceEvents"]
+    summary = summarize(events)
+    missing = [n for n in args.require_span if n not in summary]
+    print(json.dumps({"trace": args.trace, "events": len(events),
+                      "spans": summary,
+                      "required_missing": missing}, indent=1))
+    if missing:
+        print(f"missing required spans: {', '.join(missing)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
