@@ -147,6 +147,165 @@ class FlexArena:
 
 
 # ---------------------------------------------------------------------------
+# paged arena: fixed-size pages over the FlexArena substrate
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-owner page table: the ordered fixed-size pages backing one slot's
+    cache.  ``rows`` is the logical row count the owner has asked for so far;
+    the reserved storage is ``len(pages) * page_rows`` rows — caches grow
+    page-at-a-time instead of reserving their worst case up front."""
+
+    table_id: int
+    rows: int
+    cols: int
+    role: str
+    pages: List[View]
+
+    @property
+    def size(self) -> int:
+        """Reserved elements (whole pages, not the logical ``rows``)."""
+        return sum(p.size for p in self.pages)
+
+
+class PagedArena:
+    """Fixed-size-page allocator over a :class:`FlexArena` substrate.
+
+    The FMU's shape-agnostic 1-D storage makes equal-size pages the natural
+    admission currency: every page is a ``(page_rows, cols)`` view carved
+    from the substrate, so allocation can never fragment (all holes are a
+    whole number of pages) and a drained arena always re-packs to full
+    capacity.  Owners hold :class:`PageTable`\\ s and ``grow`` them one page
+    at a time; ``free_view`` returns every page to the substrate.
+
+    The interface mirrors ``FlexArena`` (``alloc`` / ``free_view`` /
+    ``used`` / ``free`` / ``utilization`` / ``fits``) so serving engines can
+    swap it in as their admission arena without touching call sites.
+    """
+
+    def __init__(self, num_pages: int, page_rows: int, cols: int, *,
+                 align: int = 1):
+        if num_pages < 1 or page_rows < 1 or cols < 1:
+            raise ValueError(
+                f"PagedArena needs positive geometry, got "
+                f"num_pages={num_pages} page_rows={page_rows} cols={cols}")
+        self.num_pages = int(num_pages)
+        self.page_rows = int(page_rows)
+        self.cols = int(cols)
+        self.page_elems = self.page_rows * self.cols
+        self._substrate = FlexArena(self.num_pages * self.page_elems,
+                                    align=align)
+        self._tables: Dict[int, PageTable] = {}
+        self._next_id = 0
+
+    # -- accounting ------------------------------------------------------
+    def pages_for(self, rows: int) -> int:
+        """Pages needed to cover ``rows`` logical rows."""
+        return -(-max(int(rows), 0) // self.page_rows)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(t.pages) for t in self._tables.values())
+
+    @property
+    def free_pages(self) -> int:
+        return self.num_pages - self.used_pages
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages * self.page_elems
+
+    @property
+    def used(self) -> int:
+        return self.used_pages * self.page_elems
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.used
+
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages if self.num_pages else 0.0
+
+    def tables(self) -> List[PageTable]:
+        return sorted(self._tables.values(), key=lambda t: t.table_id)
+
+    def fits(self, shapes: List[Tuple[int, int]]) -> bool:
+        return sum(self.pages_for(r) for r, _ in shapes) <= self.free_pages
+
+    # -- allocation ------------------------------------------------------
+    def _carve(self, n: int, role: str) -> List[View]:
+        if n > self.free_pages:
+            raise AllocationError(
+                f"paged arena full: need {n} pages, free {self.free_pages} "
+                f"of {self.num_pages}")
+        return [self._substrate.alloc(self.page_rows, self.cols, role)
+                for _ in range(n)]
+
+    def alloc(self, rows: int, cols: int, role: str = ROLE_ACT) -> PageTable:
+        """Open a page table covering ``rows`` rows.  ``cols`` must match the
+        arena's column width (pages are homogeneous)."""
+        assert role in ROLES, role
+        if cols != self.cols:
+            raise AllocationError(
+                f"paged arena is {self.cols} cols wide, got {cols}")
+        if rows < 1:
+            raise AllocationError(f"page table needs rows >= 1, got {rows}")
+        pages = self._carve(self.pages_for(rows), role)
+        t = PageTable(self._next_id, int(rows), self.cols, role, pages)
+        self._tables[self._next_id] = t
+        self._next_id += 1
+        return t
+
+    def grow(self, table: PageTable, rows: int) -> PageTable:
+        """Extend ``table`` to cover ``rows`` rows, allocating pages only
+        when the request crosses a page boundary.  Raises
+        :class:`AllocationError` (table unchanged) when no page is free —
+        the preemption trigger."""
+        if table.table_id not in self._tables:
+            raise AllocationError(f"grow on a freed table {table.table_id}")
+        need = self.pages_for(rows) - len(table.pages)
+        if need > 0:
+            table.pages.extend(self._carve(need, table.role))
+        if rows > table.rows:
+            table.rows = int(rows)
+        return table
+
+    def free_view(self, table: PageTable) -> None:
+        """Release every page back to the substrate (idempotent)."""
+        t = self._tables.pop(table.table_id, None)
+        if t is None:
+            return
+        for p in t.pages:
+            self._substrate.free_view(p)
+        t.pages.clear()
+
+    # -- invariant check (exercised by the property suite) ---------------
+    def check(self) -> None:
+        """Assert structural invariants: pages never overlap, page counts
+        and substrate accounting agree, and the free count never goes
+        negative."""
+        spans = sorted((p.offset, p.offset + p.size)
+                       for t in self._tables.values() for p in t.pages)
+        for (_, e0), (s1, _) in zip(spans, spans[1:]):
+            if s1 < e0:
+                raise AssertionError(f"overlapping pages at {s1} < {e0}")
+        n_pages = sum(len(t.pages) for t in self._tables.values())
+        if n_pages * self.page_elems != self._substrate.used:
+            raise AssertionError(
+                f"leak: {n_pages} pages vs substrate used "
+                f"{self._substrate.used}")
+        if not 0 <= self.free_pages <= self.num_pages:
+            raise AssertionError(f"free_pages out of range: {self.free_pages}")
+        for t in self._tables.values():
+            if len(t.pages) != self.pages_for(max(t.rows, 1)):
+                raise AssertionError(
+                    f"table {t.table_id}: rows {t.rows} vs "
+                    f"{len(t.pages)} pages")
+
+
+# ---------------------------------------------------------------------------
 # device-side functional ops
 # ---------------------------------------------------------------------------
 

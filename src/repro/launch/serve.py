@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
 import sys
 import time
@@ -52,9 +53,15 @@ from repro.core.composer import MeshComposer
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.serve import (AnalyticalPolicy, ComposedServer, ReplicaGroup,
-                         ServeConfig, ServeEngine, TenantDesignSpace,
-                         TenantSpec, serve_engine_rules)
+                         SLOTarget, ServeConfig, ServeEngine,
+                         TenantDesignSpace, TenantSpec, arrival_schedule,
+                         serve_engine_rules)
 from repro.workloads import DECODE
+
+# --scenario profiles served by the open-loop traffic generator
+# (repro.serve.traffic) on the mixed four-class fleet, with SLO targets
+# attached so the fabric's SLO-aware scheduler is live
+TRAFFIC_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail")
 
 
 # the heterogeneous fleet --scenario mixed serves: one tenant per workload
@@ -81,16 +88,51 @@ def _telemetry_line(server, steps: int, toks: int, dt: float) -> str:
             f"queue={qd} last_recompose={reason}")
 
 
+def _streams_digest(results) -> str:
+    """Order-independent sha256 over every tenant's (rid -> token stream)
+    map.  Equal digests mean bit-identical serving output — the acceptance
+    check that paging / preemption / SLO scheduling never change a single
+    emitted token (greedy decode rows are batch-independent).  Float
+    outputs (encoder embeddings) are excluded: their bits legitimately
+    track the applied TP degree — reduction order — and are pinned
+    close-not-equal across degrees in tests/test_workloads.py, so two runs
+    whose policies diverge may differ there without any scheduling bug."""
+    h = hashlib.sha256()
+    for t in sorted(results):
+        for rid in sorted(results[t]):
+            arr = np.asarray(results[t][rid])
+            if not np.issubdtype(arr.dtype, np.integer):
+                continue
+            h.update(f"{t}/{rid}:".encode())
+            h.update(arr.tobytes())
+            h.update(b";")
+    return h.hexdigest()
+
+
 def run_fabric(args) -> int:
     """Traffic-driven multi-tenant serving on one recomposable fabric."""
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
             if args.production_mesh else
             jax.make_mesh((1, jax.device_count()), ("data", "model")))
     serve = ServeConfig(max_slots=args.max_slots, max_len=args.max_len,
-                        eos_id=-1)
-    if args.scenario == "mixed":
+                        eos_id=-1, kv_arena_frac=args.kv_frac,
+                        kv_page_rows=args.kv_page_rows)
+    use_traffic = args.scenario in TRAFFIC_SCENARIOS
+    if args.scenario == "mixed" or use_traffic:
+        # traffic scenarios carry SLO targets so the SLO-aware scheduler
+        # (and the attainment report) are live; plain "mixed" stays
+        # best-effort — its benchmark baselines predate SLO scheduling
+        slo = (SLOTarget(ttft_p50_ms=args.slo_ttft_p50_ms,
+                         ttft_p99_ms=args.slo_ttft_p99_ms,
+                         per_token_p99_ms=args.slo_per_token_p99_ms)
+               if use_traffic else None)
+        # --slo-tenant scopes the targets (and therefore the scheduler's
+        # preemption lever and the attainment report) to one tenant; the
+        # rest of the fleet serves best-effort
         tenants = [TenantSpec(f"{w}-{arch}", arch, reduced=args.reduced,
-                              serve=serve, seed=i, workload=w)
+                              serve=serve, seed=i, workload=w,
+                              slo=(slo if args.slo_tenant in f"{w}-{arch}"
+                                   else None))
                    for i, (w, arch) in enumerate(MIXED_FLEET)]
     else:
         tenants = [TenantSpec(f"tenant{i}-{arch}", arch, reduced=args.reduced,
@@ -101,13 +143,29 @@ def run_fabric(args) -> int:
                             decide_every=args.decide_every,
                             tp=not args.no_tp, warm=not args.no_warm,
                             prewarm_async=args.prewarm_async,
-                            telemetry=not args.no_telemetry)
+                            telemetry=not args.no_telemetry,
+                            slo_preempt=not args.no_preempt)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
-    # bursty open-loop traffic: each tenant gets its requests in one burst
-    # at a random step, so load keeps shifting under the policy's feet
-    bursts = sorted((int(rng.integers(0, 4 * args.requests)), t.name)
-                    for t in tenants for _ in range(args.requests))
+    if use_traffic:
+        # seeded open-loop arrival process (repro.serve.traffic): the same
+        # seed replays the identical schedule, so paired benchmark arms
+        # (paged vs slot-granular) see the same offered load
+        queue = [(a.step, a.tenant, a.prompt_len, a.max_new)
+                 for a in arrival_schedule(
+                     args.scenario, [t.name for t in tenants],
+                     args.requests, args.seed,
+                     max_new=args.max_new_tokens)]
+    else:
+        # bursty open-loop traffic: each tenant gets its requests in one
+        # burst at a random step, so load keeps shifting under the
+        # policy's feet (prompt lengths draw at submit time — the rng
+        # stream here is unchanged from the pre-traffic-module launcher)
+        queue = [(s, n, None, args.max_new_tokens)
+                 for s, n in sorted((int(rng.integers(0, 4 * args.requests)),
+                                     t.name)
+                                    for t in tenants
+                                    for _ in range(args.requests))]
     steps = 0
     predicted = None
     toks = 0
@@ -115,13 +173,14 @@ def run_fabric(args) -> int:
     # measured identically with telemetry on or off — the benchmark's
     # overhead comparison reads this, not the registry's own histograms
     harness_step_ms = []
-    while bursts or server.pending():
-        while bursts and bursts[0][0] <= steps:
-            _, name = bursts.pop(0)
+    while queue or server.pending():
+        while queue and queue[0][0] <= steps:
+            _, name, plen, mnew = queue.pop(0)
             vocab = server.cfgs[name].vocab_size
-            plen = int(rng.integers(4, 24))
+            if plen is None:
+                plen = int(rng.integers(4, 24))
             server.submit(name, rng.integers(1, vocab, size=plen),
-                          max_new_tokens=args.max_new_tokens)
+                          max_new_tokens=mnew)
         s0 = time.perf_counter()
         out = server.step()
         harness_step_ms.append((time.perf_counter() - s0) * 1e3)
@@ -136,6 +195,11 @@ def run_fabric(args) -> int:
                                   time.monotonic() - t0), file=sys.stderr)
         if steps > 10_000:
             break
+    if use_traffic:
+        # the open-loop while above exits when no tokens are *owed*; drain
+        # the in-flight pipelined dispatches too so completion checks and
+        # the streams digest see every request's full output
+        server.drain(max_steps=2000)
     dt = time.monotonic() - t0
     stats = server.stats()
     arr = np.asarray(harness_step_ms if harness_step_ms else [0.0])
@@ -158,6 +222,8 @@ def run_fabric(args) -> int:
             "p99": round(float(np.percentile(arr, 99)), 3),
             "n": len(harness_step_ms)},
         "slo": server.slo_summary(),
+        "slo_attainment": server.slo_attainment(),
+        "streams_digest": _streams_digest(server.results()),
         "per_class_throughput": throughput,
         # the last busy decide's predicted makespans (analytical, seconds):
         # what Stage 2 thought the best and the applied design cost
@@ -412,6 +478,101 @@ def run_obs_smoke(args) -> int:
 
 
 # ---------------------------------------------------------------------------
+# SLO smoke: flash-crowd must preempt, preempted streams must stay bit-exact
+# ---------------------------------------------------------------------------
+
+def run_slo_smoke(args) -> int:
+    """Paged-KV + SLO-preemption smoke on the mixed fleet.
+
+    A flash-crowd schedule lands on an *oversubscribed* paged arena
+    (``kv_arena_frac`` well under 1), so page exhaustion during decode
+    growth — plus the SLO scheduler's TTFT protection — must preempt at
+    least one live stream.  The same schedule then replays on slot-granular
+    (non-paged, non-preempting) engines, and every emitted unit must match
+    bit-for-bit: preemption saves exact device state and greedy decode rows
+    are batch-independent, so scheduling may never change output.  Asserts
+
+    * at least one preemption fired on the paged run,
+    * every request (preempted ones included) completed its full budget,
+    * paged and slot-granular runs produce identical stream digests, and
+    * the SLO attainment block is non-empty.
+    """
+    if jax.device_count() < 4:
+        print("slo-smoke needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    requests, mnew = max(args.requests, 6), 24
+
+    def build(paged: bool) -> ComposedServer:
+        serve = ServeConfig(max_slots=3, max_len=64, eos_id=-1,
+                            paged_kv=paged, kv_page_rows=8,
+                            kv_arena_frac=0.4 if paged else 1.0)
+        slo = (SLOTarget(ttft_p50_ms=100.0, ttft_p99_ms=400.0)
+               if paged else None)
+        tenants = [TenantSpec(f"{w}-{arch}", arch, reduced=True, serve=serve,
+                              seed=i, workload=w, slo=slo)
+                   for i, (w, arch) in enumerate(MIXED_FLEET)]
+        # no policy: the smoke pins scheduling behavior, not the DSE
+        return ComposedServer(mesh, tenants, policy=None,
+                              slo_preempt=paged)
+
+    sched = arrival_schedule(
+        "flash-crowd", [f"{w}-{arch}" for w, arch in MIXED_FLEET],
+        requests, args.seed, max_new=mnew)
+
+    def run(server: ComposedServer):
+        rng = np.random.default_rng(args.seed)
+        queue = [(a.step, a.tenant, a.prompt_len, a.max_new) for a in sched]
+        steps = 0
+        while queue or server.pending():
+            while queue and queue[0][0] <= steps:
+                _, name, plen, mn = queue.pop(0)
+                vocab = server.cfgs[name].vocab_size
+                server.submit(name, rng.integers(1, vocab, size=plen),
+                              max_new_tokens=mn)
+            server.step()
+            steps += 1
+            if steps > 4000:
+                break
+        server.drain(max_steps=1000)
+        return server.results()
+
+    paged_srv = build(True)
+    res_paged = run(paged_srv)
+    base_srv = build(False)
+    res_base = run(base_srv)
+    stats = paged_srv.stats()
+    preemptions = sum(stats["preemptions"].values())
+    att = paged_srv.slo_attainment()
+    complete = all(
+        len(units) == mnew
+        for t, streams in res_paged.items()
+        if paged_srv.classes[t] != "encoder"
+        for units in streams.values())
+    digest_paged = _streams_digest(res_paged)
+    digest_base = _streams_digest(res_base)
+    checks = {
+        "preemptions": preemptions,
+        "slo_preemptions": stats["slo_preemptions"],
+        "complete": complete,
+        "digest_match": digest_paged == digest_base,
+        "attainment_tenants": sorted(att["tenants"]),
+        "streams_digest": digest_paged,
+    }
+    ok = (preemptions >= 1 and complete and checks["digest_match"]
+          and bool(att["tenants"]))
+    print(json.dumps({**checks, "ok": ok}))
+    if not ok:
+        print("SLO smoke FAILED: flash-crowd did not preempt, or a "
+              "preempted stream diverged / never completed (see checks)")
+        return 1
+    print("SLO smoke OK: flash-crowd preempted live streams and every "
+          "request completed bit-identically to the unpreempted run")
+    return 0
+
+
+# ---------------------------------------------------------------------------
 # dp bench: Stage-1-chosen replica tiling vs the same grant forced to dp=1
 # ---------------------------------------------------------------------------
 
@@ -554,12 +715,17 @@ def main(argv=None) -> int:
                     help="repeat for multiple tenants with --fabric")
     ap.add_argument("--fabric", action="store_true",
                     help="multi-tenant ComposedServer with live recomposition")
-    ap.add_argument("--scenario", choices=["bursty", "mixed"],
+    ap.add_argument("--scenario",
+                    choices=["bursty", "mixed", "diurnal", "flash-crowd",
+                             "heavy-tail"],
                     default="bursty",
                     help="fabric traffic: 'bursty' serves the --arch tenants; "
                          "'mixed' serves one tenant per workload class "
                          "(transformer decode + mamba SSM + encoder + "
-                         "seamless enc-dec)")
+                         "seamless enc-dec); 'diurnal'/'flash-crowd'/"
+                         "'heavy-tail' serve the mixed fleet under the "
+                         "seeded open-loop generator (repro.serve.traffic) "
+                         "with SLO targets attached")
     ap.add_argument("--decide-every", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
@@ -616,24 +782,53 @@ def main(argv=None) -> int:
                     help="assert the telemetry pipeline traces a mixed-"
                          "fleet run end to end (spans + per-class "
                          "decode-step histograms)")
+    ap.add_argument("--kv-frac", type=float, default=1.0,
+                    help="paged-KV arena size as a fraction of the worst-"
+                         "case slot reservation (< 1 oversubscribes: page "
+                         "exhaustion during growth triggers preemption)")
+    ap.add_argument("--kv-page-rows", type=int, default=16,
+                    help="token rows per KV page (ServeConfig.kv_page_rows)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable the fabric's SLO-preemption lever while "
+                         "keeping attainment reporting (the slot-granular "
+                         "benchmark baseline arm)")
+    ap.add_argument("--slo-ttft-p50-ms", type=float, default=150.0,
+                    help="TTFT p50 target for traffic-scenario tenants")
+    ap.add_argument("--slo-ttft-p99-ms", type=float, default=400.0,
+                    help="TTFT p99 target for traffic-scenario tenants")
+    ap.add_argument("--slo-per-token-p99-ms", type=float, default=0.0,
+                    help="per-token p99 target for traffic-scenario "
+                         "tenants (0 = untracked)")
+    ap.add_argument("--slo-tenant", default="", metavar="SUBSTR",
+                    help="apply SLO targets only to tenants whose name "
+                         "contains SUBSTR (empty = every tenant); scopes "
+                         "both the scheduler and the attainment report to "
+                         "the tenant under test")
+    ap.add_argument("--slo-smoke", action="store_true",
+                    help="assert a flash-crowd on an oversubscribed paged "
+                         "arena preempts at least one stream and every "
+                         "request completes bit-identically to the "
+                         "slot-granular run")
     args = ap.parse_args(argv)
 
     if args.tp_smoke:
         return run_tp_smoke(args)
     if args.obs_smoke:
         return run_obs_smoke(args)
+    if args.slo_smoke:
+        return run_slo_smoke(args)
     if args.dse_smoke:
         return run_dse_smoke(args)
     if args.dp_bench:
         return run_dp_bench(args)
     if args.scaling_curve:
         return run_scaling(args)
-    if args.scenario == "mixed":
+    if args.scenario == "mixed" or args.scenario in TRAFFIC_SCENARIOS:
         if not args.fabric:
-            ap.error("--scenario mixed requires --fabric")
+            ap.error(f"--scenario {args.scenario} requires --fabric")
         if args.arch:
-            ap.error("--scenario mixed picks its own per-class fleet; "
-                     "drop --arch")
+            ap.error(f"--scenario {args.scenario} picks its own per-class "
+                     "fleet; drop --arch")
         return run_fabric(args)
     if not args.arch:
         ap.error("--arch is required (except with "

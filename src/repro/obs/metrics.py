@@ -124,6 +124,32 @@ class Histogram:
             cum += c
         return self.max  # unreachable unless counts drifted
 
+    def fraction_below(self, threshold: float) -> float:
+        """Fraction of observations <= ``threshold`` — the SLO-attainment
+        primitive (e.g. ``fraction_below(ttft_target)`` is the tenant's
+        TTFT attainment).  Deterministic like :meth:`quantile`: whole
+        buckets count exactly, the straddling bucket interpolates
+        linearly, and the exact min/max tighten the edges so a histogram
+        whose max is under the target reports exactly 1.0.  ``nan`` when
+        empty."""
+        if self.count == 0:
+            return math.nan
+        x = float(threshold)
+        if x >= self.max:
+            return 1.0
+        if x < self.min:
+            return 0.0
+        below = 0.0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            lo, hi = bucket_bounds(i)
+            if hi <= x:
+                below += c
+            elif lo <= x:
+                below += c * (x - lo) / (hi - lo)
+        return min(max(below / self.count, 0.0), 1.0)
+
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else math.nan

@@ -3,9 +3,10 @@ from repro.obs import (MetricsRegistry, PredictionLedger, SpanTracer,
                        Telemetry)
 from repro.serve.dse import Stage1Optimizer, TenantDesignSpace, design_key
 from repro.serve.fabric import (AnalyticalPolicy, ComposedServer,
-                                RecompositionEvent, ReplicaGroup, TenantLoad,
-                                TenantObservation, TenantSpec,
+                                RecompositionEvent, ReplicaGroup, SLOTarget,
+                                TenantLoad, TenantObservation, TenantSpec,
                                 serve_engine_rules)
+from repro.serve.traffic import PROFILES, Arrival, arrival_schedule
 from repro.workloads import (DecodeEngine, EncDecEngine, EncoderEngine,
                              ExecutableCache, Request, ServeConfig, SSMEngine)
 
@@ -24,7 +25,11 @@ __all__ = [
     "EncoderEngine",
     "EncDecEngine",
     "AnalyticalPolicy",
+    "Arrival",
     "ComposedServer",
+    "PROFILES",
+    "SLOTarget",
+    "arrival_schedule",
     "DesignPoint",
     "MetricsRegistry",
     "PredictionLedger",

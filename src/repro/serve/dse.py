@@ -85,6 +85,14 @@ class TenantDesignSpace:
     # steps stream only the live KV/source prefix, so Stage 1 prices the
     # expected observed length instead of the full per-slot capacity
     use_kernels: bool = True
+    # paged KV arena (ServeConfig.paged_kv): admission reserves fixed-size
+    # (page_rows, cols) pages as a stream grows instead of pinning
+    # per_slot_elems up front, so the memory bound on the slot count is the
+    # EXPECTED page footprint of a slot — Stage 1 can admit more slots on
+    # the same HBM than the worst-case reservation would allow
+    paged: bool = False
+    page_rows: int = 0
+    page_elems: int = 0
 
 
 def padded_factor(ladder: Sequence[int], lengths: Sequence[int]) -> float:
@@ -248,17 +256,39 @@ class Stage1Optimizer:
             per_step += self._prefill_tax(cfg, space, p, lengths)
         return per_step
 
+    def _per_slot_bytes(self, space: TenantDesignSpace,
+                        lengths: Sequence[int]) -> float:
+        """Expected HBM one slot pins: the full worst-case reservation on a
+        slot-granular arena; on a paged arena the whole-page footprint of a
+        slot's *lifetime-average* live rows — the midpoint between the
+        expected admission length and the per-slot capacity (no
+        observations -> capacity, so an idle tenant is never
+        under-priced)."""
+        worst = 4.0 * space.per_slot_elems
+        if (not space.paged or space.page_rows <= 0
+                or space.page_elems <= 0):
+            return worst
+        valid = [L for L in lengths if 0 < L <= space.max_len]
+        rows = (min((sum(valid) / len(valid) + space.max_len) / 2.0,
+                    space.max_len)
+                if valid else space.max_len)
+        pages = -(-int(max(rows, 1)) // space.page_rows)
+        expected = 4.0 * pages * space.page_elems
+        return min(expected, worst) if worst > 0 else expected
+
     # -- the search --------------------------------------------------------
     def _slot_candidates(self, space: TenantDesignSpace, concurrency: int,
-                         p: int) -> Tuple[int, ...]:
+                         p: int, lengths: Sequence[int] = ()
+                         ) -> Tuple[int, ...]:
         """Arena-feasible slot counts worth trying at TP degree ``p``: the
         preset ladder plus the applied count and the observed concurrency
         (rounded up to even), memory-bounded by the slot pool the ``p``
-        compute CUs' HBM can pin."""
+        compute CUs' HBM can pin (expected page footprint per slot on a
+        paged arena, worst-case reservation otherwise)."""
         cap = space.slot_cap
-        if space.per_slot_elems > 0:
-            by_mem = int(p * self.mem_budget_bytes
-                         // (4 * space.per_slot_elems))
+        per_bytes = self._per_slot_bytes(space, lengths)
+        if per_bytes > 0:
+            by_mem = int(p * self.mem_budget_bytes // per_bytes)
             cap = max(1, min(cap, by_mem))
         want = min(max(concurrency, 1), cap)
         cands = {s for s in self.slot_choices if s <= cap}
@@ -310,7 +340,8 @@ class Stage1Optimizer:
             for tp in tps:
                 slot_cands = ((space.base_slots,)
                               if space.wclass == ENCODER
-                              else self._slot_candidates(space, per_k, tp))
+                              else self._slot_candidates(space, per_k, tp,
+                                                         lengths))
                 for slots in slot_cands:
                     for ladder in ladders:
                         point = DesignPoint(cus=cus, tp=tp, slots=slots,

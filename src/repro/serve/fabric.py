@@ -46,6 +46,7 @@ from repro.configs import get_config, get_reduced
 from repro.configs.base import ModelConfig
 from repro.core.analytical import (AccelConfig, decode_kv_read_latency,
                                    layer_latency, ssm_step_latency)
+from repro.core.arena import PagedArena
 from repro.core.composer import MeshComposer
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
@@ -76,6 +77,34 @@ def serve_engine_rules() -> part.ShardingRules:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """Per-tenant latency targets, milliseconds (0 = that target is
+    untracked).  Drives two things in :class:`ComposedServer`:
+
+    * the SLO-aware scheduler: a tenant whose head-of-line queue wait is
+      burning its p99 TTFT budget (or whose observed per-token p99 has
+      breached target) gets one of its slackest live streams preempted —
+      exact device-state save to host — so the freed slot/pages admit the
+      waiting request *this* step;
+    * :meth:`ComposedServer.slo_attainment`: the fraction of observed
+      TTFTs / per-token latencies under each target, read from the same
+      ``obs`` histograms the fabric already collects.
+
+    See docs/scheduling.md for the admission/preemption policy.
+    """
+
+    ttft_p50_ms: float = 0.0
+    ttft_p99_ms: float = 0.0
+    per_token_p50_ms: float = 0.0
+    per_token_p99_ms: float = 0.0
+
+    def tracked(self) -> bool:
+        return any(v > 0 for v in (self.ttft_p50_ms, self.ttft_p99_ms,
+                                   self.per_token_p50_ms,
+                                   self.per_token_p99_ms))
+
+
+@dataclasses.dataclass(frozen=True)
 class TenantSpec:
     """One tenant model co-resident on the fabric."""
 
@@ -92,6 +121,9 @@ class TenantSpec:
     # ceiling on the tenant's data-parallel replica count (Stage-1 dp axis);
     # 1 pins the tenant to a single engine per grant
     dp_cap: int = 64
+    # latency targets for the SLO-aware scheduler; None = best-effort
+    # tenant (never preempted on latency grounds, absent from attainment)
+    slo: Optional[SLOTarget] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -644,6 +676,7 @@ class ReplicaGroup:
         self._retired_results: Dict[int, Any] = {}
         self._retired_builds = 0
         self._retired_reshards = 0
+        self._retired_preempts = 0
         self._retired_metrics = MetricsRegistry()
         rep_obs = self._obs.fresh()
         self._replicas: List[_Replica] = [_Replica(build_engine(
@@ -734,6 +767,42 @@ class ReplicaGroup:
     def recent_lengths(self) -> Tuple[int, ...]:
         return tuple(itertools.chain.from_iterable(
             r.engine.recent_lengths() for r in self._replicas))
+
+    # -- preemption (the SLO scheduler's lever) --------------------------
+    @property
+    def preempted_depth(self) -> int:
+        """Requests currently parked (preempted, awaiting re-admission)."""
+        return sum(r.engine.preempted_depth for r in self._replicas)
+
+    @property
+    def preempt_count(self) -> int:
+        return self._retired_preempts + sum(r.engine.preempt_count
+                                            for r in self._replicas)
+
+    def queue_head_wait_s(self, now: Optional[float] = None) -> float:
+        """Longest head-of-line queue wait across replicas (seconds) —
+        the TTFT burn the SLO scheduler compares against targets."""
+        waits = [r.engine.queue_head_wait_s(now) for r in self._replicas
+                 if r.engine.queue_depth > 0]
+        return max(waits) if waits else 0.0
+
+    def preempt_one(self) -> Optional[int]:
+        """Preempt one live stream — exact device-state save, re-admitted
+        later bit-identically — on the replica whose head-of-line request
+        has waited longest (that is where a freed slot buys TTFT;
+        replica-index tie-break keeps victim choice deterministic under
+        equal waits).  Returns the victim's group rid, or None when no
+        replica holds a preemptible stream."""
+        order = sorted(
+            self._replicas,
+            key=lambda r: (-(r.engine.queue_head_wait_s()
+                             if r.engine.queue_depth > 0 else 0.0),
+                           r.index))
+        for rep in order:
+            erid = rep.engine.preempt_one()
+            if erid is not None:
+                return rep.to_group.get(erid, erid)
+        return None
 
     # -- pass-throughs the fabric's DSE plumbing reads ------------------
     @property
@@ -933,6 +1002,7 @@ class ReplicaGroup:
                     self._retired_results[rep.to_group[erid]] = v
             self._retired_builds += rep.engine.compile_builds
             self._retired_reshards += rep.engine.reshard_count
+            self._retired_preempts += rep.engine.preempt_count
             if rep.obs is not None:
                 # histograms observed by the retiring replica stay in the
                 # tenant's merged view (parallel to results/builds above)
@@ -1080,7 +1150,7 @@ class ComposedServer:
                  decide_every: int = 4, cu_axis: str = "model",
                  tp: bool = True, warm: bool = True,
                  prewarm_async: bool = False, telemetry: bool = True,
-                 events_cap: int = 256):
+                 events_cap: int = 256, slo_preempt: bool = True):
         self.composer = MeshComposer(mesh, cu_axis=cu_axis)
         self.policy = policy
         self.decide_every = decide_every
@@ -1106,6 +1176,14 @@ class ComposedServer:
         self._stall_probe: Dict[str, RecompositionEvent] = {}
         self._step_no = 0
         self._tokens_emitted: Dict[str, int] = {t.name: 0 for t in tenants}
+        # SLO-aware scheduler state: preemptions issued on latency grounds,
+        # plus the per-tenant observed quantiles (ms) refreshed at decide
+        # cadence — the per-step path must not merge histogram registries.
+        # slo_preempt=False keeps attainment *reporting* while never
+        # preempting (the slot-granular benchmark baseline arm).
+        self.slo_preempt = slo_preempt
+        self._slo_preemptions = 0
+        self._slo_obs: Dict[Tuple[str, str], float] = {}
         self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self._pending_prewarm: Optional[
             Tuple[Dict[str, DesignPoint], str, list]] = None
@@ -1195,8 +1273,13 @@ class ComposedServer:
 
     # ------------------------------------------------------------------
     def step(self) -> Dict[str, List[Tuple[int, int]]]:
-        """One fabric iteration: step every composed (non-parked) tenant,
-        then maybe recompose.  Returns per-tenant emitted (rid, token)."""
+        """One fabric iteration: SLO admission check, then step every
+        composed (non-parked) tenant, then maybe recompose.  Returns
+        per-tenant emitted (rid, token)."""
+        if (self.decide_every > 0
+                and self._step_no % self.decide_every == 0):
+            self._refresh_slo_observed()
+        self._slo_schedule()
         emitted = {}
         for t, eng in self.engines.items():
             if t not in self.subs:
@@ -1253,6 +1336,7 @@ class ComposedServer:
             arena = getattr(eng, "arena", None)
             per_slot = (arena.capacity // max(d["slots"], 1)
                         if arena is not None else 0)
+            paged = isinstance(arena, PagedArena)
             out[t] = TenantDesignSpace(
                 wclass=self.classes[t],
                 max_len=eng.cfg.max_len,
@@ -1270,7 +1354,12 @@ class ComposedServer:
                 prefill_bucket=(eng.cfg.prefill_bucket
                                 if getattr(self.cfgs[t], "ssm", None) is None
                                 else 0),
-                use_kernels=getattr(eng.cfg, "use_kernels", True))
+                use_kernels=getattr(eng.cfg, "use_kernels", True),
+                # paged KV arenas admit by expected page footprint, not the
+                # worst-case slot reservation — Stage 1 prices accordingly
+                paged=paged,
+                page_rows=arena.page_rows if paged else 0,
+                page_elems=arena.page_elems if paged else 0)
         return out
 
     def _applied_points(self) -> Dict[str, DesignPoint]:
@@ -1606,6 +1695,122 @@ class ComposedServer:
         the path written."""
         return self.obs.tracer.dump(path)
 
+    # ------------------------------------------------------------------
+    # SLO-aware scheduling (docs/scheduling.md)
+    # ------------------------------------------------------------------
+    def _refresh_slo_observed(self) -> None:
+        """Re-sample each SLO-tracked tenant's observed p99s (ms) from the
+        obs histograms.  Decide-cadence only: merging replica registries
+        per step would tax the hot path, and the observed quantiles move
+        slowly anyway."""
+        for t, eng in self.engines.items():
+            slo = self.specs[t].slo
+            if slo is None or not slo.tracked():
+                continue
+            if slo.ttft_p99_ms > 0:
+                h = eng.metrics().merged_histogram("ttft_s")
+                if h.count:
+                    self._slo_obs[(t, "ttft_p99_ms")] = \
+                        h.quantile(0.99) * 1e3
+            if slo.per_token_p99_ms > 0:
+                h = self.obs.registry.merged_histogram("per_token_s",
+                                                       tenant=t)
+                if h.count:
+                    self._slo_obs[(t, "per_token_p99_ms")] = \
+                        h.quantile(0.99) * 1e3
+
+    def _slo_preempt(self, t: str, why: str) -> bool:
+        rid = self.engines[t].preempt_one()
+        if rid is None:
+            return False
+        self._slo_preemptions += 1
+        if self.obs.enabled:
+            self.obs.inc("slo_preemptions")
+            self.obs.inc(f"slo_preemptions_{why}")
+        return True
+
+    def _slo_schedule(self) -> None:
+        """The SLO-aware admission/preemption pass, run before each fabric
+        step.
+
+        TTFT protection: a tenant whose head-of-line queue wait has burned
+        half its p99 TTFT budget (a quarter once its *observed* TTFT p99
+        is already over target) gets its slackest live stream preempted,
+        so the freed slot/pages admit the waiting request in this very
+        step's ``_admit``.  Per-token protection: a tenant whose observed
+        per-token p99 breached target sheds one stream (smaller batch =>
+        faster steps), at most one parked at a time so shedding never
+        cascades.  Preemption saves exact device state; the victim
+        re-admits later and continues bit-identically (greedy decode rows
+        are batch-independent, pinned by tests/test_preempt_chaos.py)."""
+        if not self.slo_preempt:
+            return
+        for t, eng in self.engines.items():
+            if t not in self.subs:
+                continue                     # parked tenant: no CUs at all
+            slo = self.specs[t].slo
+            if slo is None or not slo.tracked():
+                continue
+            if slo.ttft_p99_ms > 0 and eng.queue_depth > 0:
+                breached = (self._slo_obs.get((t, "ttft_p99_ms"), 0.0)
+                            > slo.ttft_p99_ms)
+                frac = 0.25 if breached else 0.5
+                if (eng.queue_head_wait_s() * 1e3
+                        >= frac * slo.ttft_p99_ms):
+                    if self._slo_preempt(t, "ttft"):
+                        continue
+            if (slo.per_token_p99_ms > 0 and eng.active_count > 1
+                    and eng.preempted_depth == 0
+                    and self._slo_obs.get((t, "per_token_p99_ms"), 0.0)
+                    > slo.per_token_p99_ms):
+                self._slo_preempt(t, "per_token")
+
+    def slo_attainment(self) -> Dict[str, object]:
+        """Per-tenant SLO attainment: for every declared target, the
+        fraction of observed TTFTs / per-token latencies at or under it
+        (``Histogram.fraction_below``) and whether that fraction meets the
+        target's own percentile, plus the preemption counters the
+        scheduler spent getting there.  TTFT histograms come from the
+        engines' merged registries; per-token from the fabric's filtered
+        steady-state histograms (same sources as :meth:`slo_summary`)."""
+        merged = self.metrics()
+        tenants: Dict[str, Dict[str, object]] = {}
+        for t, eng in self.engines.items():
+            slo = self.specs[t].slo
+            if slo is None or not slo.tracked():
+                continue
+            row: Dict[str, object] = {
+                "class": self.classes[t],
+                "preemptions": int(getattr(eng, "preempt_count", 0)),
+                "parked": int(getattr(eng, "preempted_depth", 0)),
+            }
+            for metric, name, src, targets in (
+                    ("ttft", "ttft_s", merged,
+                     ((0.50, slo.ttft_p50_ms), (0.99, slo.ttft_p99_ms))),
+                    ("per_token", "per_token_s", self.obs.registry,
+                     ((0.50, slo.per_token_p50_ms),
+                      (0.99, slo.per_token_p99_ms)))):
+                if not any(tgt > 0 for _, tgt in targets):
+                    continue
+                h = src.merged_histogram(name, tenant=t)
+                ent: Dict[str, object] = {"n": h.count}
+                for q, tgt in targets:
+                    if tgt <= 0:
+                        continue
+                    att = (h.fraction_below(tgt * 1e-3)
+                           if h.count else 0.0)
+                    ent[f"p{int(q * 100)}"] = {
+                        "target_ms": tgt,
+                        "observed_ms": (round(h.quantile(q) * 1e3, 3)
+                                        if h.count else None),
+                        "attainment": round(att, 4),
+                        "met": bool(h.count) and att + 1e-12 >= q,
+                    }
+                row[metric] = ent
+            tenants[t] = row
+        return {"tenants": tenants,
+                "slo_preemptions": self._slo_preemptions}
+
     def slo_summary(self) -> Dict[str, object]:
         """Per-tenant serving SLO percentiles (milliseconds): TTFT,
         per-token latency, decode-step latency and queue wait, plus the
@@ -1666,6 +1871,9 @@ class ComposedServer:
                                           4),
             "recompose_seconds_recent": [round(e.seconds, 4)
                                          for e in self.events],
+            "preemptions": {t: int(getattr(eng, "preempt_count", 0))
+                            for t, eng in self.engines.items()},
+            "slo_preemptions": self._slo_preemptions,
             "reshards_per_tenant": {t: eng.reshard_count
                                     for t, eng in self.engines.items()},
             "compile_builds": {t: eng.compile_builds

@@ -197,6 +197,16 @@ class Engine(Protocol):
     def pending_tokens(self) -> int: ...
     def arena_utilization(self) -> float: ...
 
+    # -- preemption (SLO-aware scheduling; see docs/scheduling.md) ------
+    # ``preempt_one`` parks the policy victim's device state host-side and
+    # returns its rid (None when nothing is preemptible — e.g. the encoder
+    # engine, whose jobs complete within their step).  Preempted requests
+    # re-admit via the engine's own _admit with bit-identical continuation.
+    def preempt_one(self) -> Optional[int]: ...
+    @property
+    def preempted_depth(self) -> int: ...
+    def queue_head_wait_s(self, now: Optional[float] = None) -> float: ...
+
     # -- real-time recomposition / design-point reconfiguration ---------
     # ``apply`` moves the engine onto a new composed sub-accelerator and/or
     # retunes its runtime knobs in one call; the knobs ride a
@@ -259,9 +269,39 @@ class EngineTelemetry:
 
     def _evict_finished(self) -> None:
         """Bound host memory: a long-running engine must not grow with
-        every request ever served (oldest finished records drop first)."""
+        every request ever served (oldest finished records drop first).
+        Eviction only ever touches the ``_finished`` record map — a
+        request's slot and arena reservation are released together at its
+        finish/preempt site (``DecodeEngine._release_slot``), never here,
+        so record eviction can't strand or double-free arena bytes."""
         while len(self._finished) > self.finished_cap:
             self._finished.pop(next(iter(self._finished)))
+
+    # -- preemption defaults (engines without preemptible device state) --
+    preempt_count = 0
+
+    def preempt_one(self) -> Optional[int]:
+        """No preemptible per-request device state (e.g. the encoder
+        engine: jobs complete within their step).  Slot-pool engines
+        override (DecodeEngine and subclasses)."""
+        return None
+
+    @property
+    def preempted_depth(self) -> int:
+        return len(getattr(self, "_parked", ()))
+
+    def queue_head_wait_s(self, now: Optional[float] = None) -> float:
+        """Seconds the oldest queued job has waited (SLO-risk signal);
+        engines with a ``_queue`` of submit-stamped records override or
+        inherit the DecodeEngine implementation."""
+        import time as _time
+        stamps = [getattr(r, "submitted_s", 0.0)
+                  for r in getattr(self, "_queue", ())]
+        stamps = [s for s in stamps if s > 0.0]
+        if not stamps:
+            return 0.0
+        return max((now if now is not None else _time.perf_counter())
+                   - min(stamps), 0.0)
 
 
 def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,

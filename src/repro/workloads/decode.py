@@ -49,7 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.arena import AllocationError, FlexArena, ROLE_ACT
+from repro.core.arena import (AllocationError, FlexArena, PagedArena,
+                              ROLE_ACT)
 from repro.core.composer import mesh_fingerprint
 from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
@@ -71,6 +72,14 @@ def _env_use_kernels() -> bool:
     is set to an off value (escape hatch for A/B runs and the kernel-off
     benchmark leg)."""
     return os.environ.get("REPRO_USE_KERNELS", "1").lower() not in (
+        "0", "false", "off")
+
+
+def _env_paged_kv() -> bool:
+    """Default for ``ServeConfig.paged_kv``: on unless REPRO_PAGED_KV is set
+    to an off value (escape hatch for the slot-granular baseline leg of the
+    SLO-attainment benchmark)."""
+    return os.environ.get("REPRO_PAGED_KV", "1").lower() not in (
         "0", "false", "off")
 
 
@@ -155,6 +164,20 @@ class ServeConfig:
     # flips the default for A/B benchmarking without code changes.  Part of
     # every executable-cache key (the lowered decode program differs).
     use_kernels: bool = dataclasses.field(default_factory=_env_use_kernels)
+    # paged KV admission arena: fixed-size pages over the FlexArena
+    # substrate.  Admission reserves only the pages covering the prompt and
+    # caches grow page-at-a-time, instead of pinning len(prompt)+max_new
+    # rows for the request's whole lifetime.  kv_arena_frac scales the
+    # arena budget against the per-slot worst case for BOTH arena kinds
+    # (paged and slot-granular run at the same HBM budget, so benchmark
+    # arms compare fairly); under paging, page exhaustion during growth
+    # preempts the largest-remaining request (device state saved
+    # host-side, resumed bit-identically once pages free).  Host-side
+    # accounting only — compiled programs are unaffected, so none of
+    # these is part of the executable-cache key.
+    paged_kv: bool = dataclasses.field(default_factory=_env_paged_kv)
+    kv_page_rows: int = 16             # rows (tokens) per page
+    kv_arena_frac: float = 1.0         # arena budget / dense worst case
 
 
 @dataclasses.dataclass
@@ -196,9 +219,13 @@ class DecodeEngine(EngineTelemetry):
         self._granted = None               # last granted sub-mesh (unsliced)
         self._recent_lens = DecayedLengthEstimator()
         self._per_token_elems = self._per_token_cache_elems()
-        self.arena = FlexArena(self._arena_capacity())
+        self.arena = self._make_arena()
         self._queue: List[Request] = []
         self._active: Dict[int, Request] = {}
+        # preempted requests parked host-side: (Request, exported cache
+        # block) — pages/slot released, resumed by _admit when space frees
+        self._parked: List[Tuple[Request, PyTree]] = []
+        self.preempt_count = 0
         # finished rid -> emitted tokens; bounded so a long-running engine
         # doesn't grow host memory with every request ever served
         self._finished: Dict[int, List[int]] = {}
@@ -277,6 +304,53 @@ class DecodeEngine(EngineTelemetry):
     def _slot_rows(self, req: Request) -> int:
         """Arena rows a request occupies while holding a slot."""
         return len(req.tokens) + req.max_new_tokens
+
+    def _row_cap(self) -> int:
+        """Per-slot arena row capacity (mirrors the device cache rows)."""
+        return self.cfg.max_len
+
+    def _page_rows(self) -> int:
+        return max(1, min(self.cfg.kv_page_rows, self._row_cap()))
+
+    def _arena_pages(self) -> int:
+        """Paged-arena page budget: the dense per-slot worst case scaled by
+        ``kv_arena_frac``, floored at one slot's worth so any admissible
+        request can always run alone (growth can never wedge)."""
+        per_slot = -(-self._row_cap() // self._page_rows())
+        frac = max(min(self.cfg.kv_arena_frac, 1.0), 0.0)
+        want = int(round(frac * self.cfg.max_slots * per_slot))
+        return max(want, per_slot, 1)
+
+    def _make_arena(self, min_pages: int = 0):
+        """Admission arena for the current config: paged (fixed-size pages,
+        grow-at-a-time) or the PR-1 slot-granular FlexArena.  Both honor
+        ``kv_arena_frac`` — the paired benchmark arms (paged vs dense)
+        compare at the SAME HBM budget — floored at one slot's worst case
+        so an admissible request can always run alone.  ``min_pages``
+        floors the page budget when a rebuild must re-admit live tables
+        (adoption bursts may briefly exceed the configured budget)."""
+        if not self.cfg.paged_kv:
+            frac = max(min(self.cfg.kv_arena_frac, 1.0), 0.0)
+            per_slot = self._row_cap() * self._per_token_elems
+            floor = min_pages * self._page_rows() * self._per_token_elems
+            return FlexArena(max(int(round(frac * self._arena_capacity())),
+                                 per_slot, floor, 1))
+        return PagedArena(max(self._arena_pages(), min_pages),
+                          self._page_rows(), self._per_token_elems)
+
+    @property
+    def _paged(self) -> bool:
+        return isinstance(self.arena, PagedArena)
+
+    def _live_rows(self, req: Request) -> int:
+        """Rows a paged request's table must cover for the next dispatch:
+        current KV occupancy plus the row that dispatch writes."""
+        return min(self._dec_len(req) + 1, self._row_cap())
+
+    def _arena_rows(self, req: Request) -> int:
+        """Arena rows to reserve for a request entering a slot: its current
+        coverage under paging, the len+budget worst case otherwise."""
+        return self._live_rows(req) if self._paged else self._slot_rows(req)
 
     def _oversized(self, req: Request) -> bool:
         """True when the request could never fit a slot (hard reject)."""
@@ -458,11 +532,20 @@ class DecodeEngine(EngineTelemetry):
                         if s in mapping}
         self._free_slots = list(range(len(live), slots))
         # admission arena mirrors the new pool capacity; live views re-admit
-        # (len(live) <= slots and per-request rows <= per-slot rows, so the
+        # (len(live) <= slots and per-request rows <= per-slot rows; a paged
+        # rebuild floors the page budget at the live tables' need, so the
         # re-allocation cannot fail)
-        arena = FlexArena(self._arena_capacity())
+        self._readmit_live_views()
+
+    def _readmit_live_views(self) -> None:
+        """Rebuild the admission arena and re-alloc every live request's
+        view/page table at its current size."""
+        pr = self._page_rows()
+        need = sum(-(-self._arena_rows(r) // pr)
+                   for r in self._active.values())
+        arena = self._make_arena(min_pages=need)
         for req in self._active.values():
-            req.view = arena.alloc(self._slot_rows(req),
+            req.view = arena.alloc(self._arena_rows(req),
                                    self._per_token_elems, ROLE_ACT)
         self.arena = arena
 
@@ -500,16 +583,25 @@ class DecodeEngine(EngineTelemetry):
         self._active.clear()
         self._inject.clear()
         self._free_slots = list(range(self.cfg.max_slots))
+        # preempted requests ride along with their saved cache blocks: the
+        # adopter restores them exactly like an exported live slot
+        live.extend(self._parked)
+        self._parked = []
         queued, self._queue = self._queue, []
         return live, queued
 
-    def _rebuild_arena(self) -> None:
+    def _rebuild_arena(self, extra_rows: int = 0) -> None:
         """Re-admit every live view into a fresh arena (defragmentation:
         adoption allocs land in an arena shaped by a different admission
-        history than a freshly resized pool's)."""
-        arena = FlexArena(self._arena_capacity())
+        history than a freshly resized pool's).  ``extra_rows`` reserves
+        headroom for a request about to be adopted."""
+        pr = self._page_rows()
+        need = sum(-(-self._arena_rows(r) // pr)
+                   for r in self._active.values())
+        need += -(-extra_rows // pr)
+        arena = self._make_arena(min_pages=need)
         for req in self._active.values():
-            req.view = arena.alloc(self._slot_rows(req),
+            req.view = arena.alloc(self._arena_rows(req),
                                    self._per_token_elems, ROLE_ACT)
         self.arena = arena
 
@@ -524,11 +616,11 @@ class DecodeEngine(EngineTelemetry):
             # callers size the pool before adopting; this is the backstop
             self._resize_slots(self.cfg.max_slots + 1)
         try:
-            view = self.arena.alloc(self._slot_rows(req),
+            view = self.arena.alloc(self._arena_rows(req),
                                     self._per_token_elems, ROLE_ACT)
         except AllocationError:
-            self._rebuild_arena()
-            view = self.arena.alloc(self._slot_rows(req),
+            self._rebuild_arena(extra_rows=self._arena_rows(req))
+            view = self.arena.alloc(self._arena_rows(req),
                                     self._per_token_elems, ROLE_ACT)
         rid = self._next_rid
         self._next_rid += 1
@@ -564,6 +656,126 @@ class DecodeEngine(EngineTelemetry):
         a dp grow); live slots stay put."""
         queued, self._queue = self._queue, []
         return queued
+
+    # ------------------------------------------------------------------
+    # preemption: park a victim's device state host-side (the dp-retune
+    # export/adopt machinery turned inward), release its slot and pages,
+    # resume later with a bit-identical continuation.  Triggered by page
+    # exhaustion during growth (_ensure_capacity) and by the fabric's
+    # SLO scheduler (preempt_one).
+    # ------------------------------------------------------------------
+    def _release_slot(self, slot: int, req: Request) -> None:
+        """Single exit point returning a finished/preempted/rejected
+        request's slot AND its arena reservation together — every path that
+        gives up a slot goes through here, so slot and arena accounting can
+        never diverge (arena bytes return to zero once every request
+        drains; pinned by tests/test_paged_arena.py)."""
+        if req.view is not None:
+            self.arena.free_view(req.view)
+            req.view = None
+        if slot in self._active:
+            del self._active[slot]
+        self._inject.pop(slot, None)
+        self._free_slots.append(slot)
+        req.slot = -1
+
+    def preempt_slot(self, slot: int) -> Optional[int]:
+        """Preempt the request in ``slot``: harvest any in-flight step, save
+        the slot's cache rows host-side, free its pages + slot, and park it
+        for re-admission.  Continuation is bit-identical: the saved block is
+        an exact device copy and the last emitted token is host-injected on
+        resume, exactly as a dp retune's adopt_request does."""
+        self._harvest()
+        req = self._active.get(slot)
+        if req is None:
+            return None
+        block = self._export_slot(slot)
+        self._release_slot(slot, req)
+        self._parked.append((req, block))
+        self.preempt_count += 1
+        self._obs.inc("preemptions")
+        return req.rid
+
+    def _victim_slot(self) -> Optional[int]:
+        """Deterministic preemption victim: the active request with the most
+        remaining budget (its pages stay pinned longest); newest rid breaks
+        ties.  None when nothing is preemptible."""
+        best = None
+        for slot, req in self._active.items():
+            rem = req.max_new_tokens - req.scheduled
+            if rem <= 0:
+                continue
+            key = (rem, req.rid, slot)
+            if best is None or key > best[0]:
+                best = (key, slot)
+        return best[1] if best is not None else None
+
+    def preempt_one(self) -> Optional[int]:
+        """SLO-scheduler entry point: preempt the policy victim.  Returns
+        its rid, or None when no active request is preemptible."""
+        self._harvest()
+        slot = self._victim_slot()
+        if slot is None:
+            return None
+        return self.preempt_slot(slot)
+
+    def _ensure_capacity(self) -> None:
+        """Grow each live slot's page table to cover the next dispatch.
+        Page exhaustion preempts the largest-remaining victim until the
+        growth fits; the arena floor (one slot's worst case) guarantees a
+        lone request always fits, so this never wedges."""
+        if not self._paged:
+            return
+        for slot in sorted(self._active):
+            req = self._active.get(slot)
+            if req is None or req.view is None:
+                continue
+            need = self._live_rows(req)
+            while True:
+                try:
+                    self.arena.grow(req.view, need)
+                    break
+                except AllocationError:
+                    victim = self._victim_slot()
+                    if victim is None:
+                        break   # everything is finishing this step
+                    self.preempt_slot(victim)
+                    if victim == slot:
+                        break   # the grower itself was the best victim
+
+    def _resume_parked(self) -> None:
+        """Re-admit preempted requests (exact state restore) while a slot
+        and their pages are available.  Runs after the queue loop in
+        ``_admit``: fresh arrivals keep admission priority so an SLO-forced
+        preemption cannot thrash with its own victim."""
+        harvested = False
+        while self._parked and self._free_slots:
+            req, block = self._parked[0]
+            try:
+                view = self.arena.alloc(self._arena_rows(req),
+                                        self._per_token_elems, ROLE_ACT)
+            except AllocationError:
+                break
+            if not harvested:
+                self._harvest()   # cache write-back wants a settled pool
+                harvested = True
+            self._parked.pop(0)
+            req.view = view
+            req.slot = self._free_slots.pop(0)
+            dev = jax.tree.map(lambda ax, b: b if ax < 0 else jnp.asarray(b),
+                               self._slot_axes, block)
+            self.cache = _write_slot(self.cache, dev, req.slot,
+                                     self._slot_axes)
+            if self.mesh is not None:
+                # the AOT decode executable requires its exact input
+                # shardings; the eager block write may have disturbed them
+                self.cache = jax.device_put(
+                    self.cache,
+                    self._cache_plan.shardings(self.mesh, self._rules_eff))
+            self._active[req.slot] = req
+            if req.out_tokens:
+                self._inject[req.slot] = req.out_tokens[-1]
+            self._obs.inc("preempt_resumes")
 
     # ------------------------------------------------------------------
     # compiled executables (build counting: EngineTelemetry)
@@ -781,18 +993,36 @@ class DecodeEngine(EngineTelemetry):
         return len(self._active)
 
     @property
+    def preempted_depth(self) -> int:
+        """Preempted requests parked host-side awaiting re-admission."""
+        return len(self._parked)
+
+    @property
     def has_work(self) -> bool:
-        """True while the queue, slots or an in-flight dispatch hold work."""
-        return bool(self._queue or self._active or self._inflight)
+        """True while the queue, slots, parked preemptions or an in-flight
+        dispatch hold work."""
+        return bool(self._queue or self._active or self._inflight
+                    or self._parked)
 
     def pending_tokens(self) -> int:
-        """Decode steps of work still owed: remaining tokens of active
-        requests plus full budgets of queued ones."""
+        """Decode steps of work still owed: remaining tokens of active and
+        parked (preempted) requests plus full budgets of queued ones."""
         owed = sum(req.max_new_tokens - req.scheduled
                    for req in self._active.values())
+        owed += sum(req.max_new_tokens - req.scheduled
+                    for req, _ in self._parked)
         owed += sum(req.max_new_tokens + len(req.tokens)
                     for req in self._queue)
         return max(owed, 0)
+
+    def queue_head_wait_s(self, now: Optional[float] = None) -> float:
+        """Seconds the oldest queued request has been waiting (0.0 when the
+        queue is empty) — the SLO scheduler's TTFT-risk signal."""
+        stamps = [r.submitted_s for r in self._queue if r.submitted_s > 0.0]
+        if not stamps:
+            return 0.0
+        return max((now if now is not None else time.perf_counter())
+                   - min(stamps), 0.0)
 
     def arena_utilization(self) -> float:
         """KV-arena pressure, 0..1 (admission-accounting fill fraction)."""
@@ -815,6 +1045,8 @@ class DecodeEngine(EngineTelemetry):
             "active": self.active_count,
             "pending_tokens": self.pending_tokens(),
             "arena_utilization": round(self.arena_utilization(), 4),
+            "preempted": self.preempted_depth,
+            "preemptions": self.preempt_count,
             "reshard_count": self.reshard_count,
             "compile_builds": self.compile_builds,
             "design": self.design(),
@@ -848,7 +1080,7 @@ class DecodeEngine(EngineTelemetry):
                 self._record_finished(req)
                 continue
             try:
-                view = self.arena.alloc(self._slot_rows(req),
+                view = self.arena.alloc(self._arena_rows(req),
                                         self._per_token_elems, ROLE_ACT)
             except AllocationError:
                 break  # arena full: stay queued (admission control);
@@ -867,6 +1099,7 @@ class DecodeEngine(EngineTelemetry):
                         obs.observe("queue_wait_s", now - req.submitted_s)
             with obs.span("admit", n=len(admitted)):
                 self._prefill_admitted(admitted)
+        self._resume_parked()
 
     def _prefill_admitted(self, reqs: List[Request]) -> None:
         """Prefill the requests just admitted (hook: the enc-dec engine
@@ -933,6 +1166,9 @@ class DecodeEngine(EngineTelemetry):
         return out
 
     def _step_dispatch(self) -> None:
+        self._ensure_capacity()
+        if not self._active:
+            return
         B = self.cfg.max_slots
         pipelined = self.cfg.pipeline_decode and self.cfg.eos_id < 0
         inject_vals = np.zeros((B,), np.int32)
@@ -964,9 +1200,7 @@ class DecodeEngine(EngineTelemetry):
                 # the slot now so the next admit can reuse it; the token
                 # value lands at harvest
                 req.done = True
-                self.arena.free_view(req.view)
-                self._free_slots.append(slot)
-                del self._active[slot]
+                self._release_slot(slot, req)
 
         # harvest the PREVIOUS dispatch (its compute is done or in flight):
         # host bookkeeping below overlaps the step dispatched above.  Its
@@ -1003,10 +1237,8 @@ class DecodeEngine(EngineTelemetry):
             elif tok == self.cfg.eos_id or \
                     len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
-                self.arena.free_view(req.view)
-                self._free_slots.append(slot)
+                self._release_slot(slot, req)
                 self._record_finished(req)
-                del self._active[slot]
 
     def _drain_emitted(self) -> List[Tuple[int, int]]:
         out, self._emit_buf = self._emit_buf, []
@@ -1037,6 +1269,8 @@ class DecodeEngine(EngineTelemetry):
         self._harvest()
         out = {req.rid: list(req.out_tokens)
                for req in list(self._active.values()) + self._queue}
+        out.update({req.rid: list(req.out_tokens)
+                    for req, _ in self._parked})
         out.update({rid: list(toks) for rid, toks in self._finished.items()})
         return out
 

@@ -147,6 +147,16 @@ class EncDecEngine(DecodeEngine):
         return (len(req.tokens) + len(self._dec_prompt(req))
                 + req.max_new_tokens)
 
+    def _row_cap(self) -> int:
+        # per-slot device rows mirror both pools: decoder KV + cross cache
+        return self.cfg.max_len + self._max_src
+
+    def _live_rows(self, req: Request) -> int:
+        """Paged coverage for the next dispatch: the full source cache rows
+        (written at admission by the batched encode, never grows) plus the
+        live decoder-KV occupancy + the row the dispatch writes."""
+        return min(len(req.tokens) + self._dec_len(req) + 1, self._row_cap())
+
     def _oversized(self, req: Request) -> bool:
         """Hard reject: source longer than the cross cache, or a decoder
         prompt (BOS + prefix) plus generation budget overflowing a slot."""

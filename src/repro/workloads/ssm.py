@@ -80,6 +80,13 @@ class SSMEngine(DecodeEngine):
     def _slot_rows(self, req: Request) -> int:
         return 1
 
+    def _row_cap(self) -> int:
+        # O(1) state: one arena row per slot, so under paging every page is
+        # a single constant-size state unit and _live_rows never grows —
+        # SSM tenants get preemption (the state block exports like any
+        # slot) but no page-growth pressure
+        return 1
+
     def _oversized(self, req: Request) -> bool:
         # O(1) state: no prompt length or generation budget can overflow a
         # slot.  Backpressure is purely slot availability.

@@ -1,0 +1,227 @@
+"""PagedArena property suite + the slot-pool release audit.
+
+The invariants the paged-KV PR stands on:
+
+* random alloc / grow / free sequences never overlap pages, never leak a
+  page, and a drained arena always re-packs to FULL capacity in one table
+  (equal-size pages cannot fragment — the property that makes pages the
+  FMU's natural admission currency);
+* every serving-engine exit path — sync finish, pipelined finish,
+  preemption (+ resume), evacuate — releases the slot and its arena
+  reservation *together* (``DecodeEngine._release_slot``), so arena bytes
+  return to zero after every request drains; ``_evict_finished`` only ever
+  touches finished records, never reservations;
+* preempt / resume is invisible in the token streams (exact device-state
+  save + host re-injection), and an oversubscribed arena
+  (``kv_arena_frac`` < 1) preempts instead of wedging.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core import arena as ar
+from repro.models import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# allocator properties (host-only, no jax compute)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_paged_random_ops_never_overlap_never_leak(seed):
+    """Model-checked churn: after every op the arena's structural
+    invariants hold (disjoint pages, substrate accounting exact, page
+    counts match logical rows), and freeing everything returns every
+    page."""
+    rng = np.random.default_rng(seed)
+    pa = ar.PagedArena(num_pages=24, page_rows=8, cols=16)
+    live = []
+    for _ in range(120):
+        op = int(rng.integers(0, 3))
+        if op == 0 or not live:
+            rows = int(rng.integers(1, 100))
+            try:
+                live.append(pa.alloc(rows, 16))
+            except ar.AllocationError:
+                assert pa.free_pages < pa.pages_for(rows)
+        elif op == 1:
+            t = live[int(rng.integers(0, len(live)))]
+            before = (t.rows, len(t.pages))
+            want = t.rows + int(rng.integers(0, 24))
+            try:
+                pa.grow(t, want)
+                assert t.rows >= before[0]
+            except ar.AllocationError:
+                # failed growth must leave the table untouched
+                assert (t.rows, len(t.pages)) == before
+        else:
+            t = live.pop(int(rng.integers(0, len(live))))
+            pa.free_view(t)
+            pa.free_view(t)                      # idempotent
+        pa.check()
+    for t in live:
+        pa.free_view(t)
+    pa.check()
+    assert pa.used == 0 and pa.free_pages == pa.num_pages
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_paged_drain_repacks_to_full_capacity(seed):
+    """After arbitrary churn and a full drain, ONE table must cover every
+    page — equal-size pages defragment by construction (a FlexArena under
+    the same churn can end up unable to place its largest view)."""
+    rng = np.random.default_rng(seed)
+    pa = ar.PagedArena(num_pages=16, page_rows=4, cols=8)
+    live = []
+    for _ in range(60):
+        if int(rng.integers(0, 2)) == 0 or not live:
+            try:
+                live.append(pa.alloc(int(rng.integers(1, 40)), 8))
+            except ar.AllocationError:
+                pass
+        else:
+            pa.free_view(live.pop(int(rng.integers(0, len(live)))))
+    for t in live:
+        pa.free_view(t)
+    full = pa.alloc(pa.num_pages * pa.page_rows, 8)
+    assert len(full.pages) == pa.num_pages and pa.free_pages == 0
+    pa.check()
+
+
+def test_paged_api_contract():
+    pa = ar.PagedArena(num_pages=4, page_rows=8, cols=16)
+    assert pa.pages_for(0) == 0 and pa.pages_for(1) == 1
+    assert pa.pages_for(8) == 1 and pa.pages_for(9) == 2
+    with pytest.raises(ar.AllocationError):
+        pa.alloc(8, 32)                          # cols must match
+    with pytest.raises(ar.AllocationError):
+        pa.alloc(0, 16)
+    t = pa.alloc(10, 16)                         # 2 pages
+    assert pa.used_pages == 2 and t.size == 2 * pa.page_elems
+    pa.grow(t, 16)                               # same 2 pages
+    assert len(t.pages) == 2
+    pa.grow(t, 17)                               # crosses a boundary
+    assert len(t.pages) == 3
+    with pytest.raises(ar.AllocationError):
+        pa.grow(t, 100)                          # needs 13 pages, has 4
+    assert len(t.pages) == 3 and t.rows == 17    # unchanged by the failure
+    pa.free_view(t)
+    with pytest.raises(ar.AllocationError):
+        pa.grow(t, 20)                           # grow on a freed table
+    assert pa.used == 0
+    with pytest.raises(ValueError):
+        ar.PagedArena(num_pages=0, page_rows=8, cols=16)
+    assert pa.fits([(9, 16), (8, 16)]) and not pa.fits([(33, 16)])
+
+
+# ---------------------------------------------------------------------------
+# the engine release audit: slots + reservations always exit together
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen2.5-32b")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def _engine(model, params, **kw):
+    defaults = dict(max_slots=3, max_len=32, eos_id=-1)
+    defaults.update(kw)
+    return ServeEngine(model, params, ServeConfig(**defaults))
+
+
+def _submit(eng, cfg, n, seed=0, new=6):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        eng.submit(rng.integers(1, cfg.vocab_size,
+                                size=int(rng.integers(3, 12))),
+                   max_new_tokens=new)
+
+
+@pytest.mark.parametrize("paged", [True, False])
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_arena_drains_to_zero_on_every_exit_path(qwen, paged, pipeline):
+    """The satellite-4 pin: whatever the finish path (sync harvest,
+    pipelined dispatch-time finish, preempt + resume), arena bytes return
+    to exactly zero once every request drains — on the paged arena AND the
+    slot-granular FlexArena."""
+    cfg, model, params = qwen
+    eng = _engine(model, params, paged_kv=paged, kv_page_rows=8,
+                  pipeline_decode=pipeline)
+    _submit(eng, cfg, 5)
+    steps = 0
+    while eng.has_work:
+        if steps == 3:
+            assert eng.preempt_one() is not None
+        eng.step()
+        steps += 1
+        assert steps < 400
+    assert eng.arena.used == 0
+    assert eng.preempt_count == 1
+    assert len(eng.results()) == 5
+    assert all(len(t) == 6 for t in eng.results().values())
+
+
+def test_preempt_resume_streams_bitexact(qwen):
+    """Seeded preempt points anywhere in the run never change one token:
+    preemption exports the exact cache block and re-injects the last
+    emitted token on resume, and greedy decode rows are batch-
+    independent."""
+    cfg, model, params = qwen
+
+    def run(preempt_at=()):
+        eng = _engine(model, params, paged_kv=True, kv_page_rows=8)
+        _submit(eng, cfg, 4, new=8)
+        steps = 0
+        while eng.has_work:
+            if steps in preempt_at:
+                eng.preempt_one()
+            eng.step()
+            steps += 1
+            assert steps < 400
+        assert eng.arena.used == 0
+        return eng.results()
+
+    ref = run()
+    assert run(preempt_at=(2, 5, 9)) == ref
+    assert run(preempt_at=(1, 2, 3)) == ref
+
+
+def test_oversubscribed_arena_preempts_and_completes(qwen):
+    """kv_arena_frac < 1 oversubscribes pages: growth pressure must
+    preempt (never deadlock, never drop work) and every stream still
+    completes its full budget with the arena drained."""
+    cfg, model, params = qwen
+    eng = _engine(model, params, paged_kv=True, kv_page_rows=4,
+                  kv_arena_frac=0.5)
+    _submit(eng, cfg, 6, new=16)
+    steps = 0
+    while eng.has_work:
+        eng.step()
+        steps += 1
+        assert steps < 1000
+    assert eng.preempt_count >= 1
+    assert eng.arena.used == 0
+    assert all(len(t) == 16 for t in eng.results().values())
+
+
+def test_evacuate_releases_everything_including_parked(qwen):
+    """A dp retune's evacuate must strip parked (preempted) requests along
+    with live slots — they ride along as exact cache-block exports — and
+    leave the arena empty."""
+    cfg, model, params = qwen
+    eng = _engine(model, params, paged_kv=True)
+    _submit(eng, cfg, 4)
+    eng.step()
+    eng.step()
+    assert eng.preempt_one() is not None
+    live, queued = eng.evacuate()
+    assert eng.arena.used == 0 and eng.active_count == 0
+    assert len(live) == 3 and len(queued) == 1
+    assert eng.preempted_depth == 0

@@ -1,0 +1,56 @@
+"""Traffic-generator determinism (satellite of the paged-KV / SLO PR).
+
+The benchmark's paired arms (paged + preemptive vs slot-granular baseline)
+only compare cleanly if both replay the *identical* offered load, so the
+generator must be a pure function of ``(profile, tenants, R, seed)``.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.traffic import PROFILES, arrival_schedule
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       profile=st.sampled_from(list(PROFILES)),
+       n=st.integers(1, 12))
+def test_same_seed_replays_identical_schedule(seed, profile, n):
+    ts = ["a", "b", "c"]
+    assert (arrival_schedule(profile, ts, n, seed)
+            == arrival_schedule(profile, ts, n, seed))
+
+
+def test_different_seeds_differ():
+    assert (arrival_schedule("bursty", ["x", "y"], 8, 0)
+            != arrival_schedule("bursty", ["x", "y"], 8, 1))
+
+
+def test_schedules_sorted_and_complete():
+    for p in PROFILES:
+        s = arrival_schedule(p, ["x", "y"], 8, 3)
+        assert len(s) == 16
+        assert [a.step for a in s] == sorted(a.step for a in s)
+        assert all(0 <= a.step < 32 for a in s)          # horizon = 4R
+        assert all(4 <= a.prompt_len < 24 for a in s)
+        assert all(a.max_new >= 1 for a in s)
+        per = {t: sum(a.tenant == t for a in s) for t in ("x", "y")}
+        assert per == {"x": 8, "y": 8}
+
+
+def test_flash_crowd_compresses_first_tenant():
+    s = arrival_schedule("flash-crowd", ["victim", "bg"], 16, 0)
+    v = [a.step for a in s if a.tenant == "victim"]
+    bg = [a.step for a in s if a.tenant == "bg"]
+    assert max(v) - min(v) < max(16 // 8, 1)             # inside the window
+    assert max(bg) - min(bg) > max(v) - min(v)           # others spread out
+
+
+def test_heavy_tail_draws_long_budgets():
+    s = arrival_schedule("heavy-tail", ["x"], 64, 1, max_new=16)
+    assert all(16 <= a.max_new <= 8 * 16 for a in s)     # tail >= base, capped
+    assert any(a.max_new > 2 * 16 for a in s)            # and actually heavy
+
+
+def test_unknown_profile_raises():
+    with pytest.raises(ValueError):
+        arrival_schedule("nope", ["x"], 1, 0)

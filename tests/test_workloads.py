@@ -307,8 +307,10 @@ def test_encdec_accepts_precomputed_frames(seamless):
     being jnp.take on the embed table) produce the token path's exact
     stream; the embedded rows pay the same arena rows as token sources."""
     cfg, model, params = seamless
+    # slot-granular arena: the reservation is the exact worst case below
+    # (a paged table would cover live rows only, growing with decode)
     sc = ServeConfig(max_slots=2, max_len=24, eos_id=-1, max_src_len=12,
-                     len_buckets=(8,))
+                     len_buckets=(8,), paged_kv=False)
     eng = EncDecEngine(model, params, sc)
     rng = np.random.default_rng(0)
     src = rng.integers(1, cfg.vocab_size, size=7)
@@ -320,6 +322,14 @@ def test_encdec_accepts_precomputed_frames(seamless):
     assert eng.active_count == 2
     views = {req.rid: req.view for req in eng._active.values()}
     assert views[r_frm].rows == views[r_tok].rows == 7 + 1 + 6
+    # under paging both source kinds still pay identical (live) rows
+    engp = EncDecEngine(model, params,
+                        dataclasses.replace(sc, paged_kv=True))
+    rp_tok = engp.submit(src, max_new_tokens=6)
+    rp_frm = engp.submit(frames, max_new_tokens=6)
+    engp.step()
+    vp = {req.rid: req.view for req in engp._active.values()}
+    assert vp[rp_frm].rows == vp[rp_tok].rows
     out = eng.run_to_completion(200)
     assert out[r_frm] == out[r_tok], \
         "precomputed frames diverged from the token-embedding path"
