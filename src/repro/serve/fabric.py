@@ -36,7 +36,6 @@ import dataclasses
 import itertools
 import math
 import time
-import warnings
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -142,10 +141,7 @@ class TenantObservation:
     """Everything the policy needs to know about one tenant, in one record.
 
     Built by the fabric each decide tick (:meth:`ComposedServer.observe`)
-    and passed as ``decide(observations={tenant: TenantObservation(...)})``
-    — replacing the PR-5 keyword sprawl (``classes=``, ``src_lens=``,
-    ``lengths=``, ``spaces=`` riding alongside a ``TenantLoad`` mapping),
-    which is kept one release behind a ``DeprecationWarning``.
+    and passed as ``decide(observations={tenant: TenantObservation(...)})``.
     """
 
     # load signals (sampled from the tenant's engine / replica group)
@@ -363,55 +359,10 @@ class AnalyticalPolicy:
         return self._cost_cache[key]
 
     # -- the two-stage search ----------------------------------------------
-    @staticmethod
-    def _as_observations(observations, classes, src_lens, lengths, spaces
-                         ) -> Dict[str, TenantObservation]:
-        """Normalize ``decide``'s inputs to per-tenant TenantObservations.
-
-        The PR-5 form — a ``TenantLoad`` mapping with the Stage-1 inputs
-        riding as parallel keyword mappings — folds in behind a
-        ``DeprecationWarning`` (kept one release)."""
-        legacy = (any(m is not None for m in (classes, src_lens, lengths,
-                                              spaces))
-                  or any(not isinstance(o, TenantObservation)
-                         for o in observations.values()))
-        if not legacy:
-            return dict(observations)
-        warnings.warn(
-            "AnalyticalPolicy.decide(loads, classes=, src_lens=, lengths=, "
-            "spaces=) is deprecated; pass observations="
-            "{tenant: TenantObservation(...)}",
-            DeprecationWarning, stacklevel=3)
-        classes = dict(classes or {})
-        src_lens = dict(src_lens or {})
-        lengths = dict(lengths or {})
-        spaces = dict(spaces or {})
-        out = {}
-        for t, o in observations.items():
-            if isinstance(o, TenantObservation):
-                out[t] = dataclasses.replace(
-                    o, wclass=classes.get(t, o.wclass),
-                    src_len=src_lens.get(t, o.src_len),
-                    recent_lengths=tuple(lengths.get(t, o.recent_lengths)),
-                    space=spaces.get(t, o.space))
-            else:
-                out[t] = TenantObservation(
-                    pending_tokens=o.pending_tokens,
-                    queue_depth=o.queue_depth, active=o.active,
-                    arena_utilization=o.arena_utilization,
-                    wclass=classes.get(t), src_len=src_lens.get(t, 0),
-                    recent_lengths=tuple(lengths.get(t, ())),
-                    space=spaces.get(t))
-        return out
-
     def decide(self, observations: Mapping[str, TenantObservation],
                cfgs: Mapping[str, ModelConfig],
                current: Mapping[str, object],
                num_cus: int,
-               classes: Optional[Mapping[str, str]] = None,
-               src_lens: Optional[Mapping[str, int]] = None,
-               lengths: Optional[Mapping[str, Sequence[int]]] = None,
-               spaces: Optional[Mapping[str, TenantDesignSpace]] = None,
                ) -> Tuple[Dict[str, DesignPoint], str]:
         """Return (per-tenant design points, reason).
 
@@ -428,13 +379,8 @@ class AnalyticalPolicy:
         cross-attention read), recently observed job lengths and the
         tenant's Stage-1 design space — without a space a tenant is priced
         split-only (its CU count is the whole design point).  ``current``
-        maps tenant -> applied CU count (int) or applied DesignPoint.
-
-        The remaining keywords are the deprecated PR-5 calling convention
-        (``loads`` + parallel mappings), kept one release behind a
-        ``DeprecationWarning``."""
-        loads = self._as_observations(observations, classes, src_lens,
-                                      lengths, spaces)
+        maps tenant -> applied CU count (int) or applied DesignPoint."""
+        loads = dict(observations)
         classes = {t: o.wclass for t, o in loads.items()
                    if o.wclass is not None}
         src_lens = {t: o.src_len for t, o in loads.items() if o.src_len}
@@ -964,18 +910,6 @@ class ReplicaGroup:
         self._granted = granted
         return applied
 
-    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
-                    tp: Optional[int] = None, buckets=None,
-                    dp: Optional[int] = None) -> Dict[str, Any]:
-        """Deprecated keyword form of :meth:`apply` (kept one release)."""
-        warnings.warn(
-            "ReplicaGroup.reconfigure(sub, slots=, tp=, buckets=, dp=) is "
-            "deprecated; use ReplicaGroup.apply(sub, DesignPoint(...))",
-            DeprecationWarning, stacklevel=2)
-        return self.apply(sub, DesignPoint(
-            cus=0, tp=tp, slots=slots,
-            buckets=tuple(buckets) if buckets is not None else None, dp=dp))
-
     def _retarget_dp(self, granted, dp: int,
                      eng_point: DesignPoint) -> Dict[str, Any]:
         """Change the replica count live: drain, re-tile, rebalance.
@@ -1077,15 +1011,14 @@ class ReplicaGroup:
             eng.apply(None, DesignPoint(cus=0, tp=tp))
         return eng
 
-    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
-                     slots: Optional[int] = None, tp: Optional[int] = None,
-                     buckets=None) -> int:
+    def warm_compile(self, sub,
+                     point: Optional[DesignPoint] = None) -> int:
         """Pre-compile a candidate design point's programs for every
         replica tile of a candidate grant (``point.dp``, defaulting to the
         live dp), through the shared executable cache — each tile has its
         own mesh fingerprint, so warming replica 0's programs alone would
         leave the sibling tiles cold.  Returns cold builds performed."""
-        point = DecodeEngine._warm_point(point, slots, tp, buckets)
+        point = point if point is not None else DesignPoint(cus=0)
         granted = _mesh_of(sub) if sub is not None else self._granted
         dp = point.dp if point.dp is not None else self._dp
         dp = max(int(dp), 1)

@@ -29,6 +29,10 @@ it — any object with these methods can be a tenant.
 from __future__ import annotations
 
 import collections
+import contextlib
+import functools
+import os
+import threading
 from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, \
     runtime_checkable
 
@@ -210,9 +214,7 @@ class Engine(Protocol):
     # -- real-time recomposition / design-point reconfiguration ---------
     # ``apply`` moves the engine onto a new composed sub-accelerator and/or
     # retunes its runtime knobs in one call; the knobs ride a
-    # :class:`~repro.core.dse.DesignPoint` (``None`` fields = keep).  The
-    # PR-5 ``reconfigure(sub, slots=, tp=, buckets=)`` keyword form remains
-    # one release behind a ``DeprecationWarning``.
+    # :class:`~repro.core.dse.DesignPoint` (``None`` fields = keep).
     def reshard_to(self, sub) -> None: ...
     def apply(self, sub=None,
               point: Optional[DesignPoint] = None) -> Dict[str, Any]: ...
@@ -238,6 +240,12 @@ class EngineTelemetry:
     finished-request retention.  Expects ``self._exec``, ``self._own_builds``,
     ``self._finished`` and ``self.finished_cap`` set by the constructor."""
 
+    # build counts bump from both the speculative-prewarm thread
+    # (warm_compile) and the serving loop (cold builds at dispatch); one
+    # class-level lock covers the counter — a bump is far too cheap to
+    # contend, and engines don't route their __init__ through this mixin
+    _builds_lock = threading.Lock()
+
     @property
     def compile_builds(self) -> int:
         """Cold executable compiles this engine performed (warm-path
@@ -258,7 +266,8 @@ class EngineTelemetry:
         obs = getattr(self, "_obs", None)
 
         def run():
-            self._own_builds += 1
+            with self._builds_lock:
+                self._own_builds += 1
             if obs is None or not obs.enabled:
                 return builder()
             with obs.timed("compile_build", "compile_build_s"):
@@ -330,3 +339,194 @@ def build_engine(wclass: str, model, params, serve_cfg, *, mesh=None,
                        f"known: {WORKLOAD_CLASSES}")
     return classes[wclass](model, params, serve_cfg, mesh=mesh, rules=rules,
                            exec_cache=exec_cache, obs=obs)
+
+
+# ----------------------------------------------------------------------
+# runtime sanitizer (REPRO_SANITIZE=1)
+#
+# The static side of fabriclint (tools/fabriclint) proves properties of the
+# *source*; these hooks check the same invariants on the *running* fabric.
+# They are the dynamic counterpart of two lint rules:
+#
+# * hot-sync   → sanitize_guard() arms jax's device→host transfer guard
+#   around an engine step, so any IMPLICIT read-back (``float(arr)``,
+#   ``np.asarray(arr)``, ``.item()``) raises at the offending line.
+#   Explicit ``jax.device_get`` / ``jax.block_until_ready`` — the baselined,
+#   deliberate sync points — stay allowed.
+# * single-release-point → sanitize_check() sweeps the engine's host
+#   bookkeeping after every step: slot/arena accounting must agree (every
+#   release went through ``_release_slot``), and a paged arena's internal
+#   page ledger must balance (``PagedArena.check``).
+#
+# Both are no-ops unless REPRO_SANITIZE is set, and both change zero
+# numerics: CI's slo-smoke runs sanitized and must stay digest-identical
+# to the unsanitized run (tests/test_fabriclint.py pins this).
+# ----------------------------------------------------------------------
+
+SANITIZE_ENV = "REPRO_SANITIZE"
+
+
+def sanitize_enabled() -> bool:
+    """True when the runtime sanitizer is armed (``REPRO_SANITIZE=1``).
+
+    Read per call, not cached at import — tests flip the env var around
+    individual engine runs."""
+    return os.environ.get(SANITIZE_ENV, "0").lower() not in ("0", "", "false")
+
+
+class ImplicitTransferError(RuntimeError):
+    """An implicit device→host transfer happened on a sanitized engine step."""
+
+
+_tl = threading.local()
+
+
+def _allow_depth() -> int:
+    return getattr(_tl, "explicit_depth", 0)
+
+
+@contextlib.contextmanager
+def _explicit_ok():
+    _tl.explicit_depth = _allow_depth() + 1
+    try:
+        yield
+    finally:
+        _tl.explicit_depth -= 1
+
+
+def _explicit_wrap(orig):
+    @functools.wraps(orig)
+    def run(*args, **kwargs):
+        with _explicit_ok():
+            return orig(*args, **kwargs)
+    return run
+
+
+# implicit-coercion surface of the jax array type: each of these silently
+# synchronizes device→host when called on a device array
+_COERCION_KINDS = ("__float__", "__int__", "__bool__", "__index__",
+                   "__array__", "item", "tolist")
+_patch_lock = threading.Lock()
+_patch_depth = 0
+_saved: Dict[str, Any] = {}
+_array_cls = None
+
+
+def _jax_array_cls():
+    global _array_cls
+    if _array_cls is None:
+        import jax.numpy as jnp
+        _array_cls = type(jnp.zeros(()))
+    return _array_cls
+
+
+def _blocked(kind, orig):
+    def run(self, *args, **kwargs):
+        if _allow_depth():
+            return orig(self, *args, **kwargs)
+        raise ImplicitTransferError(
+            f"implicit device→host transfer ({kind}) on a sanitized engine "
+            f"step — read back explicitly via jax.device_get, and baseline "
+            f"the fabriclint hot-sync finding with a reason if deliberate")
+    return run
+
+
+@contextlib.contextmanager
+def _python_transfer_guard():
+    """Backstop for backends where jax's transfer guard is inert (the CPU
+    backend's device_get is zero-copy, so no guarded transfer ever fires):
+    patch the implicit-coercion dunders on the jax array type to raise,
+    while ``jax.device_get`` / ``jax.block_until_ready`` mark their
+    read-backs explicit via a thread-local depth.  Re-entrant; the patch is
+    installed once at depth 1 and restored at depth 0."""
+    global _patch_depth
+    import jax
+    cls = _jax_array_cls()
+    with _patch_lock:
+        _patch_depth += 1
+        if _patch_depth == 1:
+            for kind in _COERCION_KINDS:
+                orig = getattr(cls, kind, None)
+                if orig is None:
+                    continue
+                _saved[kind] = orig
+                setattr(cls, kind, _blocked(kind, orig))
+            _saved["device_get"] = jax.device_get
+            _saved["block_until_ready"] = jax.block_until_ready
+            jax.device_get = _explicit_wrap(_saved["device_get"])
+            jax.block_until_ready = _explicit_wrap(_saved["block_until_ready"])
+    try:
+        yield
+    finally:
+        with _patch_lock:
+            _patch_depth -= 1
+            if _patch_depth == 0:
+                for kind in _COERCION_KINDS:
+                    if kind in _saved:
+                        setattr(cls, kind, _saved.pop(kind))
+                jax.device_get = _saved.pop("device_get")
+                jax.block_until_ready = _saved.pop("block_until_ready")
+
+
+@contextlib.contextmanager
+def sanitize_guard():
+    """Disallow implicit device→host transfers for the enclosed engine step.
+
+    Under the guard a stray ``float(device_array)`` on the hot path raises
+    :class:`ImplicitTransferError` at the offending line; the deliberate
+    syncs go through ``jax.device_get`` and are unaffected.  Arms both
+    jax's own transfer guard (real accelerator backends) and the Python
+    coercion backstop (CPU backends, where device_get is zero-copy and the
+    jax guard never fires).  No-op when the sanitizer is off."""
+    if not sanitize_enabled():
+        yield
+        return
+    import jax
+    with jax.transfer_guard_device_to_host("disallow"), \
+            _python_transfer_guard():
+        yield
+
+
+def sanitize_check(engine) -> None:
+    """Post-step invariant sweep (no-op when the sanitizer is off).
+
+    Duck-typed on the slot-engine attributes so it runs on any protocol
+    implementation: engines without an arena or slot pool (EncoderEngine,
+    ReplicaGroup members are checked individually) skip the absent parts.
+    """
+    if not sanitize_enabled():
+        return
+    arena = getattr(engine, "arena", None)
+    check = getattr(arena, "check", None)
+    if callable(check):
+        check()
+    active = getattr(engine, "_active", None)
+    free = getattr(engine, "_free_slots", None)
+    cfg = getattr(engine, "cfg", None)
+    if active is None or free is None or cfg is None:
+        return
+    name = type(engine).__name__
+    dup = set(active) & set(free)
+    if dup:
+        raise AssertionError(
+            f"fabric sanitizer: {name} slots both active and free: "
+            f"{sorted(dup)} — a release path bypassed _release_slot")
+    slots = getattr(cfg, "max_slots", None)
+    if slots is not None and len(active) + len(free) != slots:
+        raise AssertionError(
+            f"fabric sanitizer: {name} slot accounting diverged — "
+            f"{len(active)} active + {len(free)} free != {slots} slots; "
+            f"some release path bypassed _release_slot")
+    for slot, req in active.items():
+        if getattr(req, "slot", slot) != slot:
+            raise AssertionError(
+                f"fabric sanitizer: {name} active request in slot {slot} "
+                f"records slot {req.slot}")
+    for parked in getattr(engine, "_parked", ()) or ():
+        req = parked[0] if isinstance(parked, tuple) else parked
+        if getattr(req, "view", None) is not None or \
+                getattr(req, "slot", -1) != -1:
+            raise AssertionError(
+                f"fabric sanitizer: {name} parked request rid="
+                f"{getattr(req, 'rid', '?')} still holds a slot or arena "
+                f"view — preemption bypassed _release_slot")

@@ -40,8 +40,8 @@ import dataclasses
 import functools
 import itertools
 import os
+import threading
 import time
-import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -56,7 +56,8 @@ from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
 from repro.obs import Telemetry
-from repro.workloads.base import DecayedLengthEstimator, EngineTelemetry
+from repro.workloads.base import (DecayedLengthEstimator, EngineTelemetry,
+                                  sanitize_check, sanitize_guard)
 from repro.workloads.compile_cache import ExecutableCache
 
 PyTree = Any
@@ -258,6 +259,9 @@ class DecodeEngine(EngineTelemetry):
         # the serve dims that shape the compiled program.
         self._exec = exec_cache if exec_cache is not None else ExecutableCache()
         self._own_builds = 0
+        # the memo fills from both the serving loop and the prewarm
+        # thread (warm_compile pricing candidate slot counts)
+        self._plan_lock = threading.Lock()
         self._plan_memo: Dict[int, part.ShardingPlan] = {
             cfg.max_slots: self._cache_plan}
         self._cfg_key = self._config_key(cfg.max_slots)
@@ -370,10 +374,11 @@ class DecodeEngine(EngineTelemetry):
         """ShardingPlan of the pooled cache at ``slots`` — abstract-eval'd
         (no device allocation), memoized; lets warm_compile lower programs
         for a candidate slot count without building the pool."""
-        if slots not in self._plan_memo:
-            ann = jax.eval_shape(lambda: self._init_cache_ann(slots))
-            self._plan_memo[slots] = part.ShardingPlan.of(ann)
-        return self._plan_memo[slots]
+        with self._plan_lock:
+            if slots not in self._plan_memo:
+                ann = jax.eval_shape(lambda: self._init_cache_ann(slots))
+                self._plan_memo[slots] = part.ShardingPlan.of(ann)
+            return self._plan_memo[slots]
 
     # ------------------------------------------------------------------
     def reshard_to(self, sub) -> None:
@@ -466,17 +471,6 @@ class DecodeEngine(EngineTelemetry):
             applied["buckets"] = b
         return applied
 
-    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
-                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
-        """Deprecated keyword form of :meth:`apply` (kept one release)."""
-        warnings.warn(
-            "Engine.reconfigure(sub, slots=, tp=, buckets=) is deprecated; "
-            "use Engine.apply(sub, DesignPoint(...))",
-            DeprecationWarning, stacklevel=2)
-        return self.apply(sub, DesignPoint(
-            cus=0, tp=tp, slots=slots,
-            buckets=tuple(buckets) if buckets is not None else None))
-
     def _apply_buckets(self, buckets):
         """Bucket-ladder hook: plain decode has no encode phase."""
         del buckets
@@ -522,7 +516,8 @@ class DecodeEngine(EngineTelemetry):
         self._cache_plan = new_plan
         self._slot_axes = axes
         self.cfg = dataclasses.replace(self.cfg, max_slots=slots)
-        self._plan_memo[slots] = new_plan
+        with self._plan_lock:
+            self._plan_memo[slots] = new_plan
         self._cfg_key = self._config_key(slots)
         # host bookkeeping follows the migrated slots
         self._active = {mapping[s]: r for s, r in self._active.items()}
@@ -923,23 +918,8 @@ class DecodeEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_prefill(mesh, nb)))
 
-    @staticmethod
-    def _warm_point(point, slots, tp, buckets) -> DesignPoint:
-        """Normalize warm_compile's inputs to a DesignPoint; the PR-5
-        keyword form folds in behind a DeprecationWarning."""
-        if slots is not None or tp is not None or buckets is not None:
-            warnings.warn(
-                "warm_compile(sub, slots=, tp=, buckets=) is deprecated; "
-                "use warm_compile(sub, DesignPoint(...))",
-                DeprecationWarning, stacklevel=3)
-            return DesignPoint(
-                cus=0, tp=tp, slots=slots,
-                buckets=tuple(buckets) if buckets is not None else None)
-        return point if point is not None else DesignPoint(cus=0)
-
-    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
-                     slots: Optional[int] = None, tp: Optional[int] = None,
-                     buckets=None) -> int:
+    def warm_compile(self, sub,
+                     point: Optional[DesignPoint] = None) -> int:
         """Pre-compile this engine's decode + known prefill executables for
         a *candidate* sub-accelerator, without moving any state.  Called by
         the fabric before committing a recomposition (possibly from a
@@ -948,9 +928,8 @@ class DecodeEngine(EngineTelemetry):
         (prospective slot count / TP degree / bucket ladder — the serving
         DSE's Stage-1 knobs; ``dp`` is consumed by the ReplicaGroup, which
         warms every replica slice) rather than the engine's current
-        configuration.  Returns the number of cold builds performed.  The
-        PR-5 keyword form is deprecated (kept one release)."""
-        point = self._warm_point(point, slots, tp, buckets)
+        configuration.  Returns the number of cold builds performed."""
+        point = point if point is not None else DesignPoint(cus=0)
         with self._obs.timed("warm_compile", "warm_compile_s") as sp:
             mesh = part.tp_submesh(
                 _mesh_of(sub), point.tp if point.tp is not None else self._tp)
@@ -1148,16 +1127,20 @@ class DecodeEngine(EngineTelemetry):
         decode these are the *previous* dispatch's tokens (the current one
         is still on device); totals and per-request streams are identical.
         """
-        self._admit()
-        if not self._active:
-            self._harvest()
-            return self._drain_emitted()
-        # span + histogram around the dispatch/harvest pair: the harvest's
-        # device_get of the PREVIOUS dispatch is the existing sync point the
-        # host-side timing rides on — no extra syncs, pipelining preserved
-        with self._obs.timed("decode_step", "decode_step_s"):
-            self._step_dispatch()
-        out = self._drain_emitted()
+        with sanitize_guard():
+            self._admit()
+            if not self._active:
+                self._harvest()
+                sanitize_check(self)
+                return self._drain_emitted()
+            # span + histogram around the dispatch/harvest pair: the
+            # harvest's device_get of the PREVIOUS dispatch is the existing
+            # sync point the host-side timing rides on — no extra syncs,
+            # pipelining preserved
+            with self._obs.timed("decode_step", "decode_step_s"):
+                self._step_dispatch()
+            out = self._drain_emitted()
+        sanitize_check(self)
         obs = self._obs
         if obs.enabled:
             obs.set_gauge("slot_utilization",

@@ -13,12 +13,12 @@ opposite bound resources:
   sources skip the padded FLOPs of the full-capacity program.  Each row's
   key padding is masked (``Model.encode(lens=...)``), so a job's encode is
   bit-identical across buckets — the ladder is pure performance tuning, and
-  the serving DSE's Stage 1 can swap it live (``reconfigure(buckets=...)``)
-  without touching numerics;
+  the serving DSE's Stage 1 can swap it live
+  (``apply(point=DesignPoint(buckets=...))``) without touching numerics;
 * **decode** — pooled-slot autoregressive decode on the shared
   continuous-batching substrate of :class:`DecodeEngine` (slots, pipelined
   dispatch, AOT executables, ``ShardingPlan`` TP, live ``reshard_to`` /
-  ``reconfigure``), where each step additionally reads the slot's
+  ``apply``), where each step additionally reads the slot's
   **cross-attention source cache**: per-layer (max_slots, max_src_len,
   kv_heads, head_dim) K/V computed from the encoder output once at admission
   and masked per row by the slot's true source length (``cache["src_len"]``,
@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.composer import mesh_fingerprint
+from repro.core.dse import DesignPoint
 from repro.distribution import partitioning as part
 from repro.models.model import Model
 from repro.workloads.base import length_buckets, pick_bucket
@@ -287,17 +288,15 @@ class EncDecEngine(DecodeEngine):
             key, self._counted(
                 lambda: self._build_prefill_encdec(mesh, sb, nb)))
 
-    def warm_compile(self, sub, point=None, *, slots: Optional[int] = None,
-                     tp: Optional[int] = None, buckets=None) -> int:
+    def warm_compile(self, sub, point=None) -> int:
         """Pre-compile decode plus every (bucket, source kind, decoder
         prompt length) encode/prefill program for a candidate
         sub-accelerator — at a candidate *design point* when one is given
         (prospective slot count / TP degree / bucket ladder) — without
         moving any state.  The ladder and the observed decoder-prompt
         lengths are finite, so this fully covers the composition.  Returns
-        the number of cold builds performed.  The PR-5 keyword form is
-        deprecated (kept one release)."""
-        point = self._warm_point(point, slots, tp, buckets)
+        the number of cold builds performed."""
+        point = point if point is not None else DesignPoint(cus=0)
         with self._obs.timed("warm_compile", "warm_compile_s") as sp:
             mesh = part.tp_submesh(
                 _mesh_of(sub), point.tp if point.tp is not None else self._tp)

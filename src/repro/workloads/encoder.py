@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -50,10 +49,10 @@ from repro.distribution import partitioning as part
 from repro.models.model import Model
 from repro.obs import Telemetry
 from repro.workloads.base import (DecayedLengthEstimator, EngineTelemetry,
-                                  length_buckets, pick_bucket)
+                                  length_buckets, pick_bucket,
+                                  sanitize_check, sanitize_guard)
 from repro.workloads.compile_cache import ExecutableCache
-from repro.workloads.decode import (DecodeEngine, ServeConfig, _mesh_of,
-                                    _rules_fp)
+from repro.workloads.decode import ServeConfig, _mesh_of, _rules_fp
 
 
 @dataclasses.dataclass
@@ -184,17 +183,6 @@ class EncoderEngine(EngineTelemetry):
             self._cfg_key = self._config_key(self.cfg.max_slots)
         return applied
 
-    def reconfigure(self, sub=None, *, slots: Optional[int] = None,
-                    tp: Optional[int] = None, buckets=None) -> Dict[str, Any]:
-        """Deprecated keyword form of :meth:`apply` (kept one release)."""
-        warnings.warn(
-            "Engine.reconfigure(sub, slots=, tp=, buckets=) is deprecated; "
-            "use Engine.apply(sub, DesignPoint(...))",
-            DeprecationWarning, stacklevel=2)
-        return self.apply(sub, DesignPoint(
-            cus=0, tp=tp, slots=slots,
-            buckets=tuple(buckets) if buckets is not None else None))
-
     # ------------------------------------------------------------------
     # cross-replica migration (ReplicaGroup dp retune): encoder jobs hold
     # no cross-step device state, so only the host queue moves
@@ -266,15 +254,13 @@ class EncoderEngine(EngineTelemetry):
         return self._exec.get_or_build(
             key, self._counted(lambda: self._build_encode(mesh, sb)))
 
-    def warm_compile(self, sub, point: Optional[DesignPoint] = None, *,
-                     slots: Optional[int] = None, tp: Optional[int] = None,
-                     buckets=None) -> int:
+    def warm_compile(self, sub,
+                     point: Optional[DesignPoint] = None) -> int:
         """Pre-compile the batched encode program of every sequence-length
         bucket for a candidate sub-accelerator — at a candidate design
         point when one is given.  The ladder is finite, so this fully
-        covers the composition.  Returns cold builds performed.  The PR-5
-        keyword form is deprecated (kept one release)."""
-        point = DecodeEngine._warm_point(point, slots, tp, buckets)
+        covers the composition.  Returns cold builds performed."""
+        point = point if point is not None else DesignPoint(cus=0)
         with self._obs.timed("warm_compile", "warm_compile_s") as sp:
             mesh = part.tp_submesh(
                 _mesh_of(sub), point.tp if point.tp is not None else self._tp)
@@ -385,7 +371,8 @@ class EncoderEngine(EngineTelemetry):
         # uniform decode_step_s metric keeps per-class step latency
         # comparable across the fleet; each group's device_get is an
         # existing sync point, so the timings add no synchronization
-        with obs.timed("encode_step", "decode_step_s", jobs=len(batch)):
+        with obs.timed("encode_step", "decode_step_s", jobs=len(batch)), \
+                sanitize_guard():
             for sb in sorted(groups):
                 jobs = groups[sb]
                 self._bucket_hits[sb] += len(jobs)
@@ -403,6 +390,7 @@ class EncoderEngine(EngineTelemetry):
                     job.done = True
                     self._record_finished(job)
                     emitted.append((job.rid, job.embedding))
+        sanitize_check(self)
         if obs.enabled:
             done = time.perf_counter()
             for job in batch:

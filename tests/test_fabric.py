@@ -11,9 +11,8 @@ import pytest
 
 from repro.core.composer import (RecompositionDelta, plan_recomposition,
                                  recomposition_delta)
-from repro.serve.fabric import (AnalyticalPolicy, TenantLoad,
-                                TenantObservation, _candidate_splits,
-                                _compositions)
+from repro.serve.fabric import (AnalyticalPolicy, TenantObservation,
+                                _candidate_splits, _compositions)
 
 # ---------------------------------------------------------------------------
 # pure delta-planning tests (no devices)
@@ -120,23 +119,15 @@ def test_policy_admits_parked_tenant_with_new_work():
     assert reason == "admit" and _cus(points).get("b", 0) >= 1
 
 
-def test_decide_legacy_keyword_form_warns_and_matches():
+def test_decide_legacy_keyword_form_is_gone():
     """The PR-5 calling convention (TenantLoad values + classes=/lengths=
-    side channels) still works one release behind a DeprecationWarning,
-    and decides identically to the TenantObservation form."""
+    side channels) rode one release behind a DeprecationWarning and was
+    deleted when the grace window closed (the fabriclint deprecation rule
+    is the enforcement; see docs/static-analysis.md)."""
     from repro.configs import get_reduced
     cfgs = {"a": get_reduced("minitron-4b"), "b": get_reduced("minitron-4b")}
     obs = {"a": _load(100), "b": _load(0)}
-    new_pts, new_reason = AnalyticalPolicy().decide(
-        obs, cfgs, {"a": 4, "b": 4}, 8)
-    legacy = {t: TenantLoad(o.pending_tokens, o.queue_depth, o.active,
-                            o.arena_utilization) for t, o in obs.items()}
-    with pytest.warns(DeprecationWarning):
-        old_pts, old_reason = AnalyticalPolicy().decide(
-            legacy, cfgs, {"a": 4, "b": 4}, 8)
-    assert old_reason == new_reason and _cus(old_pts) == _cus(new_pts)
-    # the keyword side channels also trip the warning on their own
-    with pytest.warns(DeprecationWarning):
+    with pytest.raises(TypeError):
         AnalyticalPolicy().decide(obs, cfgs, {"a": 4, "b": 4}, 8,
                                   classes={"a": "decode"})
 

@@ -1,0 +1,488 @@
+"""fabriclint (tools/fabriclint) and the REPRO_SANITIZE runtime sanitizer.
+
+Static side: every rule fires on a seeded-violation fixture and stays quiet
+on the matching clean fixture; inline suppressions and the baseline absorb
+findings by line-number-free fingerprint; and the real tree lints green
+under the committed baseline (the CI gate, pinned here so a tier-1 run
+catches a red lint before the workflow does).
+
+Dynamic side: a sanitized engine run is bit-identical to the unsanitized
+run (the sanitizer changes zero numerics), an injected implicit
+device→host transfer on the hot path raises, and a release path bypassing
+``_release_slot`` trips the post-step slot-accounting sweep.
+"""
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:     # tools/ is a repo-root package
+    sys.path.insert(0, str(REPO))
+
+from tools.fabriclint import run_lint                     # noqa: E402
+from tools.fabriclint import baseline as baseline_mod     # noqa: E402
+from tools.fabriclint.rules import ALL_RULES              # noqa: E402
+from tools.fabriclint.walker import Index                 # noqa: E402
+
+
+def lint_source(src, rule, *, current_pr=9, path="fixture.py"):
+    """Run one rule over a fixture snippet; returns (index, findings) with
+    inline suppressions already applied (as run_lint does)."""
+    index = Index(repo_root=REPO)
+    index.add_source(path, textwrap.dedent(src))
+    found = ALL_RULES[rule](index, {"current_pr": current_pr,
+                                    "repo_root": REPO})
+    return index, [f for f in found if not index.suppressed(f)]
+
+
+# ---------------------------------------------------------------------------
+# hot-sync
+# ---------------------------------------------------------------------------
+
+HOT_SYNC_BAD = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    class Eng:
+        def step(self):
+            return self._advance()
+
+        def _advance(self):
+            x = jnp.ones((4,))
+            return float(jnp.sum(x)), np.asarray(x), x.item()
+"""
+
+HOT_SYNC_CLEAN = """
+    import jax
+    import jax.numpy as jnp
+
+    class Eng:
+        def step(self):
+            self._advance()
+            return list(self._emitted)
+
+        def _advance(self):
+            x = jnp.ones((4,))
+            self._buf = x          # stays on device: no sync
+
+        def warm_compile(self, sub):
+            # event-time boundary: syncs here are priced by the DSE
+            return float(jnp.zeros(()))
+"""
+
+
+def test_hot_sync_flags_implicit_coercions():
+    _, found = lint_source(HOT_SYNC_BAD, "hot-sync")
+    codes = {f.code for f in found}
+    assert any("float" in c for c in codes), codes
+    assert any("asarray" in c for c in codes), codes
+    assert any("item" in c for c in codes), codes
+    assert all(f.symbol == "Eng._advance" for f in found)
+
+
+def test_hot_sync_clean_and_boundary_quiet():
+    _, found = lint_source(HOT_SYNC_CLEAN, "hot-sync")
+    assert found == []
+
+
+def test_hot_sync_reports_explicit_syncs_for_baselining():
+    src = """
+        import jax
+
+        class Eng:
+            def step(self):
+                return jax.device_get(self._nxt)
+    """
+    _, found = lint_source(src, "hot-sync")
+    assert len(found) == 1
+    assert "explicit" in found[0].message
+    assert "device_get" in found[0].code
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+CACHE_KEY_BAD = """
+    class Eng:
+        def _config_key(self, slots):
+            return (self.cfg.max_len, slots)
+
+        def _build_decode(self, mesh):
+            return (self.cfg.max_len, self._shape())
+
+        def _shape(self):
+            return self.cfg.use_kernels   # read transitively, never keyed
+"""
+
+CACHE_KEY_CLEAN = """
+    class Eng:
+        def _config_key(self, slots):
+            return (self.cfg.max_len, self.cfg.use_kernels, slots)
+
+        def _exec_for(self, mesh):
+            return self._config_key(self.cfg.max_slots)
+
+        def _build_decode(self, mesh):
+            return (self.cfg.max_len, self.cfg.use_kernels,
+                    self.cfg.max_slots)
+"""
+
+
+def test_cache_key_flags_unkeyed_transitive_read():
+    _, found = lint_source(CACHE_KEY_BAD, "cache-key")
+    assert len(found) == 1
+    f = found[0]
+    assert f.code == "cfg.use_kernels"
+    assert f.symbol == "Eng._shape"
+    assert "_build_decode" in f.message
+
+
+def test_cache_key_call_site_args_count_as_keyed():
+    _, found = lint_source(CACHE_KEY_CLEAN, "cache-key")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# thread-safety
+# ---------------------------------------------------------------------------
+
+THREAD_SAFETY_BAD = """
+    class Eng:
+        def __init__(self, pool):
+            self._memo = {}
+            pool.submit(self.warm_compile)
+
+        def step(self):
+            self._fill(1)
+
+        def warm_compile(self):
+            self._fill(2)
+
+        def _fill(self, k):
+            self._memo[k] = k      # raced: prewarm thread + serving loop
+"""
+
+THREAD_SAFETY_CLEAN = """
+    class Eng:
+        def __init__(self, pool):
+            self._memo = {}
+            pool.submit(self.warm_compile)
+
+        def step(self):
+            self._fill(1)
+
+        def warm_compile(self):
+            self._fill(2)
+
+        def _fill(self, k):
+            with self._lock:
+                self._memo[k] = k
+"""
+
+
+def test_thread_safety_flags_unlocked_shared_mutation():
+    _, found = lint_source(THREAD_SAFETY_BAD, "thread-safety")
+    assert len(found) == 1
+    f = found[0]
+    assert f.symbol == "Eng._fill"
+    assert "_memo" in f.message and "lock" in f.message
+
+
+def test_thread_safety_lock_scope_clears_it():
+    _, found = lint_source(THREAD_SAFETY_CLEAN, "thread-safety")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# deprecation
+# ---------------------------------------------------------------------------
+
+DEPRECATION_SHIM = """
+    import warnings
+
+    # fabriclint: deprecated-since=PR6
+    def old_api(x):
+        warnings.warn("use new_api", DeprecationWarning, stacklevel=2)
+        return x
+"""
+
+DEPRECATION_UNANNOTATED = """
+    import warnings
+
+    def old_api(x):
+        warnings.warn("use new_api", DeprecationWarning, stacklevel=2)
+        return x
+"""
+
+
+def test_deprecation_in_grace_is_quiet():
+    _, found = lint_source(DEPRECATION_SHIM, "deprecation", current_pr=7)
+    assert found == []
+
+
+def test_deprecation_fails_past_grace_window():
+    # the red-before-removal state the PR-6 shims were deleted from
+    _, found = lint_source(DEPRECATION_SHIM, "deprecation", current_pr=9)
+    assert len(found) == 1
+    f = found[0]
+    assert f.code == "deprecated-since=PR6"
+    assert "delete this shim" in f.message
+
+
+def test_deprecation_unannotated_shim_flagged():
+    _, found = lint_source(DEPRECATION_UNANNOTATED, "deprecation",
+                           current_pr=7)
+    assert len(found) == 1
+    assert "deprecated-since" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+PROTOCOL_BAD = """
+    from typing import Protocol, runtime_checkable
+
+    @runtime_checkable
+    class Engine(Protocol):
+        def submit(self, tokens, max_new_tokens=16): ...
+
+        @property
+        def queue_depth(self): ...
+
+    class DecodeEngine:
+        def __init__(self):
+            self.queue_depth = 0
+
+        def submit(self, prompt, max_new_tokens=16):   # renamed param
+            return 0
+
+    class SSMEngine:
+        def submit(self, tokens, max_new_tokens=16):
+            return 0
+        # queue_depth missing entirely
+"""
+
+PROTOCOL_CLEAN = """
+    from typing import Protocol, runtime_checkable
+
+    @runtime_checkable
+    class Engine(Protocol):
+        def submit(self, tokens, max_new_tokens=16): ...
+
+        @property
+        def queue_depth(self): ...
+
+    class DecodeEngine:
+        def __init__(self):
+            self.queue_depth = 0
+
+        def submit(self, tokens, max_new_tokens=16, trace=None):
+            return 0
+
+    class SSMEngine(DecodeEngine):
+        pass
+"""
+
+
+def test_protocol_flags_drifted_signature_and_missing_property():
+    _, found = lint_source(PROTOCOL_BAD, "protocol")
+    codes = {f.code for f in found}
+    assert "signature:submit" in codes, codes
+    assert "property:queue_depth" in codes, codes
+
+
+def test_protocol_defaulted_extras_and_inherited_members_conform():
+    _, found = lint_source(PROTOCOL_CLEAN, "protocol")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_silences_one_rule():
+    src = """
+        import jax.numpy as jnp
+
+        class Eng:
+            def step(self):
+                x = jnp.ones(())
+                # fabriclint: disable=hot-sync -- fixture: deliberate sync
+                return float(x)
+    """
+    _, found = lint_source(src, "hot-sync")
+    assert found == []
+    # a different rule's suppression does NOT silence it
+    src_wrong = src.replace("disable=hot-sync", "disable=cache-key")
+    _, found = lint_source(src_wrong, "hot-sync")
+    assert len(found) == 1
+
+
+def test_baseline_round_trip(tmp_path):
+    src = """
+        import jax
+
+        class Eng:
+            def step(self):
+                return jax.device_get(self._nxt)
+    """
+    _, found = lint_source(src, "hot-sync")
+    assert len(found) == 1
+    entries = [baseline_mod.entry_for(found[0], "fixture: designed harvest")]
+    path = tmp_path / "baseline.json"
+    baseline_mod.save(path, entries)
+    loaded = baseline_mod.load(path)
+    assert loaded == sorted(entries, key=lambda e: tuple(
+        e[k] for k in baseline_mod.KEYS))
+
+    new, baselined, stale = baseline_mod.apply(found, loaded)
+    assert new == [] and stale == []
+    assert baselined[0][1] == "fixture: designed harvest"
+
+    # fingerprints are line-free: the same finding on a shifted line matches
+    shifted = "\n" + src
+    _, found2 = lint_source(shifted, "hot-sync")
+    new, baselined, _ = baseline_mod.apply(found2, loaded)
+    assert new == [] and len(baselined) == 1
+
+    # entries matching nothing surface as stale
+    _, _, stale = baseline_mod.apply([], loaded)
+    assert stale == loaded
+
+
+def test_real_tree_lints_green_under_committed_baseline():
+    findings, baselined, stale = run_lint(
+        [str(REPO / "src")], repo_root=REPO,
+        baseline_path=REPO / "tools" / "fabriclint" / "baseline.json")
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert stale == [], stale
+    # the four deliberate hot-path syncs stay baselined with reasons
+    assert len(baselined) == 4
+    assert all(reason and "TODO" not in reason for _, reason in baselined)
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer (REPRO_SANITIZE=1)
+# ---------------------------------------------------------------------------
+
+import jax                                         # noqa: E402
+import jax.numpy as jnp                            # noqa: E402
+
+from repro.configs import get_reduced              # noqa: E402
+from repro.models.model import Model               # noqa: E402
+from repro.workloads.base import (ImplicitTransferError,    # noqa: E402
+                                  build_engine, sanitize_enabled)
+from repro.workloads.decode import DecodeEngine, ServeConfig  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("minitron-4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _serve_cfg():
+    return ServeConfig(max_slots=2, max_len=64)
+
+
+def _run_fleet(model, params):
+    """A short mixed-fleet run: decode + encoder engines to completion."""
+    dec = build_engine("decode", model, params, _serve_cfg())
+    dec.submit([1, 2, 3], max_new_tokens=4)
+    dec.submit([4, 5], max_new_tokens=4)
+    streams = dec.run_to_completion()
+    enc = build_engine("encoder", model, params, _serve_cfg())
+    enc.submit([1, 2, 3, 4])
+    enc.step()
+    return streams, enc.results()
+
+
+def test_sanitize_env_gate(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+def test_sanitized_run_is_bit_identical(monkeypatch, small_model):
+    model, params = small_model
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    plain_streams, plain_emb = _run_fleet(model, params)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    san_streams, san_emb = _run_fleet(model, params)
+    assert san_streams == plain_streams
+    assert san_emb == plain_emb
+    assert any(len(v) for v in plain_streams.values())
+
+
+def test_sanitizer_catches_injected_implicit_sync(monkeypatch, small_model):
+    model, params = small_model
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+    class Bad(DecodeEngine):
+        def _step_dispatch(self):
+            super()._step_dispatch()
+            float(jnp.ones(()))   # implicit transfer on the hot path
+
+    bad = Bad(model, params, _serve_cfg())
+    bad.submit([1, 2, 3], max_new_tokens=2)
+    with pytest.raises(ImplicitTransferError, match="implicit"):
+        bad.step()
+
+
+def test_sanitizer_allows_explicit_device_get(monkeypatch, small_model):
+    model, params = small_model
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+    class Probe(DecodeEngine):
+        def _step_dispatch(self):
+            super()._step_dispatch()
+            # the sanctioned read-back: explicit, guard lets it through
+            self.probed = float(jax.device_get(jnp.ones(())))
+
+    eng = Probe(model, params, _serve_cfg())
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.step()
+    assert eng.probed == 1.0
+
+
+def test_sanitizer_catches_release_path_bypass(monkeypatch, small_model):
+    model, params = small_model
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+    class Leaky(DecodeEngine):
+        def _release_slot(self, slot, req):
+            # bypass the single release point: drop the slot, leak the
+            # arena view, never return the slot to the free list
+            if slot in self._active:
+                del self._active[slot]
+            req.slot = -1
+
+    leak = Leaky(model, params, _serve_cfg())
+    leak.submit([1, 2], max_new_tokens=1)
+    with pytest.raises(AssertionError, match="slot accounting"):
+        for _ in range(6):
+            leak.step()
+
+
+def test_sanitizer_off_is_a_no_op(monkeypatch, small_model):
+    model, params = small_model
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+
+    class Bad(DecodeEngine):
+        def _step_dispatch(self):
+            super()._step_dispatch()
+            float(jnp.ones(()))
+
+    bad = Bad(model, params, _serve_cfg())
+    bad.submit([1, 2, 3], max_new_tokens=2)
+    bad.step()   # no guard armed: nothing raises

@@ -1,0 +1,93 @@
+"""fabriclint: static analysis that pins the fabric's invariants.
+
+The fabric's hardest bugs were *invariant* bugs invisible to pytest until
+they bit: a value read inside a program builder but missing from the
+executable-cache key (PR-5 shape poisoning), state mutated from both the
+prewarm thread and the serving loop without a lock, a hot-path scalar
+coercion that silently syncs the pipelined dispatch.  fabriclint turns those
+postmortems into machine-checked rules over the AST (stdlib ``ast`` only —
+zero new dependencies):
+
+* ``hot-sync``      — device→host syncs reachable from ``step()``
+* ``cache-key``     — ServeConfig reads in program builders missing from
+                      ``_config_key``
+* ``thread-safety`` — attributes mutated from both the prewarm thread and
+                      the serving loop outside a lock
+* ``deprecation``   — ``DeprecationWarning`` shims past the one-release
+                      grace window (``# fabriclint: deprecated-since=PRn``)
+* ``protocol``      — the five engines match the ``Engine`` protocol
+                      signature-exactly
+
+Run as ``python -m tools.fabriclint src/``.  Deliberate violations live in
+``tools/fabriclint/baseline.json`` with a reason string, or inline as
+``# fabriclint: disable=<rule> -- <reason>`` on (or directly above) the
+flagged line.  See docs/static-analysis.md for the rule catalog.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation.  ``code`` is a short normalized snippet of the
+    flagged construct — (rule, path, symbol, code) is the line-number-free
+    fingerprint the baseline matches on, so findings survive unrelated
+    edits to the file."""
+
+    rule: str
+    path: str          # repo-relative
+    line: int
+    symbol: str        # enclosing Class.method / function
+    code: str
+    message: str
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.symbol, self.code)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"{self.symbol}: {self.message}")
+
+
+def run_lint(paths: Sequence[str], *, rules: Optional[Sequence[str]] = None,
+             current_pr: Optional[int] = None,
+             repo_root: Optional[Path] = None,
+             baseline_path: Optional[Path] = None):
+    """Lint ``paths`` (files or directories) and return
+    ``(findings, baselined, stale_baseline_entries)``.
+
+    ``findings`` are the violations left after inline suppressions and the
+    baseline; ``baselined`` the (finding, reason) pairs the baseline
+    absorbed; ``stale`` the baseline entries that matched nothing (candidates
+    for deletion).  ``current_pr`` defaults to the highest PR number in
+    CHANGES.md (the deprecation rule's clock).
+    """
+    from tools.fabriclint import baseline as baseline_mod
+    from tools.fabriclint.rules import ALL_RULES
+    from tools.fabriclint.walker import Index, current_pr_from_changes
+
+    root = Path(repo_root) if repo_root is not None else Path.cwd()
+    index = Index(repo_root=root)
+    for p in paths:
+        index.add_path(Path(p))
+    if current_pr is None:
+        current_pr = current_pr_from_changes(root / "CHANGES.md")
+    config = {"current_pr": current_pr, "repo_root": root}
+
+    selected = list(rules) if rules else list(ALL_RULES)
+    unknown = [r for r in selected if r not in ALL_RULES]
+    if unknown:
+        raise KeyError(f"unknown rule(s) {unknown}; known: {list(ALL_RULES)}")
+
+    raw: List[Finding] = []
+    for name in selected:
+        raw.extend(ALL_RULES[name](index, config))
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    kept = [f for f in raw if not index.suppressed(f)]
+    entries = (baseline_mod.load(baseline_path)
+               if baseline_path is not None else [])
+    return baseline_mod.apply(kept, entries)

@@ -1,0 +1,74 @@
+"""CLI: ``python -m tools.fabriclint src/`` — exit 0 when every finding is
+baselined (with a reason) or inline-suppressed, 1 otherwise.
+
+The CI gate runs exactly that invocation; ``--write-baseline`` seeds the
+ledger from current findings (reasons default to TODO — fill them in, the
+reason string is the point), ``--current-pr`` pins the deprecation clock
+for red-before-removal checks, ``--rules`` narrows a run to one family.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.fabriclint import run_lint
+from tools.fabriclint import baseline as baseline_mod
+from tools.fabriclint.rules import ALL_RULES
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.fabriclint",
+        description="static analysis pinning the fabric's invariants "
+                    "(see docs/static-analysis.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="accepted-findings ledger (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit")
+    ap.add_argument("--current-pr", type=int, default=None,
+                    help="deprecation clock override (default: highest PR "
+                         "number in CHANGES.md)")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma-separated subset of {','.join(ALL_RULES)}")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also list baselined findings with their reasons")
+    args = ap.parse_args(argv)
+
+    rules = args.rules.split(",") if args.rules else None
+    baseline_path = None if args.no_baseline or args.write_baseline \
+        else args.baseline
+    findings, baselined, stale = run_lint(
+        args.paths, rules=rules, current_pr=args.current_pr,
+        baseline_path=baseline_path)
+
+    if args.write_baseline:
+        entries = [baseline_mod.entry_for(f, "TODO: justify this entry")
+                   for f in findings]
+        baseline_mod.save(args.baseline, entries)
+        print(f"wrote {len(entries)} entries to {args.baseline}")
+        return 0
+
+    for f in findings:
+        print(f.render())
+    if args.verbose:
+        for f, reason in baselined:
+            print(f"baselined: {f.render()}  [{reason}]")
+    for entry in stale:
+        print(f"stale baseline entry (fixed? delete it): "
+              f"{entry['path']} {entry['symbol']} {entry['code']}")
+
+    active = ",".join(rules) if rules else "all " + str(len(ALL_RULES))
+    print(f"fabriclint: {len(findings)} finding(s), "
+          f"{len(baselined)} baselined, {len(stale)} stale baseline "
+          f"entr{'y' if len(stale) == 1 else 'ies'} ({active} rules)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Baseline: the accepted-findings ledger.
+
+Each entry records one deliberate violation with a *reason string* — e.g.
+the TTFT read-back in ``_prefill_into_slot`` is a sync the hot-sync rule
+sees, and the baseline is where that judgment call lives, reviewable in the
+diff like code.  Entries match findings on the line-number-free fingerprint
+(rule, path, symbol, code), so unrelated edits to a file never invalidate
+them; entries that stop matching anything are reported stale so the ledger
+shrinks as violations are actually fixed.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+KEYS = ("rule", "path", "symbol", "code")
+
+
+def load(path: Optional[Path]) -> List[Dict[str, str]]:
+    if path is None or not Path(path).exists():
+        return []
+    data = json.loads(Path(path).read_text())
+    entries = data.get("entries", data) if isinstance(data, dict) else data
+    for e in entries:
+        missing = [k for k in KEYS if k not in e]
+        if missing:
+            raise ValueError(f"baseline entry {e!r} missing {missing}")
+    return entries
+
+
+def save(path: Path, entries: Sequence[Dict[str, str]]) -> None:
+    ordered = sorted(entries, key=lambda e: tuple(e[k] for k in KEYS))
+    Path(path).write_text(json.dumps(
+        {"entries": ordered}, indent=2, sort_keys=True) + "\n")
+
+
+def entry_for(finding, reason: str) -> Dict[str, str]:
+    return {"rule": finding.rule, "path": finding.path,
+            "symbol": finding.symbol, "code": finding.code,
+            "reason": reason}
+
+
+def apply(findings, entries):
+    """Split ``findings`` against the baseline.
+
+    Returns ``(new, baselined, stale)``: findings with no entry, (finding,
+    reason) pairs an entry absorbed, and entries that matched nothing.
+    """
+    table: Dict[Tuple[str, str, str, str], Dict[str, str]] = {
+        tuple(e[k] for k in KEYS): e for e in entries}
+    used = set()
+    new, baselined = [], []
+    for f in findings:
+        entry = table.get(f.fingerprint())
+        if entry is None:
+            new.append(f)
+        else:
+            used.add(f.fingerprint())
+            baselined.append((f, entry.get("reason", "")))
+    stale = [e for key, e in table.items() if key not in used]
+    return new, baselined, stale

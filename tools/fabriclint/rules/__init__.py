@@ -1,0 +1,17 @@
+"""Rule registry: rule id -> ``check(index, config) -> List[Finding]``.
+
+Adding a rule is one module exposing ``RULE`` (its id) and ``check``; list
+it here and document it in docs/static-analysis.md.
+"""
+from __future__ import annotations
+
+from tools.fabriclint.rules import (cache_key, deprecation, hot_sync,
+                                    protocol, thread_safety)
+
+ALL_RULES = {
+    hot_sync.RULE: hot_sync.check,
+    cache_key.RULE: cache_key.check,
+    thread_safety.RULE: thread_safety.check,
+    deprecation.RULE: deprecation.check,
+    protocol.RULE: protocol.check,
+}

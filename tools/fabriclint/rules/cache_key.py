@@ -1,0 +1,139 @@
+"""cache-key: ServeConfig reads in program builders must be keyed.
+
+The PR-5 shape-poisoning bug class: a program builder (``_build_*``) reads
+a ``ServeConfig`` field that shapes the compiled program, but the field is
+missing from ``_config_key`` — so two design points share one executable
+and the second one runs the first one's shapes.  This rule collects, per
+engine class, the set of ``cfg.*`` attributes that reach the cache key
+(reads inside any ``_config_key`` in the MRO, plus ``cfg.*`` arguments at
+``_config_key(...)`` call sites — ``max_slots`` enters the decode key that
+way) and flags any ``self.cfg.X`` read inside a builder — transitively
+through self-calls *including jit-traced fns*, whose reads are literally
+baked into the program — that never reaches the key.
+
+``self.model.cfg`` appearing in a key covers all model-config reads.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from tools.fabriclint import Finding
+from tools.fabriclint.walker import ClassInfo, FuncInfo, Index, snippet
+
+RULE = "cache-key"
+
+KEY_FN = "_config_key"
+BUILDER_PREFIX = "_build"
+MAX_DEPTH = 6
+
+
+def _cfg_reads(fn: ast.AST) -> List[Tuple[str, int, ast.AST]]:
+    """(attr, line, node) for every ``self.cfg.X`` / bare ``cfg.X`` read."""
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Attribute):
+            continue
+        base = node.value
+        if isinstance(base, ast.Attribute) and base.attr == "cfg" \
+                and isinstance(base.value, ast.Name) \
+                and base.value.id == "self":
+            out.append((node.attr, node.lineno, node))
+        elif isinstance(base, ast.Name) and base.id == "cfg":
+            out.append((node.attr, node.lineno, node))
+    return out
+
+
+def _keyed_attrs(index: Index, chain: List[ClassInfo]) -> Set[str]:
+    keyed: Set[str] = set()
+    for cls in chain:
+        key_fn = cls.methods.get(KEY_FN)
+        if key_fn is not None:
+            for attr, _, _ in _cfg_reads(key_fn.node):
+                keyed.add(attr)
+    # call sites: self._config_key(cfg.max_slots, ...) keys the argument
+    for cls in chain:
+        for fn in cls.methods.values():
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == KEY_FN:
+                    for arg in node.args:
+                        for attr, _, _ in _cfg_reads(ast.Expression(body=arg)):
+                            keyed.add(attr)
+    return keyed
+
+
+def _model_cfg_keyed(chain: List[ClassInfo]) -> bool:
+    for cls in chain:
+        key_fn = cls.methods.get(KEY_FN)
+        if key_fn is None:
+            continue
+        for node in ast.walk(key_fn.node):
+            if isinstance(node, ast.Attribute) and node.attr == "cfg" \
+                    and isinstance(node.value, ast.Attribute) \
+                    and node.value.attr == "model":
+                return True
+    return False
+
+
+def _builder_closure(index: Index, cls: ClassInfo,
+                     builder: FuncInfo) -> List[FuncInfo]:
+    """The builder plus self-methods it transitively calls within the
+    class's MRO — jit-traced fns included (their cfg reads are baked into
+    the compiled program, the exact thing the key must cover)."""
+    chain = index.mro_chain(cls)
+    seen: Dict[str, FuncInfo] = {}
+    frontier = [builder]
+    depth = 0
+    while frontier and depth < MAX_DEPTH:
+        nxt: List[FuncInfo] = []
+        for fn in frontier:
+            if fn.name in seen:
+                continue
+            seen[fn.name] = fn
+            for callee in sorted(fn.calls | fn.lambda_calls):
+                if callee in seen:
+                    continue
+                for c in chain:
+                    if callee in c.methods:
+                        nxt.append(c.methods[callee])
+                        break
+        frontier = nxt
+        depth += 1
+    return list(seen.values())
+
+
+def check(index: Index, config: Dict) -> List[Finding]:
+    findings: List[Finding] = []
+    for classes in index.classes.values():
+        for cls in classes:
+            chain = index.mro_chain(cls)
+            if not any(KEY_FN in c.methods for c in chain):
+                continue
+            builders = [fn for name, fn in cls.methods.items()
+                        if name.startswith(BUILDER_PREFIX)]
+            if not builders:
+                continue
+            keyed = _keyed_attrs(index, chain)
+            model_keyed = _model_cfg_keyed(chain)
+            seen_sites = set()
+            for builder in builders:
+                for fn in _builder_closure(index, cls, builder):
+                    for attr, line, node in _cfg_reads(fn.node):
+                        if attr in keyed:
+                            continue
+                        site = (fn.path, line, attr)
+                        if site in seen_sites:
+                            continue
+                        seen_sites.add(site)
+                        findings.append(Finding(
+                            rule=RULE, path=fn.path, line=line,
+                            symbol=f"{cls.name}.{fn.name}",
+                            code=f"cfg.{attr}",
+                            message=(f"builder `{builder.name}` reads "
+                                     f"`self.cfg.{attr}` (via `{fn.name}`) "
+                                     f"but `{KEY_FN}` never keys it — "
+                                     "two design points could share one "
+                                     "executable (PR-5 shape poisoning)")))
+    return findings

@@ -1,0 +1,64 @@
+"""deprecation: the "one release behind a DeprecationWarning" policy,
+machine-checked.
+
+Every ``warnings.warn(..., DeprecationWarning)`` shim must carry a
+``# fabriclint: deprecated-since=PRn`` annotation between its ``def`` line
+and the ``warn`` call (or on the line above the ``def``).  The shim is in
+grace for exactly one release: it fails the lint once
+``current_pr > n + 1``, at which point the fix is deletion, not a baseline
+entry.  ``current_pr`` defaults to the highest PR number in CHANGES.md —
+the repo's own changelog is the release clock — and is overridable with
+``--current-pr`` (how tests and the red-before-removal workflow pin it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from tools.fabriclint import Finding
+from tools.fabriclint.walker import Index, snippet
+
+RULE = "deprecation"
+GRACE_RELEASES = 1
+
+
+def _is_deprecation_warn(node: ast.Call) -> bool:
+    fn = node.func
+    named_warn = (isinstance(fn, ast.Name) and fn.id == "warn") or \
+        (isinstance(fn, ast.Attribute) and fn.attr == "warn")
+    if not named_warn:
+        return False
+    for arg in list(node.args) + [kw.value for kw in node.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Name) and sub.id == "DeprecationWarning":
+                return True
+    return False
+
+
+def check(index: Index, config: Dict) -> List[Finding]:
+    current_pr = int(config.get("current_pr") or 0)
+    findings: List[Finding] = []
+    for name in sorted(index.functions):
+        for info in index.functions[name]:
+            for node in ast.walk(info.node):
+                if not (isinstance(node, ast.Call)
+                        and _is_deprecation_warn(node)):
+                    continue
+                since = index.deprecated_since_for(
+                    info.path, info.node.lineno - 1, node.lineno)
+                if since is None:
+                    findings.append(Finding(
+                        rule=RULE, path=info.path, line=node.lineno,
+                        symbol=info.qualname, code=snippet(node, 60),
+                        message=("DeprecationWarning shim without a "
+                                 "`# fabriclint: deprecated-since=PRn` "
+                                 "annotation — the grace window can't be "
+                                 "enforced")))
+                elif current_pr > since + GRACE_RELEASES:
+                    findings.append(Finding(
+                        rule=RULE, path=info.path, line=node.lineno,
+                        symbol=info.qualname, code=f"deprecated-since=PR{since}",
+                        message=(f"deprecated since PR{since}; the one-release "
+                                 f"grace window closed at PR{since + GRACE_RELEASES} "
+                                 f"(current: PR{current_pr}) — delete this shim")))
+    return findings

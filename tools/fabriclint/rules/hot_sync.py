@@ -1,0 +1,153 @@
+"""hot-sync: device→host syncs reachable from the serving step.
+
+The fabric's throughput story rests on pipelined dispatch: ``step()``
+enqueues device work and returns; the sync happens one step later at the
+harvest point.  Any *implicit* device→host transfer on that path —
+``float()`` / ``int()`` / ``bool()`` / ``.item()`` / ``np.asarray`` on a
+jax value — stalls the pipeline silently (and under
+``REPRO_SANITIZE=1``'s transfer guard, crashes).  This rule walks the
+name-based call graph from every ``step`` method, skipping jit-traced
+bodies (they run staged), compile-time ``_build_*`` builders, and the
+recompose boundary (``autoscale``/``apply``/``reshard_to``/
+``warm_compile``/``sync`` are event-time, not step-time).
+
+*Explicit* syncs (``jax.device_get`` / ``jax.block_until_ready``) on the
+hot path are also reported: they are sometimes the design (the TTFT
+read-back, the pipelined harvest) — those carry a reason string in the
+baseline, which is exactly where such judgment calls belong.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.fabriclint import Finding
+from tools.fabriclint.walker import Index, attr_chain, snippet
+
+RULE = "hot-sync"
+
+ROOTS = frozenset({"step"})
+# recompose / lifecycle entry points: reachable from step() but event-time,
+# not per-step — their syncs are priced by the DSE, not the hot path
+BOUNDARY = frozenset({
+    "autoscale", "apply", "reshard_to", "warm_compile", "sync",
+    "evacuate", "adopt_queued", "adopt_active", "export_queued",
+    "run_to_completion", "drain",
+})
+
+COERCIONS = frozenset({"float", "int", "bool"})
+NP_ROOTS = frozenset({"np", "numpy"})
+JAX_ROOTS = frozenset({"jnp", "jax", "lax"})
+# jax.* calls that RESOLVE a transfer rather than produce a device value
+EXPLICIT_SYNCS = frozenset({
+    ("jax", "device_get"), ("jax", "block_until_ready"),
+})
+
+
+def _is_jax_producer(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    if chain is None or chain[0] not in JAX_ROOTS:
+        return False
+    return tuple(chain[:2]) not in EXPLICIT_SYNCS and chain[-1] != "jit"
+
+
+class _Taint:
+    """Per-function forward pass: local names assigned from jnp/jax calls
+    (or aliases of them) hold device values."""
+
+    def __init__(self, fn: ast.AST):
+        self.names: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if self._tainted_expr(node.value):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            self.names.add(tgt.id)
+
+    def _tainted_expr(self, expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Call):
+            return _is_jax_producer(expr)
+        if isinstance(expr, ast.Name):
+            return expr.id in self.names
+        if isinstance(expr, ast.Subscript):
+            return self._tainted_expr(expr.value)
+        if isinstance(expr, ast.BinOp):
+            return (self._tainted_expr(expr.left)
+                    or self._tainted_expr(expr.right))
+        return False
+
+    def is_device_value(self, expr: ast.AST) -> bool:
+        return self._tainted_expr(expr)
+
+
+def check(index: Index, config: Dict) -> List[Finding]:
+    hot = index.reachable(ROOTS, boundary=BOUNDARY, skip_builders=True)
+    findings: List[Finding] = []
+    for name in sorted(hot):
+        for info in index.functions.get(name, []):
+            if info.name in index.jitted:
+                continue
+            taint = _Taint(info.node)
+            for node in _host_calls(info.node):
+                f = _classify(node, taint, info)
+                if f is not None:
+                    findings.append(f)
+    return findings
+
+
+def _host_calls(fn: ast.AST) -> List[ast.Call]:
+    """Call nodes outside nested lambdas (compile-builder thunks like
+    ``_counted(lambda: self._build_decode(...))`` run at compile time)."""
+    out: List[ast.Call] = []
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, ast.Call):
+            out.append(node)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+    walk(fn)
+    return out
+
+
+def _classify(node: ast.Call, taint: _Taint,
+              info) -> Optional[Finding]:
+    chain = attr_chain(node.func)
+
+    if chain is not None and tuple(chain[:2]) in EXPLICIT_SYNCS:
+        return Finding(
+            rule=RULE, path=info.path, line=node.lineno,
+            symbol=info.qualname, code=snippet(node),
+            message=(f"explicit device→host sync `{chain[-1]}` on the step "
+                     "hot path — baseline with a reason if deliberate"))
+
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+            and not node.args and not node.keywords:
+        return Finding(
+            rule=RULE, path=info.path, line=node.lineno,
+            symbol=info.qualname, code=snippet(node),
+            message="implicit device→host sync: `.item()` on the step "
+                    "hot path (use jax.device_get at a harvest point)")
+
+    arg = node.args[0] if node.args else None
+    if arg is None:
+        return None
+
+    if isinstance(node.func, ast.Name) and node.func.id in COERCIONS \
+            and taint.is_device_value(arg):
+        return Finding(
+            rule=RULE, path=info.path, line=node.lineno,
+            symbol=info.qualname, code=snippet(node),
+            message=(f"implicit device→host sync: `{node.func.id}()` of a "
+                     "jax value on the step hot path"))
+
+    if chain is not None and chain[0] in NP_ROOTS \
+            and chain[-1] in ("asarray", "array") \
+            and taint.is_device_value(arg):
+        return Finding(
+            rule=RULE, path=info.path, line=node.lineno,
+            symbol=info.qualname, code=snippet(node),
+            message=(f"implicit device→host sync: `{'.'.join(chain)}` of a "
+                     "jax value on the step hot path"))
+    return None

@@ -1,0 +1,136 @@
+"""protocol: the five engines implement ``Engine`` signature-exactly.
+
+``Engine`` is a ``runtime_checkable`` Protocol, but ``isinstance`` only
+checks member *presence* — a drifted signature (renamed parameter, a
+positional param grown where callers pass keywords, a dropped kw-only
+marker) passes the runtime check and breaks at the one call site that
+exercises it.  This rule compares every protocol member against each
+implementation through the in-file-set MRO:
+
+* positional parameter names must match the protocol's, in order;
+* extra positionals must carry defaults (callers using the protocol
+  signature still work); protocol defaults must remain defaults;
+* protocol kw-only names must be accepted kw-only (or via ``**kwargs``);
+  extra kw-onlys must carry defaults;
+* ``@property`` members must be properties (or satisfied by a class/
+  ``__init__`` attribute); plain data members by an attribute anywhere in
+  the chain.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from tools.fabriclint import Finding
+from tools.fabriclint.walker import ClassInfo, Index
+
+RULE = "protocol"
+
+PROTOCOL_NAME = "Engine"
+IMPLEMENTATIONS = ("DecodeEngine", "SSMEngine", "EncoderEngine",
+                   "EncDecEngine", "ReplicaGroup")
+
+
+class _Sig:
+    def __init__(self, node: ast.FunctionDef):
+        a = node.args
+        self.pos = [p.arg for p in list(a.posonlyargs) + list(a.args)]
+        if self.pos and self.pos[0] in ("self", "cls"):
+            self.pos = self.pos[1:]
+        self.n_pos_defaults = len(a.defaults)
+        self.kwonly = [p.arg for p in a.kwonlyargs]
+        self.kwonly_defaults = {p.arg: d is not None
+                                for p, d in zip(a.kwonlyargs, a.kw_defaults)}
+        self.vararg = a.vararg is not None
+        self.kwarg = a.kwarg is not None
+
+    def pos_has_default(self, i: int) -> bool:
+        return i >= len(self.pos) - self.n_pos_defaults
+
+
+def _mismatch(proto: _Sig, impl: _Sig) -> Optional[str]:
+    n = len(proto.pos)
+    if impl.pos[:n] != proto.pos:
+        if impl.vararg and not impl.pos:
+            pass               # *args absorbs the positional surface
+        else:
+            return (f"positional params {impl.pos[:n] or '()'} != protocol's "
+                    f"{proto.pos}")
+    for i, name in enumerate(proto.pos):
+        if proto.pos_has_default(i) and i < len(impl.pos) \
+                and not impl.pos_has_default(i):
+            return f"protocol default param `{name}` lost its default"
+    for i in range(n, len(impl.pos)):
+        if not impl.pos_has_default(i):
+            return (f"extra positional param `{impl.pos[i]}` has no default "
+                    "— protocol-shaped calls break")
+    for name in proto.kwonly:
+        if name not in impl.kwonly and not impl.kwarg:
+            return f"protocol kw-only param `{name}` not accepted kw-only"
+    for name in impl.kwonly:
+        if name not in proto.kwonly \
+                and not impl.kwonly_defaults.get(name, False):
+            return f"extra kw-only param `{name}` has no default"
+    return None
+
+
+def _has_attr(index: Index, chain: List[ClassInfo], name: str) -> bool:
+    for c in chain:
+        if name in c.class_attrs or name in c.init_attrs \
+                or name in c.properties:
+            return True
+    return False
+
+
+def check(index: Index, config: Dict) -> List[Finding]:
+    protos = [c for c in index.classes.get(PROTOCOL_NAME, [])
+              if c.is_protocol]
+    if not protos:
+        return []
+    proto = protos[0]
+    findings: List[Finding] = []
+    for impl_name in IMPLEMENTATIONS:
+        for impl in index.classes.get(impl_name, []):
+            chain = index.mro_chain(impl)
+            findings.extend(_check_impl(index, proto, impl, chain))
+    return findings
+
+
+def _check_impl(index: Index, proto: ClassInfo, impl: ClassInfo,
+                chain: List[ClassInfo]) -> List[Finding]:
+    out: List[Finding] = []
+
+    def finding(msg: str, code: str) -> Finding:
+        return Finding(rule=RULE, path=impl.path, line=impl.node.lineno,
+                       symbol=impl.name, code=code, message=msg)
+
+    for name, member in proto.methods.items():
+        impl_fn = index.resolve_method(impl, name)
+        if member.is_property:
+            if impl_fn is not None and impl_fn.is_property:
+                continue
+            if _has_attr(index, chain, name):
+                continue
+            out.append(finding(
+                f"protocol property `{name}` is neither a @property nor an "
+                "attribute on the class", f"property:{name}"))
+            continue
+        if impl_fn is None or impl_fn.is_property:
+            out.append(finding(
+                f"protocol method `{name}` is "
+                + ("a property here" if impl_fn else "missing"),
+                f"method:{name}"))
+            continue
+        msg = _mismatch(_Sig(member.node), _Sig(impl_fn.node))
+        if msg is not None:
+            out.append(Finding(
+                rule=RULE, path=impl_fn.path, line=impl_fn.node.lineno,
+                symbol=f"{impl.name}.{name}", code=f"signature:{name}",
+                message=f"`{name}` drifts from the Engine protocol: {msg}"))
+
+    for attr in sorted(proto.class_attrs):
+        if not _has_attr(index, chain, attr):
+            out.append(finding(
+                f"protocol attribute `{attr}` not set anywhere in the class "
+                "chain", f"attr:{attr}"))
+    return out

@@ -1,0 +1,72 @@
+"""thread-safety: shared state touched by both the prewarm thread and the
+serving loop must be mutated under a lock.
+
+The fabric runs exactly one background context: the speculative-prewarm /
+design-warm single-worker pool (``ComposedServer._pool()``), whose thunks
+call ``warm_compile`` on live engines while the serving loop keeps
+stepping them.  Any attribute *mutated* from both contexts outside a
+``with <lock>:`` scope is a data race (the PR-6 era had exactly one:
+``EngineTelemetry._counted``'s build counter).
+
+Roots are discovered, not configured: every ``pool.submit(fn)`` /
+``Thread(target=fn)`` call seeds the background set with the call names in
+``fn`` (lambda bodies mined); the main set walks from every ``step``
+method.  Mutations are ``self.X = / += ...``, ``self.X[...] = ...`` and
+mutating method calls (``self.X.append(...)`` etc.); a nested closure's
+mutations belong to its enclosing method.  Reads are not flagged —
+engines that *snapshot* main-thread sets before iterating on the prewarm
+thread (``sorted(tuple(self._prefill_lens))``) are the sanctioned pattern.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set
+
+from tools.fabriclint import Finding
+from tools.fabriclint.walker import Index
+
+RULE = "thread-safety"
+
+MAIN_ROOTS = frozenset({"step"})
+
+
+def check(index: Index, config: Dict) -> List[Finding]:
+    bg = index.reachable(index.submit_seeds, include_lambda=True)
+    main = index.reachable(MAIN_ROOTS, include_lambda=True)
+
+    # attr -> context -> list of (FuncInfo, Mutation), unlocked only
+    unlocked: Dict[str, Dict[str, List]] = {}
+    locked_attrs: Set[str] = set()
+    for name, infos in index.functions.items():
+        in_bg, in_main = name in bg, name in main
+        if not (in_bg or in_main) or name == "__init__":
+            continue
+        for info in infos:
+            for mut in info.mutations:
+                if mut.locked:
+                    locked_attrs.add(mut.attr)
+                    continue
+                slot = unlocked.setdefault(mut.attr, {"bg": [], "main": []})
+                if in_bg:
+                    slot["bg"].append((info, mut))
+                if in_main:
+                    slot["main"].append((info, mut))
+
+    findings: List[Finding] = []
+    for attr in sorted(unlocked):
+        slot = unlocked[attr]
+        if not (slot["bg"] and slot["main"]):
+            continue
+        seen = set()
+        for ctx in ("bg", "main"):
+            for info, mut in slot[ctx]:
+                site = (info.path, mut.line)
+                if site in seen:
+                    continue
+                seen.add(site)
+                findings.append(Finding(
+                    rule=RULE, path=info.path, line=mut.line,
+                    symbol=info.qualname, code=mut.code,
+                    message=(f"`self.{attr}` is mutated from both the "
+                             "prewarm thread and the serving loop; this "
+                             "site holds no lock (wrap in `with <lock>:`)")))
+    return findings

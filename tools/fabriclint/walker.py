@@ -1,0 +1,418 @@
+"""Shared AST index for fabriclint: parse every file once, build the
+function/class tables, the name-based call graph, the jit-traced set, and
+the suppression-comment maps that all rules consume.
+
+Resolution is *name-based* on purpose: the fabric's call sites are
+``self.method(...)``, bare module functions, and ``ClassName.method(...)``
+— a simple-name graph over those covers the hot path without needing a type
+checker.  Calls through arbitrary receivers (``self._exec.get_or_build``,
+``eng.step()``) are NOT edges: objects like :class:`ExecutableCache` and
+:class:`Telemetry` own their internal discipline and are linted on their
+own roots, not dragged into every caller's reachable set.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*fabriclint:\s*disable=([\w,\-]+|all)(?:\s*--\s*(?P<reason>.+))?")
+DEPRECATED_SINCE_RE = re.compile(
+    r"#\s*fabriclint:\s*deprecated-since=PR(\d+)", re.IGNORECASE)
+PR_RE = re.compile(r"\bPR\s*(\d+)\b")
+
+# method names whose call mutates the receiver (``self.X.append(...)`` is a
+# mutation of attribute X for the thread-safety rule)
+MUTATOR_METHODS = frozenset({
+    "append", "add", "pop", "popleft", "remove", "discard", "clear",
+    "update", "extend", "insert", "setdefault", "appendleft",
+})
+
+
+def current_pr_from_changes(changes_path: Path) -> int:
+    """The deprecation rule's clock: highest PR number in CHANGES.md."""
+    try:
+        text = changes_path.read_text()
+    except OSError:
+        return 0
+    nums = [int(m) for m in PR_RE.findall(text)]
+    return max(nums) if nums else 0
+
+
+def attr_root(node: ast.AST) -> Optional[str]:
+    """Leftmost name of an attribute chain (``jax.experimental.x`` -> 'jax')."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """('jax', 'device_get') for ``jax.device_get``; None if not a pure
+    Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def snippet(node: ast.AST, limit: int = 80) -> str:
+    try:
+        text = ast.unparse(node)
+    except Exception:           # pragma: no cover - unparse is total on 3.9+
+        text = ast.dump(node)[:limit]
+    text = " ".join(text.split())
+    return text if len(text) <= limit else text[:limit - 1] + "…"
+
+
+@dataclasses.dataclass
+class Mutation:
+    attr: str
+    line: int
+    locked: bool
+    code: str
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    name: str
+    qualname: str              # "Class.method" or bare function name
+    cls: Optional[str]
+    path: str                  # repo-relative
+    node: ast.AST              # FunctionDef / AsyncFunctionDef
+    calls: Set[str] = dataclasses.field(default_factory=set)
+    lambda_calls: Set[str] = dataclasses.field(default_factory=set)
+    mutations: List[Mutation] = dataclasses.field(default_factory=list)
+    decorators: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def is_property(self) -> bool:
+        return "property" in self.decorators
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    path: str
+    node: ast.ClassDef
+    bases: List[str]
+    methods: Dict[str, FuncInfo]
+    class_attrs: Set[str]          # Assign/AnnAssign at class level
+    init_attrs: Set[str]           # ``self.X = ...`` in __init__
+    properties: Set[str]
+
+    @property
+    def is_protocol(self) -> bool:
+        return "Protocol" in self.bases
+
+
+class _FuncScanner:
+    """One pass over a function body: call edges (self.X / bare / Class.X),
+    lambda-scoped call names, ``self.X`` mutations with lock-scope tracking,
+    and ``jax.jit`` references (jit-traced function names)."""
+
+    def __init__(self, info: FuncInfo, jitted: Set[str],
+                 submit_seeds: Set[str]):
+        self.info = info
+        self.jitted = jitted
+        self.submit_seeds = submit_seeds
+
+    def scan(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt, lock_depth=0, lambda_depth=0)
+
+    # -- statements ----------------------------------------------------
+    def _stmt(self, node: ast.AST, lock_depth: int, lambda_depth: int) -> None:
+        if isinstance(node, ast.With):
+            held = any(self._is_lock(item.context_expr)
+                       for item in node.items)
+            for item in node.items:
+                self._expr(item.context_expr, lock_depth, lambda_depth)
+            depth = lock_depth + (1 if held else 0)
+            for child in node.body:
+                self._stmt(child, depth, lambda_depth)
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            self._assignment(node, lock_depth, lambda_depth)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs (closures like _counted's run) belong to the
+            # enclosing method: same self, same lock discipline
+            for child in node.body:
+                self._stmt(child, lock_depth, lambda_depth)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                self._stmt(child, lock_depth, lambda_depth)
+            elif isinstance(child, ast.expr):
+                self._expr(child, lock_depth, lambda_depth)
+
+    def _assignment(self, node: ast.AST, lock_depth: int,
+                    lambda_depth: int) -> None:
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for tgt in targets:
+            leaves = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                else [tgt]
+            for leaf in leaves:
+                attr = self._self_attr(leaf)
+                if attr is not None:
+                    self.info.mutations.append(Mutation(
+                        attr=attr, line=leaf.lineno,
+                        locked=lock_depth > 0, code=snippet(node)))
+
+    @staticmethod
+    def _self_attr(node: ast.AST) -> Optional[str]:
+        """'X' for ``self.X`` / ``self.X[...]`` assignment targets."""
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return node.attr
+        return None
+
+    @staticmethod
+    def _is_lock(ctx: ast.AST) -> bool:
+        """``with self._lock:`` / ``with self._builds_lock:`` — any context
+        manager whose source mentions a lock."""
+        return "lock" in snippet(ctx).lower()
+
+    # -- expressions ---------------------------------------------------
+    def _expr(self, node: ast.AST, lock_depth: int, lambda_depth: int) -> None:
+        if isinstance(node, ast.Lambda):
+            self._expr(node.body, lock_depth, lambda_depth + 1)
+            return
+        if isinstance(node, ast.Call):
+            self._call(node, lock_depth, lambda_depth)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._expr(child, lock_depth, lambda_depth)
+
+    def _call(self, node: ast.Call, lock_depth: int,
+              lambda_depth: int) -> None:
+        chain = attr_chain(node.func)
+        name: Optional[str] = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif chain is not None and len(chain) == 2 \
+                and chain[0] in ("self", "cls"):
+            name = chain[1]
+        elif chain is not None and len(chain) == 2 and chain[0][:1].isupper():
+            name = chain[1]                    # ClassName.method(...)
+        if name is not None:
+            bucket = (self.info.lambda_calls if lambda_depth > 0
+                      else self.info.calls)
+            bucket.add(name)
+
+        # jax.jit(self._fn): _fn runs traced, not host-side.  Only
+        # attribute refs are recorded — a bare local name (the ``step``
+        # closure inside ``_build_decode``) would shadow same-named methods
+        # (every engine's ``step``!), and builder-local closures are already
+        # excluded with their enclosing builder.
+        if chain is not None and chain[-1] == "jit" and chain[0] == "jax":
+            for arg in node.args[:1]:
+                ref = attr_chain(arg)
+                if ref is not None and isinstance(arg, ast.Attribute):
+                    self.jitted.add(ref[-1])
+
+        # pool.submit(fn, ...) / Thread(target=fn): fn runs on a background
+        # thread — its call names seed the thread-safety rule's BG roots
+        is_submit = (isinstance(node.func, ast.Attribute)
+                     and node.func.attr == "submit")
+        is_thread = chain is not None and chain[-1] == "Thread"
+        if is_submit:
+            for arg in node.args[:1]:
+                self._seed_background(arg)
+        if is_thread:
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    self._seed_background(kw.value)
+
+        # mutating method call on a self attribute: self.X.append(...)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in MUTATOR_METHODS:
+            attr = self._self_attr(node.func.value)
+            if attr is not None:
+                self.info.mutations.append(Mutation(
+                    attr=attr, line=node.lineno,
+                    locked=lock_depth > 0, code=snippet(node)))
+
+    def _seed_background(self, arg: ast.AST) -> None:
+        if isinstance(arg, ast.Lambda):
+            for sub in ast.walk(arg.body):
+                if isinstance(sub, ast.Call):
+                    if isinstance(sub.func, ast.Name):
+                        self.submit_seeds.add(sub.func.id)
+                    elif isinstance(sub.func, ast.Attribute):
+                        self.submit_seeds.add(sub.func.attr)
+            return
+        ref = attr_chain(arg)
+        if ref is not None:
+            self.submit_seeds.add(ref[-1])
+
+
+class Index:
+    """The parsed repo: files, functions by simple name, classes by simple
+    name, the jit-traced name set, background-thread seeds, and suppression
+    comments."""
+
+    def __init__(self, repo_root: Optional[Path] = None):
+        self.repo_root = repo_root or Path.cwd()
+        self.files: Dict[str, str] = {}
+        self.functions: Dict[str, List[FuncInfo]] = {}
+        self.classes: Dict[str, List[ClassInfo]] = {}
+        self.jitted: Set[str] = set()
+        self.submit_seeds: Set[str] = set()
+        # path -> line -> (rules or {'all'}, reason)
+        self.suppressions: Dict[str, Dict[int, Tuple[Set[str], str]]] = {}
+        # path -> line -> PR number of a deprecated-since annotation
+        self.deprecated_since: Dict[str, Dict[int, int]] = {}
+
+    # -- construction --------------------------------------------------
+    def add_path(self, path: Path) -> None:
+        if path.is_dir():
+            for py in sorted(path.rglob("*.py")):
+                if "__pycache__" not in py.parts:
+                    self.add_file(py)
+        else:
+            self.add_file(path)
+
+    def add_file(self, path: Path) -> None:
+        source = path.read_text()
+        try:
+            rel = str(path.resolve().relative_to(self.repo_root.resolve()))
+        except ValueError:
+            rel = str(path)
+        self.add_source(rel, source)
+
+    def add_source(self, rel: str, source: str) -> None:
+        """Index one file from source text (tests feed fixture snippets
+        through here without touching disk)."""
+        tree = ast.parse(source)
+        self.files[rel] = source
+        self._scan_comments(rel, source)
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(node, rel, cls=None)
+            elif isinstance(node, ast.ClassDef):
+                self._add_class(node, rel)
+
+    def _scan_comments(self, rel: str, source: str) -> None:
+        for lineno, line in enumerate(source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                reason = (m.group("reason") or "").strip()
+                self.suppressions.setdefault(rel, {})[lineno] = (rules, reason)
+            d = DEPRECATED_SINCE_RE.search(line)
+            if d:
+                self.deprecated_since.setdefault(rel, {})[lineno] = \
+                    int(d.group(1))
+
+    def _add_function(self, node, rel: str, cls: Optional[str]) -> FuncInfo:
+        qual = f"{cls}.{node.name}" if cls else node.name
+        info = FuncInfo(name=node.name, qualname=qual, cls=cls, path=rel,
+                        node=node)
+        for dec in node.decorator_list:
+            ref = attr_chain(dec.func if isinstance(dec, ast.Call) else dec)
+            if ref is not None:
+                info.decorators.add(ref[-1])
+        _FuncScanner(info, self.jitted, self.submit_seeds).scan(node.body)
+        self.functions.setdefault(node.name, []).append(info)
+        return info
+
+    def _add_class(self, node: ast.ClassDef, rel: str) -> None:
+        bases = [b for b in (attr_chain(base) for base in node.bases)
+                 if b is not None]
+        info = ClassInfo(
+            name=node.name, path=rel, node=node,
+            bases=[b[-1] for b in bases],
+            methods={}, class_attrs=set(), init_attrs=set(),
+            properties=set())
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = self._add_function(item, rel, cls=node.name)
+                info.methods[item.name] = fn
+                if fn.is_property:
+                    info.properties.add(item.name)
+            elif isinstance(item, ast.AnnAssign) \
+                    and isinstance(item.target, ast.Name):
+                info.class_attrs.add(item.target.id)
+            elif isinstance(item, ast.Assign):
+                for tgt in item.targets:
+                    if isinstance(tgt, ast.Name):
+                        info.class_attrs.add(tgt.id)
+        init = info.methods.get("__init__")
+        if init is not None:
+            info.init_attrs = {m.attr for m in init.mutations}
+        self.classes.setdefault(node.name, []).append(info)
+
+    # -- queries --------------------------------------------------------
+    def mro_chain(self, cls: ClassInfo) -> List[ClassInfo]:
+        """``cls`` plus transitive bases resolvable within the scanned file
+        set, in method-resolution order (first match wins)."""
+        chain: List[ClassInfo] = []
+        seen: Set[str] = set()
+
+        def visit(c: ClassInfo) -> None:
+            if c.name in seen:
+                return
+            seen.add(c.name)
+            chain.append(c)
+            for base in c.bases:
+                for candidate in self.classes.get(base, []):
+                    visit(candidate)
+        visit(cls)
+        return chain
+
+    def resolve_method(self, cls: ClassInfo, name: str) -> Optional[FuncInfo]:
+        for c in self.mro_chain(cls):
+            if name in c.methods:
+                return c.methods[name]
+        return None
+
+    def reachable(self, roots: Iterable[str], *, include_lambda: bool = False,
+                  boundary: frozenset = frozenset(),
+                  skip_builders: bool = False) -> Set[str]:
+        """Simple names reachable from ``roots`` over the call graph.
+        jit-traced functions never traverse (their bodies run staged, not
+        host-side); ``boundary`` names and (optionally) ``_build_*``
+        compile-time builders stop traversal."""
+        seen: Set[str] = set()
+        frontier = [r for r in roots]
+        while frontier:
+            name = frontier.pop()
+            if name in seen or name in boundary or name in self.jitted:
+                continue
+            if skip_builders and name.startswith("_build"):
+                continue
+            seen.add(name)
+            for info in self.functions.get(name, []):
+                nxt = set(info.calls)
+                if include_lambda:
+                    nxt |= info.lambda_calls
+                frontier.extend(n for n in nxt if n not in seen)
+        return seen
+
+    def suppressed(self, finding) -> bool:
+        """Inline ``# fabriclint: disable=<rule>`` on the finding's line or
+        the line directly above."""
+        per_file = self.suppressions.get(finding.path, {})
+        for line in (finding.line, finding.line - 1):
+            entry = per_file.get(line)
+            if entry and (finding.rule in entry[0] or "all" in entry[0]):
+                return True
+        return False
+
+    def deprecated_since_for(self, path: str, start: int,
+                             end: int) -> Optional[int]:
+        """PR number of a ``deprecated-since`` annotation in [start, end]."""
+        per_file = self.deprecated_since.get(path, {})
+        hits = [pr for ln, pr in per_file.items() if start <= ln <= end]
+        return max(hits) if hits else None
